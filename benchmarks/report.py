@@ -1,0 +1,72 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+recorded JSON sweeps.
+
+    PYTHONPATH=src python -m benchmarks.report > experiments_tables.md
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_dryrun(path="dryrun_records.json"):
+    recs = json.load(open(path))
+    out = []
+    out.append("### Dry-run table (per-device; lower+compile green unless noted)\n")
+    out.append("| arch | shape | mesh | status | compile s | args GiB | temp GiB "
+               "| fits 16 GiB | coll GiB/step |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP "
+                       f"({r['reason'].split('—')[0].strip()}) | | | | | |")
+            continue
+        if r["status"] == "error":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"ERROR {r['error'][:60]} | | | | | |")
+            continue
+        m = r["mem"]
+        tot = m["argument_gib"] + m["temp_gib"]
+        fits = "yes" if tot <= 16.0 else f"no ({tot:.1f})"
+        coll = sum(r["collectives"].values()) / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['t_compile_s']:.1f} | {m['argument_gib']:.2f} | "
+            f"{m['temp_gib']:.2f} | {fits} | {coll:.2f} |")
+    return "\n".join(out)
+
+
+def fmt_roofline(path="roofline_records.json"):
+    recs = json.load(open(path))
+    out = []
+    out.append("### Roofline table (single-pod 16×16; scan-corrected per-device terms)\n")
+    out.append("| arch | shape | compute s | memory s | collective s | dominant "
+               "| MODEL_FLOPS | useful ratio | MFU bound |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] != "ok":
+            tag = "SKIP" if r["status"] == "skipped" else f"ERR {r.get('error','')[:40]}"
+            out.append(f"| {r['arch']} | {r['shape']} | {tag} | | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3f} | "
+            f"{r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} | "
+            f"{r['dominant']} | {r['model_flops_global']:.2e} | "
+            f"{r['useful_ratio']:.2f} | {r['mfu_upper_bound']:.2f} |")
+    return "\n".join(out)
+
+
+def main():
+    try:
+        print(fmt_dryrun())
+    except FileNotFoundError:
+        print("(dryrun_records.json missing — run repro.launch.dryrun)")
+    print()
+    try:
+        print(fmt_roofline())
+    except FileNotFoundError:
+        print("(roofline_records.json missing — run benchmarks.roofline)")
+
+
+if __name__ == "__main__":
+    main()

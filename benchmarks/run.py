@@ -1,0 +1,147 @@
+"""Benchmark harness: one section per paper table/figure + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV (harness contract).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Sections:
+  fig6/*      — paper Fig 6: melt-matrix row-partition scaling
+  fig7/*      — paper Fig 7: ElementWise / VectorWise / MatBroadcast
+  stencil/*   — engine path comparison (materialize / lax / pallas-interp)
+  filters/*   — bilateral (Eq.3) and curvature (Eq.6-7) end-to-end
+  model/*     — smoke-config step latencies per architecture family
+  serve/*     — prefill + decode latency (smoke config)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(f, *args, reps=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(f(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
+
+
+def bench_filters(quick=False):
+    from repro.core.filters import bilateral_filter, gaussian_curvature
+
+    rng = np.random.RandomState(0)
+    shape = (24, 48, 48) if quick else (32, 64, 64)
+    x = jnp.asarray(rng.randn(*shape), jnp.float32)
+    rows = []
+    f = jax.jit(lambda t: bilateral_filter(t, 5, 1.5, 0.5))
+    rows.append(("filters/bilateral_const", _time(f, x), f"3-D {shape}"))
+    f = jax.jit(lambda t: bilateral_filter(t, 5, 1.5, "adaptive"))
+    rows.append(("filters/bilateral_adaptive", _time(f, x), "paper Eq.3 σr(x)"))
+    f = jax.jit(gaussian_curvature)
+    rows.append(("filters/curvature3d", _time(f, x), "paper Eq.6-7"))
+    img = jnp.asarray(rng.randn(256, 256), jnp.float32)
+    f = jax.jit(gaussian_curvature)
+    rows.append(("filters/curvature2d", _time(f, img), "256x256"))
+    return rows
+
+
+def bench_models(quick=False):
+    from repro.configs import get_smoke_config, list_archs
+    from repro.models import build_model
+    from repro.optim import adamw
+
+    rows = []
+    archs = ["minitron_4b", "mamba2_370m", "hymba_1p5b"] if quick else list_archs()
+    for arch in archs:
+        cfg = get_smoke_config(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        B, S = 2, 64
+        batch = {
+            "tokens": jnp.zeros((B, S), jnp.int32),
+            "targets": jnp.zeros((B, S), jnp.int32),
+        }
+        if cfg.n_vis_tokens:
+            batch["vis_embed"] = jnp.zeros((B, cfg.n_vis_tokens, cfg.d_model),
+                                           jnp.bfloat16)
+        if cfg.n_enc_layers:
+            batch["enc_embed"] = jnp.zeros((B, 32, cfg.d_model), jnp.bfloat16)
+        opt = adamw.init(params)
+
+        @jax.jit
+        def step(p, o, b):
+            (l, m), g = jax.value_and_grad(
+                lambda q: model.loss_fn(q, b), has_aux=True)(p)
+            return adamw.update(g, o, p, lr=1e-3)
+
+        rows.append((f"model/{arch}/train_step",
+                     _time(step, params, opt, batch, reps=3),
+                     f"smoke cfg B{B} S{S}"))
+    return rows
+
+
+def bench_serving(quick=False):
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+
+    cfg = get_smoke_config("minitron_4b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 4, 64
+    toks = jnp.zeros((B, S), jnp.int32)
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len=S + 32))
+    rows = [("serve/prefill", _time(prefill, params, {"tokens": toks}, reps=3),
+             f"B{B} S{S}")]
+    _, caches = prefill(params, {"tokens": toks})
+    dec = jax.jit(model.decode_step)
+    tok = jnp.zeros((B,), jnp.int32)
+    pos = jnp.full((B,), S, jnp.int32)
+    rows.append(("serve/decode_step",
+                 _time(lambda: dec(params, tok, pos, caches), reps=5),
+                 "one token, cached"))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+
+    from benchmarks import paper_figs
+
+    all_rows = []
+    sections = [
+        lambda: paper_figs.fig6_parallel_scaling(
+            shape=(16, 48, 48) if args.quick else (32, 64, 64)),
+        lambda: paper_figs.fig7_abstraction_levels(),
+        lambda: paper_figs.stencil_paths(
+            shape=(16, 48, 48) if args.quick else (32, 64, 64)),
+        lambda: bench_filters(args.quick),
+        lambda: bench_models(args.quick),
+        lambda: bench_serving(args.quick),
+    ]
+    print("name,us_per_call,derived")
+    for sec in sections:
+        try:
+            rows = sec()
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            rows = [("ERROR", 0.0, str(e))]
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+            sys.stdout.flush()
+        all_rows += rows
+    return all_rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Fig. 3 reproduction: bilateral filtering with adaptive vs constant σr.
+
+Builds a synthetic edge+texture image, applies the generic (rank-agnostic)
+bilateral filter with (b) adaptive σr, (c) appropriate constant σr,
+(d) excessive constant σr (→ gaussian-like), and reports edge retention +
+noise suppression for each — the qualitative pattern of the paper's figure.
+
+    PYTHONPATH=src python examples/bilateral_filter.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.filters import bilateral_filter, gaussian_filter
+
+
+def edge_sharpness(img, col=32):
+    return float(jnp.abs(img[:, col] - img[:, col - 1]).mean())
+
+
+def noise_level(img):
+    # variance in the flat left region
+    return float(img[4:28, 4:28].var())
+
+
+def main():
+    rng = np.random.RandomState(0)
+    img = np.zeros((64, 64), np.float32)
+    img[:, 32:] = 1.0                       # a step edge
+    img += rng.randn(64, 64).astype(np.float32) * 0.08  # noise
+    x = jnp.asarray(img)
+
+    variants = {
+        "(a) input": x,
+        "(b) adaptive sigma_r": bilateral_filter(x, 7, sigma_d=2.0,
+                                                 sigma_r="adaptive"),
+        "(c) sigma_r=0.15 (appropriate)": bilateral_filter(
+            x, 7, sigma_d=2.0, sigma_r=0.15),
+        "(d) sigma_r=100 (excessive)": bilateral_filter(
+            x, 7, sigma_d=2.0, sigma_r=100.0),
+        "(ref) gaussian": gaussian_filter(x, 7, 2.0, method="materialize"),
+    }
+    print(f"{'variant':36s} {'edge':>8s} {'noise-var':>10s}")
+    for name, im in variants.items():
+        print(f"{name:36s} {edge_sharpness(im):8.3f} {noise_level(im):10.4f}")
+
+    d = variants["(d) sigma_r=100 (excessive)"]
+    g = variants["(ref) gaussian"]
+    print("\nFig.3(d) check: excessive sigma_r ≈ gaussian:",
+          float(jnp.abs(d[8:-8, 8:-8] - g[8:-8, 8:-8]).max()))
+
+
+if __name__ == "__main__":
+    main()

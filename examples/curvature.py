@@ -1,0 +1,50 @@
+"""Paper Fig. 4/5 reproduction: Gaussian curvature at rank 2 and rank 3.
+
+Fig 4: a 2-D geometric segmentation → curvature highlights corners.
+Fig 5: a 3-D cube → the native 3-D operator highlights vertices, while
+forcing the 2-D operator slice-by-slice highlights z-edges instead (the
+dimension-induced error the melt engine avoids).
+
+    PYTHONPATH=src python examples/curvature.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.filters import gaussian_curvature, gaussian_filter
+
+
+def main():
+    # ---- Fig 4: 2-D segmentation ------------------------------------------
+    seg = np.zeros((48, 48), np.float32)
+    seg[8:40, 8:40] = 1.0
+    seg[20:28, 0:48] = 1.0  # a bar crossing the square
+    x = gaussian_filter(jnp.asarray(seg), 5, 1.0, method="materialize")
+    K2 = gaussian_curvature(x)
+    corners = [(8, 8), (8, 39), (39, 8), (39, 39)]
+    edge_mid = (8, 24)
+    c_resp = np.mean([abs(float(K2[c])) for c in corners])
+    e_resp = abs(float(K2[edge_mid]))
+    print(f"2-D: corner response {c_resp:.5f} vs edge response {e_resp:.5f} "
+          f"(ratio {c_resp / max(e_resp, 1e-12):.1f}x) — corners win")
+
+    # ---- Fig 5: 3-D cube — native 3-D vs forced 2-D ------------------------
+    vol = np.zeros((24, 24, 24), np.float32)
+    vol[6:18, 6:18, 6:18] = 1.0
+    v = gaussian_filter(jnp.asarray(vol), 3, 0.8, method="materialize")
+    K3 = gaussian_curvature(v)                      # native 3-D (Fig 5b)
+    K2s = jnp.stack([gaussian_curvature(v[:, :, z])  # forced 2-D (Fig 5c)
+                     for z in range(24)], axis=2)
+
+    vertex = (6, 6, 6)
+    z_edge = (6, 6, 12)   # midpoint of a z-aligned edge
+    for name, K in (("native 3-D", K3), ("2-D stacked", K2s)):
+        vr = abs(float(K[vertex]))
+        er = abs(float(K[z_edge]))
+        print(f"{name:12s}: vertex {vr:.5f}  z-edge {er:.5f}  "
+              f"vertex/edge {vr / max(er, 1e-12):6.1f}x")
+    print("→ the 2-D operator mistakes z-edges for corners; the rank-true "
+          "3-D melt operator does not (paper §3.2).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Batched serving example: prefill + decode with KV caches.
+
+Wraps the production launcher (repro.launch.serve) with a hybrid
+(attention+SSM) smoke model, exercising full-attn caches, SWA ring
+caches and SSM state simultaneously.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+from repro.launch.serve import main as serve_main
+
+
+if __name__ == "__main__":
+    sys.exit(serve_main([
+        "--arch", "hymba_1p5b", "--smoke",
+        "--batch", "4", "--prompt-len", "48", "--gen", "24",
+    ]))

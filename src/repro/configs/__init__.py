@@ -1,0 +1,55 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``list_archs()``.
+
+Each module defines ``CONFIG`` (the exact assigned configuration) and
+``smoke_config()`` (a reduced same-family config for CPU tests).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig, LayerKind, SHAPES, ShapeSpec
+
+ARCH_IDS = [
+    "mamba2_370m",
+    "grok1_314b",
+    "deepseek_v2_236b",
+    "internvl2_2b",
+    "minitron_4b",
+    "minicpm3_4b",
+    "deepseek_coder_33b",
+    "phi4_mini_3p8b",
+    "whisper_small",
+    "hymba_1p5b",
+    "paper_stencil",
+]
+
+_ALIASES = {
+    "mamba2-370m": "mamba2_370m",
+    "grok-1-314b": "grok1_314b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "internvl2-2b": "internvl2_2b",
+    "minitron-4b": "minitron_4b",
+    "minicpm3-4b": "minicpm3_4b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "phi4-mini-3.8b": "phi4_mini_3p8b",
+    "whisper-small": "whisper_small",
+    "hymba-1.5b": "hymba_1p5b",
+}
+
+
+def canonical(arch: str) -> str:
+    return _ALIASES.get(arch, arch.replace("-", "_").replace(".", "p"))
+
+
+def get_config(arch: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
+    return mod.smoke_config()
+
+
+def list_archs():
+    return [a for a in ARCH_IDS if a != "paper_stencil"]

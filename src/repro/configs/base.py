@@ -1,0 +1,186 @@
+"""Architecture config system.
+
+One :class:`ArchConfig` describes everything the model builder, sharding
+planner and launcher need.  Layer heterogeneity (hymba's full/SWA mix,
+deepseek-v2's dense-first-layer) is expressed with ``layer_groups`` — a list
+of (count, LayerKind) — each group is one scanned stack.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+__all__ = ["LayerKind", "ArchConfig", "SHAPES", "ShapeSpec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerKind:
+    """Static description of one decoder/encoder layer variant."""
+
+    mixer: str = "attn"          # 'attn' | 'ssm' | 'hybrid' (parallel attn+ssm)
+    mlp: str = "swiglu"          # 'swiglu' | 'gelu' | 'moe' | 'none'
+    window: Optional[int] = None  # None = full attention; int = SWA window
+    cross_attn: bool = False      # decoder layers of enc-dec models
+    causal: bool = True           # False for encoder stacks
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    # -- identity ---------------------------------------------------------
+    arch_id: str
+    family: str                   # dense | moe | ssm | hybrid | vlm | audio
+    # -- trunk ------------------------------------------------------------
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    layer_groups: Tuple[Tuple[int, LayerKind], ...] = ()
+    # -- positional / norm --------------------------------------------------
+    pos: str = "rope"             # rope | learned | sinusoidal | none
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    max_seq_len: int = 524_288    # rope table upper bound
+    max_learned_pos: int = 33_000  # learned-pos table size (whisper decode_32k)
+    # -- MoE ----------------------------------------------------------------
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    expert_ff: int = 0            # routed expert hidden dim (d_ff of experts)
+    shared_ff: int = 0            # shared expert hidden dim
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # -- MLA (multi-head latent attention) -----------------------------------
+    use_mla: bool = False
+    q_lora: int = 0
+    kv_lora: int = 0
+    nope_dim: int = 0
+    rope_dim: int = 0
+    v_head_dim: int = 0
+    # -- SSM (mamba2 SSD) -----------------------------------------------------
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_chunk: int = 256
+    # -- enc-dec (whisper) ----------------------------------------------------
+    n_enc_layers: int = 0
+    enc_len: int = 1500           # fixed encoder context for decode shapes
+    # -- vlm ------------------------------------------------------------------
+    n_vis_tokens: int = 0         # visual tokens prepended (frontend stub)
+    # -- dtypes / training ------------------------------------------------------
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    opt_dtype: str = "float32"     # AdamW moment dtype (bf16 at 100B+ scale)
+    grad_dtype: str = "float32"    # microbatch grad-accumulator dtype
+    remat_policy: str = "full"  # 'full' | 'minimal' | 'none'
+    scan_layers: bool = True
+    use_pallas: bool = False       # route hot ops through Pallas kernels
+    kv_chunk: int = 1024           # flash-attention KV chunk (perf knob)
+    moe_group: int = 512           # MoE dispatch group size (perf knob)
+    microbatches: int = 1          # grad-accumulation steps per train step
+    fsdp_pods: bool = False        # extend FSDP over the 'pod' axis (100B+)
+    # -- serving ----------------------------------------------------------------
+    subquadratic: bool = False     # eligible for long_500k
+
+    def __post_init__(self):
+        if not self.layer_groups:
+            object.__setattr__(
+                self, "layer_groups",
+                ((self.n_layers, LayerKind(mlp="moe" if self.n_experts else "swiglu")),),
+            )
+        total = sum(c for c, _ in self.layer_groups)
+        if total != self.n_layers:
+            raise ValueError(
+                f"layer_groups sum {total} != n_layers {self.n_layers}"
+            )
+
+    @property
+    def attn_inner(self) -> int:
+        return self.n_heads * self.head_dim
+
+    def active_params(self) -> int:
+        """Parameters touched per token (for MODEL_FLOPS = 6·N_active·D)."""
+        return count_params(self, active_only=True)
+
+    def total_params(self) -> int:
+        return count_params(self, active_only=False)
+
+
+def _attn_params(cfg: ArchConfig) -> int:
+    if cfg.use_mla:
+        q = cfg.d_model * cfg.q_lora + cfg.q_lora * cfg.n_heads * (cfg.nope_dim + cfg.rope_dim) \
+            if cfg.q_lora else cfg.d_model * cfg.n_heads * (cfg.nope_dim + cfg.rope_dim)
+        kv = cfg.d_model * (cfg.kv_lora + cfg.rope_dim) \
+            + cfg.kv_lora * cfg.n_heads * (cfg.nope_dim + cfg.v_head_dim)
+        o = cfg.n_heads * cfg.v_head_dim * cfg.d_model
+        return q + kv + o
+    q = cfg.d_model * cfg.n_heads * cfg.head_dim
+    kv = 2 * cfg.d_model * cfg.n_kv * cfg.head_dim
+    o = cfg.n_heads * cfg.head_dim * cfg.d_model
+    return q + kv + o
+
+
+def _ssm_params(cfg: ArchConfig) -> int:
+    d_in = cfg.ssm_expand * cfg.d_model
+    conv_dim = d_in + 2 * cfg.ssm_groups * cfg.ssm_state
+    nheads = d_in // cfg.ssm_head_dim
+    in_proj = cfg.d_model * (2 * d_in + 2 * cfg.ssm_groups * cfg.ssm_state + nheads)
+    conv = conv_dim * cfg.ssm_conv
+    out = d_in * cfg.d_model
+    return in_proj + conv + out + 3 * nheads + d_in
+
+
+def _mlp_params(cfg: ArchConfig, kind: LayerKind, active: bool) -> int:
+    if kind.mlp == "none":
+        return 0
+    if kind.mlp == "moe":
+        routed = 3 * cfg.d_model * cfg.expert_ff
+        shared = 3 * cfg.d_model * cfg.shared_ff if cfg.n_shared_experts else 0
+        router = cfg.d_model * cfg.n_experts
+        n_routed = cfg.top_k if active else cfg.n_experts
+        return n_routed * routed + shared + router
+    mult = 3 if kind.mlp == "swiglu" else 2
+    return mult * cfg.d_model * cfg.d_ff
+
+
+def count_params(cfg: ArchConfig, active_only: bool = False) -> int:
+    total = cfg.vocab * cfg.d_model  # embedding
+    if not cfg.tie_embeddings:
+        total += cfg.vocab * cfg.d_model  # untied head
+    for count, kind in cfg.layer_groups:
+        per = 0
+        if kind.mixer in ("attn", "hybrid"):
+            per += _attn_params(cfg)
+        if kind.mixer in ("ssm", "hybrid"):
+            per += _ssm_params(cfg)
+        per += _mlp_params(cfg, kind, active_only)
+        per += 2 * cfg.d_model  # norms
+        if kind.cross_attn:
+            per += _attn_params(cfg) + cfg.d_model
+        total += count * per
+    if cfg.n_enc_layers:
+        enc_kind = LayerKind(causal=False)
+        per = _attn_params(cfg) + _mlp_params(cfg, LayerKind(mlp="gelu"), active_only) + 2 * cfg.d_model
+        total += cfg.n_enc_layers * per
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}

@@ -1,0 +1,35 @@
+"""deepseek-coder-33b — llama-arch dense GQA.
+[arXiv:2401.14196; hf]  62L d_model=7168 56H kv=8 d_ff=19200 v=32256.
+"""
+from repro.configs.base import ArchConfig, LayerKind
+
+CONFIG = ArchConfig(
+    arch_id="deepseek_coder_33b",
+    family="dense",
+    n_layers=62,
+    d_model=7168,
+    n_heads=56,
+    n_kv=8,
+    d_ff=19200,
+    vocab=32256,
+    head_dim=128,
+    pos="rope",
+    layer_groups=((62, LayerKind(mixer="attn", mlp="swiglu")),),
+)
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        arch_id="deepseek_coder_smoke",
+        family="dense",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv=2,
+        d_ff=192,
+        vocab=128,
+        head_dim=16,
+        pos="rope",
+        remat_policy="none",
+        layer_groups=((2, LayerKind(mixer="attn", mlp="swiglu")),),
+    )

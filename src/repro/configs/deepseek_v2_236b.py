@@ -1,0 +1,68 @@
+"""deepseek-v2-236b — MLA (kv_lora=512) + MoE 160 routed top-6 + 2 shared.
+[arXiv:2405.04434; hf]  60L d_model=5120 128H d_ff(expert)=1536 v=102400.
+First layer is a dense 12288-wide FFN (as in the release); layers 2-60 MoE.
+"""
+from repro.configs.base import ArchConfig, LayerKind
+
+CONFIG = ArchConfig(
+    arch_id="deepseek_v2_236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv=128,
+    d_ff=12288,            # dense layers' FFN width
+    vocab=102400,
+    head_dim=192,          # nope+rope for score dim bookkeeping
+    n_experts=160,
+    n_shared_experts=2,
+    top_k=6,
+    expert_ff=1536,
+    shared_ff=3072,        # 2 shared experts × 1536
+    capacity_factor=1.25,
+    use_mla=True,
+    q_lora=1536,
+    kv_lora=512,
+    nope_dim=128,
+    rope_dim=64,
+    v_head_dim=128,
+    pos="rope",
+    opt_dtype="bfloat16",
+    microbatches=4,
+    fsdp_pods=True,  # 236B params: f32 moments exceed v5e HBM
+    layer_groups=(
+        (1, LayerKind(mixer="attn", mlp="swiglu")),
+        (59, LayerKind(mixer="attn", mlp="moe")),
+    ),
+)
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        arch_id="deepseek_v2_smoke",
+        family="moe",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv=4,
+        d_ff=128,
+        vocab=128,
+        head_dim=24,
+        n_experts=8,
+        n_shared_experts=1,
+        top_k=2,
+        expert_ff=32,
+        shared_ff=32,
+        use_mla=True,
+        q_lora=32,
+        kv_lora=32,
+        nope_dim=16,
+        rope_dim=8,
+        v_head_dim=16,
+        pos="rope",
+        remat_policy="none",
+        layer_groups=(
+            (1, LayerKind(mixer="attn", mlp="swiglu")),
+            (1, LayerKind(mixer="attn", mlp="moe")),
+        ),
+    )

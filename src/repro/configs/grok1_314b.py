@@ -1,0 +1,47 @@
+"""grok-1-314b — MoE 8 experts top-2, GQA.
+[hf:xai-org/grok-1; unverified]  64L d_model=6144 48H kv=8 d_ff=32768 v=131072.
+"""
+from repro.configs.base import ArchConfig, LayerKind
+
+CONFIG = ArchConfig(
+    arch_id="grok1_314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv=8,
+    d_ff=32768,
+    vocab=131072,
+    head_dim=128,
+    n_experts=8,
+    top_k=2,
+    expert_ff=32768,
+    capacity_factor=1.25,
+    pos="rope",
+    opt_dtype="bfloat16",
+    microbatches=8,
+    grad_dtype="bfloat16",  # f32 grad stacks alone exceed 256-chip HBM
+    fsdp_pods=True,  # 314B params: f32 moments exceed v5e HBM
+    layer_groups=((64, LayerKind(mixer="attn", mlp="moe")),),
+)
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        arch_id="grok1_smoke",
+        family="moe",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv=2,
+        d_ff=128,
+        vocab=128,
+        head_dim=16,
+        n_experts=4,
+        top_k=2,
+        expert_ff=128,
+        capacity_factor=1.5,
+        pos="rope",
+        remat_policy="none",
+        layer_groups=((2, LayerKind(mixer="attn", mlp="moe")),),
+    )

@@ -1,0 +1,64 @@
+"""hymba-1.5b — parallel attention+mamba hybrid heads, SWA + 3 full layers.
+[arXiv:2411.13676; hf]  32L d_model=1600 25H kv=5 d_ff=5504 state=16.
+Layers 0, 15, 31 use full attention; the rest sliding-window (W=1024), as in
+the release.  Every layer runs attention heads and SSD heads in parallel and
+mean-fuses the normalized branch outputs.
+"""
+from repro.configs.base import ArchConfig, LayerKind
+
+_SWA = 1024
+
+CONFIG = ArchConfig(
+    arch_id="hymba_1p5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv=5,
+    d_ff=5504,
+    vocab=32001,
+    head_dim=64,
+    ssm_state=16,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_groups=1,
+    ssm_chunk=256,
+    pos="rope",
+    subquadratic=True,
+    layer_groups=(
+        (1, LayerKind(mixer="hybrid", mlp="swiglu", window=None)),
+        (14, LayerKind(mixer="hybrid", mlp="swiglu", window=_SWA)),
+        (1, LayerKind(mixer="hybrid", mlp="swiglu", window=None)),
+        (15, LayerKind(mixer="hybrid", mlp="swiglu", window=_SWA)),
+        (1, LayerKind(mixer="hybrid", mlp="swiglu", window=None)),
+    ),
+)
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        arch_id="hymba_smoke",
+        family="hybrid",
+        n_layers=3,
+        d_model=64,
+        n_heads=4,
+        n_kv=2,
+        d_ff=128,
+        vocab=128,
+        head_dim=16,
+        ssm_state=8,
+        ssm_conv=4,
+        ssm_expand=2,
+        ssm_head_dim=16,
+        ssm_groups=1,
+        ssm_chunk=16,
+        pos="rope",
+        subquadratic=True,
+        remat_policy="none",
+        layer_groups=(
+            (1, LayerKind(mixer="hybrid", mlp="swiglu", window=None)),
+            (1, LayerKind(mixer="hybrid", mlp="swiglu", window=16)),
+            (1, LayerKind(mixer="hybrid", mlp="swiglu", window=None)),
+        ),
+    )

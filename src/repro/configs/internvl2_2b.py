@@ -1,0 +1,40 @@
+"""internvl2-2b — InternViT frontend (stub) + InternLM2 backbone.
+[arXiv:2404.16821; hf]  24L d_model=2048 16H kv=8 d_ff=8192 v=92553.
+The ViT is a frontend STUB per the assignment: ``vis_embed`` arrives as 256
+precomputed visual tokens (pixel-shuffled InternViT output) prepended to the
+text sequence.
+"""
+from repro.configs.base import ArchConfig, LayerKind
+
+CONFIG = ArchConfig(
+    arch_id="internvl2_2b",
+    family="vlm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv=8,
+    d_ff=8192,
+    vocab=92553,
+    head_dim=128,
+    n_vis_tokens=256,
+    pos="rope",
+    layer_groups=((24, LayerKind(mixer="attn", mlp="swiglu")),),
+)
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        arch_id="internvl2_smoke",
+        family="vlm",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv=2,
+        d_ff=128,
+        vocab=128,
+        head_dim=16,
+        n_vis_tokens=8,
+        pos="rope",
+        remat_policy="none",
+        layer_groups=((2, LayerKind(mixer="attn", mlp="swiglu")),),
+    )

@@ -1,0 +1,51 @@
+"""mamba2-370m — SSD (state-space duality), attention-free.
+[arXiv:2405.21060; unverified]  48L d_model=1024 d_ff=0 vocab=50280 state=128.
+"""
+from repro.configs.base import ArchConfig, LayerKind
+
+CONFIG = ArchConfig(
+    arch_id="mamba2_370m",
+    family="ssm",
+    n_layers=48,
+    d_model=1024,
+    n_heads=0,
+    n_kv=0,
+    d_ff=0,
+    vocab=50280,
+    head_dim=0,
+    ssm_state=128,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_groups=1,
+    ssm_chunk=256,
+    pos="none",
+    tie_embeddings=True,
+    subquadratic=True,
+    layer_groups=((48, LayerKind(mixer="ssm", mlp="none")),),
+)
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        arch_id="mamba2_smoke",
+        family="ssm",
+        n_layers=2,
+        d_model=64,
+        n_heads=0,
+        n_kv=0,
+        d_ff=0,
+        vocab=128,
+        head_dim=0,
+        ssm_state=16,
+        ssm_conv=4,
+        ssm_expand=2,
+        ssm_head_dim=16,
+        ssm_groups=1,
+        ssm_chunk=32,
+        pos="none",
+        tie_embeddings=True,
+        subquadratic=True,
+        remat_policy="none",
+        layer_groups=((2, LayerKind(mixer="ssm", mlp="none")),),
+    )

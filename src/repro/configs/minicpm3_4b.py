@@ -1,0 +1,48 @@
+"""minicpm3-4b — dense with MLA attention.
+[hf:openbmb/MiniCPM3-4B; hf]  62L d_model=2560 40H d_ff=6400 v=73448.
+MLA dims per the release: q_lora=768, kv_lora=256, nope=64, rope=32, v=64.
+"""
+from repro.configs.base import ArchConfig, LayerKind
+
+CONFIG = ArchConfig(
+    arch_id="minicpm3_4b",
+    family="dense",
+    n_layers=62,
+    d_model=2560,
+    n_heads=40,
+    n_kv=40,
+    d_ff=6400,
+    vocab=73448,
+    head_dim=96,  # nope+rope
+    use_mla=True,
+    q_lora=768,
+    kv_lora=256,
+    nope_dim=64,
+    rope_dim=32,
+    v_head_dim=64,
+    pos="rope",
+    layer_groups=((62, LayerKind(mixer="attn", mlp="swiglu")),),
+)
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        arch_id="minicpm3_smoke",
+        family="dense",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv=4,
+        d_ff=128,
+        vocab=128,
+        head_dim=24,
+        use_mla=True,
+        q_lora=32,
+        kv_lora=32,
+        nope_dim=16,
+        rope_dim=8,
+        v_head_dim=16,
+        pos="rope",
+        remat_policy="none",
+        layer_groups=((2, LayerKind(mixer="attn", mlp="swiglu")),),
+    )

@@ -1,0 +1,35 @@
+"""minitron-4b — width/depth-pruned nemotron, dense GQA.
+[arXiv:2407.14679; hf]  32L d_model=3072 24H kv=8 d_ff=9216 v=256000.
+"""
+from repro.configs.base import ArchConfig, LayerKind
+
+CONFIG = ArchConfig(
+    arch_id="minitron_4b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=24,
+    n_kv=8,
+    d_ff=9216,
+    vocab=256000,
+    head_dim=128,
+    pos="rope",
+    layer_groups=((32, LayerKind(mixer="attn", mlp="swiglu")),),
+)
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        arch_id="minitron_smoke",
+        family="dense",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv=2,
+        d_ff=192,
+        vocab=256,
+        head_dim=16,
+        pos="rope",
+        remat_policy="none",
+        layer_groups=((2, LayerKind(mixer="attn", mlp="swiglu")),),
+    )

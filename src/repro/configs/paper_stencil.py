@@ -1,0 +1,22 @@
+"""paper_stencil — the paper's own workload as a config: generic stencil
+computation (gaussian / bilateral / curvature) on dense tensors via the melt
+engine.  Not an LM; used by benchmarks and the distributed-filter examples.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilConfig:
+    arch_id: str = "paper_stencil"
+    tensor_shape: tuple = (64, 256, 256)   # 3-D volume (paper Fig 6 subject)
+    op_shape: tuple = (5, 5, 5)
+    sigma: float = 1.5
+    filter: str = "gaussian"               # gaussian | bilateral | curvature
+    method: str = "auto"
+
+
+CONFIG = StencilConfig()
+
+
+def smoke_config() -> StencilConfig:
+    return StencilConfig(tensor_shape=(8, 16, 16), op_shape=(3, 3, 3))

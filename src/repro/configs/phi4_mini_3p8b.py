@@ -1,0 +1,35 @@
+"""phi4-mini-3.8b — dense, RoPE SwiGLU GQA.
+[arXiv:2412.08905; hf]  32L d_model=3072 24H kv=8 d_ff=8192 v=200064.
+"""
+from repro.configs.base import ArchConfig, LayerKind
+
+CONFIG = ArchConfig(
+    arch_id="phi4_mini_3p8b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=24,
+    n_kv=8,
+    d_ff=8192,
+    vocab=200064,
+    head_dim=128,
+    pos="rope",
+    layer_groups=((32, LayerKind(mixer="attn", mlp="swiglu")),),
+)
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        arch_id="phi4_mini_smoke",
+        family="dense",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv=2,
+        d_ff=128,
+        vocab=256,
+        head_dim=16,
+        pos="rope",
+        remat_policy="none",
+        layer_groups=((2, LayerKind(mixer="attn", mlp="swiglu")),),
+    )

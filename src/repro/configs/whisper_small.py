@@ -1,0 +1,47 @@
+"""whisper-small — encoder-decoder, conv frontend STUB.
+[arXiv:2212.04356; unverified]  12L(enc)+12L(dec) d_model=768 12H d_ff=3072
+v=51865.  The conv frontend is a stub per the assignment: ``enc_embed``
+arrives as precomputed post-conv frame embeddings; the encoder is
+bidirectional, the decoder causal with per-layer cross-attention.
+Decode shapes use a fixed 1500-frame encoder context (30 s of audio).
+"""
+from repro.configs.base import ArchConfig, LayerKind
+
+CONFIG = ArchConfig(
+    arch_id="whisper_small",
+    family="audio",
+    n_layers=12,
+    n_enc_layers=12,
+    enc_len=1500,
+    d_model=768,
+    n_heads=12,
+    n_kv=12,
+    d_ff=3072,
+    vocab=51865,
+    head_dim=64,
+    pos="learned",
+    layer_groups=(
+        (12, LayerKind(mixer="attn", mlp="gelu", cross_attn=True)),
+    ),
+)
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        arch_id="whisper_smoke",
+        family="audio",
+        n_layers=2,
+        n_enc_layers=2,
+        enc_len=16,
+        d_model=64,
+        n_heads=4,
+        n_kv=4,
+        d_ff=128,
+        vocab=128,
+        head_dim=16,
+        pos="learned",
+        remat_policy="none",
+        layer_groups=(
+            (2, LayerKind(mixer="attn", mlp="gelu", cross_attn=True)),
+        ),
+    )

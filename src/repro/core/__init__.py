@@ -1,0 +1,39 @@
+"""repro.core — the paper's contribution: the melt-matrix engine.
+
+Decomposition of any-rank tensors into the row-decoupled melt matrix,
+partition planning satisfying the paper's §2.4 conditions, generic
+(Hilbert-complete) filters, and the distributed shard_map engine with halo
+exchange.
+"""
+from repro.core.grid import QuasiGrid, make_quasi_grid, neighborhood_offsets
+from repro.core.melt import MeltMatrix, melt, unmelt
+from repro.core.engine import MeltEngine, apply_stencil
+from repro.core.partition import (
+    plan_row_partition,
+    plan_slab_partition,
+    validate_partition,
+)
+from repro.core.filters import (
+    bilateral_filter,
+    gaussian_curvature,
+    gaussian_filter,
+    gaussian_weights,
+)
+
+__all__ = [
+    "QuasiGrid",
+    "make_quasi_grid",
+    "neighborhood_offsets",
+    "MeltMatrix",
+    "melt",
+    "unmelt",
+    "MeltEngine",
+    "apply_stencil",
+    "plan_row_partition",
+    "plan_slab_partition",
+    "validate_partition",
+    "bilateral_filter",
+    "gaussian_curvature",
+    "gaussian_filter",
+    "gaussian_weights",
+]

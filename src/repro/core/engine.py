@@ -1,0 +1,142 @@
+"""MeltEngine — decouple → compute → couple (paper Fig. 2), path-selectable.
+
+``apply_stencil`` is the generic linear-stencil entry point.  Three
+execution paths implement the identical math:
+
+- ``materialize`` : paper-faithful — build the melt matrix ``M`` in memory,
+  contract ``M @ v`` (array-programming broadcast), fold back.  This is the
+  oracle and the semantics definition.
+- ``fused``       : TPU production path — the Pallas kernel in
+  ``repro.kernels.melt_stencil`` streams melt tiles through VMEM and feeds
+  the MXU; ``M`` never exists in HBM (DESIGN.md §2 hardware adaptation).
+- ``lax``         : XLA-native convolution lowering, used as a second
+  independent reference and as the fast CPU path.
+
+All paths are rank-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.grid import QuasiGrid, make_quasi_grid
+from repro.core.melt import melt, unmelt
+
+__all__ = ["apply_stencil", "MeltEngine"]
+
+
+def _stencil_materialize(x, grid: QuasiGrid, weights, pad_value):
+    M = melt(x, grid.op_shape, grid.stride, grid.padding, grid.dilation,
+             pad_value=pad_value, grid=grid)
+    rows = M.data @ weights.astype(M.data.dtype)
+    return unmelt(rows, grid)
+
+
+def _stencil_lax(x, grid: QuasiGrid, weights, pad_value):
+    if pad_value not in (0, 0.0):
+        # lax conv only supports zero padding; pre-pad and run 'valid'
+        xp = jnp.pad(x, list(zip(grid.pad_lo, grid.pad_hi)), mode="edge") \
+            if pad_value == "edge" else jnp.pad(
+                x, list(zip(grid.pad_lo, grid.pad_hi)), mode="constant",
+                constant_values=pad_value)
+        pad_cfg = [(0, 0)] * grid.rank
+    else:
+        xp = x
+        pad_cfg = list(zip(grid.pad_lo, grid.pad_hi))
+    kern = weights.reshape(grid.op_shape).astype(x.dtype)
+    lhs = xp[None, None]  # N, C, spatial...
+    rhs = kern[None, None]  # O, I, spatial...
+    spatial = "".join(chr(ord("0") + i) for i in range(grid.rank))
+    dn = jax.lax.conv_dimension_numbers(
+        lhs.shape, rhs.shape,
+        ("NC" + spatial, "OI" + spatial, "NC" + spatial),
+    )
+    out = jax.lax.conv_general_dilated(
+        lhs, rhs,
+        window_strides=grid.stride,
+        padding=pad_cfg,
+        rhs_dilation=grid.dilation,
+        dimension_numbers=dn,
+    )
+    return out[0, 0]
+
+
+def apply_stencil(
+    x: jax.Array,
+    op_shape,
+    weights: jax.Array,
+    *,
+    stride=1,
+    padding: str = "same",
+    dilation=1,
+    pad_value=0.0,
+    method: str = "auto",
+    grid: Optional[QuasiGrid] = None,
+) -> jax.Array:
+    """Apply a linear stencil (operator ravel-vector ``weights``) to ``x``.
+
+    Correlation convention: output[g] = Σ_c weights[c] · x[g + offset_c].
+    """
+    if grid is None:
+        grid = make_quasi_grid(x.shape, op_shape, stride, padding, dilation)
+    weights = jnp.asarray(weights).reshape(-1)
+    if weights.shape[0] != grid.num_cols:
+        raise ValueError(
+            f"weights has {weights.shape[0]} elements, operator needs {grid.num_cols}"
+        )
+    if method == "auto":
+        on_tpu = jax.default_backend() == "tpu"
+        method = "fused" if on_tpu else "lax"
+    if method == "materialize":
+        return _stencil_materialize(x, grid, weights, pad_value)
+    if method == "lax":
+        return _stencil_lax(x, grid, weights, pad_value)
+    if method == "fused":
+        from repro.kernels import melt_stencil_ops  # lazy: kernels optional
+
+        return melt_stencil_ops.fused_stencil(
+            x, grid, weights, pad_value=pad_value
+        )
+    raise ValueError(f"unknown method {method!r}")
+
+
+class MeltEngine:
+    """Explicit decouple→compute→couple driver (paper Fig. 2).
+
+    Mostly useful for inspection/benchmarks; production code calls
+    ``apply_stencil`` / the distributed engine directly.
+    """
+
+    def __init__(self, op_shape, stride=1, padding="same", dilation=1,
+                 pad_value=0.0, method="auto"):
+        self.op_shape = op_shape
+        self.stride = stride
+        self.padding = padding
+        self.dilation = dilation
+        self.pad_value = pad_value
+        self.method = method
+
+    def grid_for(self, x) -> QuasiGrid:
+        return make_quasi_grid(
+            x.shape, self.op_shape, self.stride, self.padding, self.dilation
+        )
+
+    def decouple(self, x):
+        return melt(x, self.op_shape, self.stride, self.padding,
+                    self.dilation, pad_value=self.pad_value)
+
+    def compute(self, M, weights):
+        return M.data @ jnp.asarray(weights).reshape(-1).astype(M.data.dtype)
+
+    def couple(self, rows, grid: QuasiGrid):
+        return unmelt(rows, grid)
+
+    def __call__(self, x, weights):
+        return apply_stencil(
+            x, self.op_shape, weights,
+            stride=self.stride, padding=self.padding, dilation=self.dilation,
+            pad_value=self.pad_value, method=self.method,
+        )

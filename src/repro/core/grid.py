@@ -1,0 +1,203 @@
+"""Quasi-grid shape algebra (paper §3.1, the ``f1`` component).
+
+The *quasi-grid* maps the shape of an input tensor ``x`` under the action of
+an operator tensor ``m`` (same rank) to the output grid shape ``s'`` — the
+set of points at which the operator is evaluated.  Everything here is pure
+Python/numpy shape math: no device arrays, usable at trace time.
+
+Conventions
+-----------
+- ``padding='same'``   : global filtering — grid == x.shape (stride 1) and the
+  input is virtually padded by the operator half-width (paper: "the requisite
+  grid is the structure of the tensor x itself").
+- ``padding='valid'``  : shrinking manipulations — grid points are the
+  crossover points of the orthogonal hyperplane families moved with ``stride``
+  (paper: padding-layer / down-sampling case).
+- ``dilation``         : à-trous expansion of the operator footprint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "QuasiGrid",
+    "normalize_tuple",
+    "grid_shape",
+    "neighborhood_offsets",
+    "make_quasi_grid",
+]
+
+
+def normalize_tuple(v, rank: int, name: str) -> Tuple[int, ...]:
+    """Broadcast a scalar-or-sequence to a rank-length tuple of ints."""
+    if isinstance(v, (int, np.integer)):
+        return (int(v),) * rank
+    t = tuple(int(e) for e in v)
+    if len(t) != rank:
+        raise ValueError(f"{name} must have length {rank}, got {len(t)}")
+    return t
+
+
+def grid_shape(
+    in_shape: Sequence[int],
+    op_shape: Sequence[int],
+    stride: Sequence[int],
+    padding: str,
+    dilation: Sequence[int],
+) -> Tuple[int, ...]:
+    """Output grid shape ``s'`` = f1(x.shape) for each dimension."""
+    out = []
+    for n, k, s, d in zip(in_shape, op_shape, stride, dilation):
+        eff = (k - 1) * d + 1  # effective operator extent
+        if padding == "same":
+            out.append(-(-n // s))  # ceil(n / s)
+        elif padding == "valid":
+            if n < eff:
+                raise ValueError(
+                    f"input extent {n} smaller than effective operator {eff}"
+                )
+            out.append((n - eff) // s + 1)
+        else:
+            raise ValueError(f"unknown padding mode {padding!r}")
+    return tuple(out)
+
+
+def neighborhood_offsets(
+    op_shape: Sequence[int], dilation: Sequence[int]
+) -> np.ndarray:
+    """Relative offsets of every operator element w.r.t. the operator center.
+
+    Returns an int array of shape ``(numel(m), rank)``; row ordering is the
+    ravel (row-major) order of the operator tensor, matching the column order
+    of the melt matrix.
+    """
+    axes = [
+        (np.arange(k) - (k - 1) // 2) * d for k, d in zip(op_shape, dilation)
+    ]
+    mesh = np.meshgrid(*axes, indexing="ij")
+    return np.stack([m.ravel() for m in mesh], axis=-1).astype(np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuasiGrid:
+    """Static description of a melt: all shape/indexing metadata.
+
+    Attributes
+    ----------
+    in_shape    : shape of the (unpadded) input tensor
+    op_shape    : shape of the operator tensor ``m`` (same rank)
+    stride, dilation : per-dim ints
+    padding     : 'same' | 'valid'
+    out_shape   : the grid shape ``s'``
+    pad_lo/pad_hi : virtual padding applied per dim (same-mode only)
+    offsets     : (numel(m), rank) relative offsets (operator ravel order)
+    """
+
+    in_shape: Tuple[int, ...]
+    op_shape: Tuple[int, ...]
+    stride: Tuple[int, ...]
+    dilation: Tuple[int, ...]
+    padding: str
+    out_shape: Tuple[int, ...]
+    pad_lo: Tuple[int, ...]
+    pad_hi: Tuple[int, ...]
+
+    @property
+    def rank(self) -> int:
+        return len(self.in_shape)
+
+    @property
+    def num_rows(self) -> int:
+        return int(math.prod(self.out_shape))
+
+    @property
+    def num_cols(self) -> int:
+        return int(math.prod(self.op_shape))
+
+    @property
+    def padded_shape(self) -> Tuple[int, ...]:
+        return tuple(
+            n + lo + hi
+            for n, lo, hi in zip(self.in_shape, self.pad_lo, self.pad_hi)
+        )
+
+    def offsets(self) -> np.ndarray:
+        return neighborhood_offsets(self.op_shape, self.dilation)
+
+    def flat_offsets(self) -> np.ndarray:
+        """Offsets flattened against the *padded* input strides: (numel(m),)."""
+        strides = np.ones(self.rank, dtype=np.int64)
+        pshape = self.padded_shape
+        for i in range(self.rank - 2, -1, -1):
+            strides[i] = strides[i + 1] * pshape[i + 1]
+        return self.offsets() @ strides
+
+    def base_flat_indices(self) -> np.ndarray:
+        """Flat index (into padded input) of the *center* of each grid row."""
+        pshape = self.padded_shape
+        strides = np.ones(self.rank, dtype=np.int64)
+        for i in range(self.rank - 2, -1, -1):
+            strides[i] = strides[i + 1] * pshape[i + 1]
+        axes = []
+        for g, s, lo, k, d in zip(
+            self.out_shape, self.stride, self.pad_lo, self.op_shape, self.dilation
+        ):
+            center = (k - 1) // 2 * d
+            if self.padding == "same":
+                # grid point i sits at padded position i*s + lo
+                axes.append(np.arange(g, dtype=np.int64) * s + lo)
+            else:  # valid: first center at `center`
+                axes.append(np.arange(g, dtype=np.int64) * s + center)
+        mesh = np.meshgrid(*axes, indexing="ij")
+        pos = np.stack([m.ravel() for m in mesh], axis=-1)
+        return pos @ strides
+
+    def halo(self) -> Tuple[Tuple[int, int], ...]:
+        """Per-dim (lo, hi) halo widths a shard needs beyond its own slab."""
+        out = []
+        for k, d in zip(self.op_shape, self.dilation):
+            lo = (k - 1) // 2 * d
+            hi = (k - 1 - (k - 1) // 2) * d
+            out.append((lo, hi))
+        return tuple(out)
+
+
+def make_quasi_grid(
+    in_shape: Sequence[int],
+    op_shape: Sequence[int],
+    stride=1,
+    padding: str = "same",
+    dilation=1,
+) -> QuasiGrid:
+    in_shape = tuple(int(s) for s in in_shape)
+    rank = len(in_shape)
+    op_shape_t = normalize_tuple(op_shape, rank, "op_shape")
+    stride_t = normalize_tuple(stride, rank, "stride")
+    dil_t = normalize_tuple(dilation, rank, "dilation")
+    out = grid_shape(in_shape, op_shape_t, stride_t, padding, dil_t)
+    if padding == "same":
+        pad_lo, pad_hi = [], []
+        for n, g, k, s, d in zip(in_shape, out, op_shape_t, stride_t, dil_t):
+            center = (k - 1) // 2 * d
+            lo = center
+            # last grid center at (g-1)*s ; needs up to +((k-1)-(k-1)//2)*d
+            hi_needed = (g - 1) * s + ((k - 1) - (k - 1) // 2) * d - (n - 1)
+            pad_lo.append(lo)
+            pad_hi.append(max(0, hi_needed))
+        pads = (tuple(pad_lo), tuple(pad_hi))
+    else:
+        pads = ((0,) * rank, (0,) * rank)
+    return QuasiGrid(
+        in_shape=in_shape,
+        op_shape=op_shape_t,
+        stride=stride_t,
+        dilation=dil_t,
+        padding=padding,
+        out_shape=out,
+        pad_lo=pads[0],
+        pad_hi=pads[1],
+    )

@@ -1,0 +1,73 @@
+"""Hilbert-space generalizations (paper §2.2, Table 2).
+
+Generic, rank-agnostic forms of concepts whose low-dimensional versions are
+degenerate special cases: the multivariate Gaussian (+ gradient), and the
+n-sphere operator footprint (rotation-invariant structuring elements: the
+line segment, disc and sphere are all one concept here).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "as_covariance",
+    "multivariate_gaussian",
+    "multivariate_gaussian_grad",
+    "n_sphere_mask",
+]
+
+
+def as_covariance(sigma, rank: int) -> np.ndarray:
+    """Promote scalar / vector / matrix sigma to a full covariance matrix.
+
+    scalar σ → σ²·I ; vector of per-dim σ → diag(σ²) (anisotropic voxels,
+    the paper's medical-image case) ; matrix → used as Σ directly.
+    """
+    sigma = np.asarray(sigma, dtype=np.float64)
+    if sigma.ndim == 0:
+        return np.eye(rank) * float(sigma) ** 2
+    if sigma.ndim == 1:
+        if sigma.shape[0] != rank:
+            raise ValueError(f"sigma vector length {sigma.shape[0]} != rank {rank}")
+        return np.diag(sigma**2)
+    if sigma.shape != (rank, rank):
+        raise ValueError(f"sigma matrix must be ({rank},{rank})")
+    return sigma
+
+
+def multivariate_gaussian(x, mu, cov):
+    """N(x | mu, Σ) for batched x: (..., k). Table 2, right column."""
+    x = jnp.asarray(x)
+    mu = jnp.asarray(mu)
+    cov = jnp.asarray(cov)
+    k = x.shape[-1]
+    diff = x - mu
+    prec = jnp.linalg.inv(cov)
+    quad = jnp.einsum("...i,ij,...j->...", diff, prec, diff)
+    norm = (2 * jnp.pi) ** (k / 2) * jnp.sqrt(jnp.linalg.det(cov))
+    return jnp.exp(-0.5 * quad) / norm
+
+
+def multivariate_gaussian_grad(x, mu, cov):
+    """∂p/∂x = -Σ⁻¹(x-μ) · p(x).  Table 2, second row."""
+    x = jnp.asarray(x)
+    diff = x - jnp.asarray(mu)
+    prec = jnp.linalg.inv(jnp.asarray(cov))
+    p = multivariate_gaussian(x, mu, cov)
+    return -jnp.einsum("ij,...j->...i", prec, diff) * p[..., None]
+
+
+def n_sphere_mask(op_shape, dilation=None) -> np.ndarray:
+    """Boolean rotation-invariant footprint: ‖offset‖ ≤ radius, any rank.
+
+    Rank 1 → segment; rank 2 → disc; rank 3 → ball; rank k → k-ball.
+    """
+    op_shape = tuple(int(k) for k in op_shape)
+    axes = [np.arange(k) - (k - 1) / 2 for k in op_shape]
+    mesh = np.meshgrid(*axes, indexing="ij")
+    # normalize each axis so the footprint inscribes the box
+    r2 = sum(
+        (m / max((k - 1) / 2, 1e-9)) ** 2 for m, k in zip(mesh, op_shape)
+    )
+    return r2 <= 1.0 + 1e-12

@@ -1,0 +1,169 @@
+"""The melt matrix (paper §3.1) — N-D tensor ↔ 2-D row-decoupled matrix.
+
+``melt`` turns a rank-k tensor into a 2-D array ``M`` with one row per
+quasi-grid point and one column per operator element; each row is the raveled
+neighbourhood of the input around that grid point.  ``unmelt`` is the coupling
+(aggregation) step that folds results back onto the grid.
+
+This is the *paper-faithful, materialized* implementation: ``M`` really
+exists.  It serves as the reference/oracle; the TPU production path is the
+fused Pallas kernel in ``repro.kernels.melt_stencil`` which never
+materializes ``M`` in HBM (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.grid import QuasiGrid, make_quasi_grid
+
+__all__ = ["MeltMatrix", "melt", "unmelt", "melt_rows_for_slab"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MeltMatrix:
+    """The intermediary structure of §3.1.
+
+    Carries the 2-D data plus everything needed for partition, broadcast and
+    aggregation: the grid shape ``s'``, the operator ravel-vector metadata
+    (via :class:`QuasiGrid`), matching the paper's description that "the ravel
+    vector v of operator m and the new shape s' of grid tensor is also
+    included inside the intermediary structure".
+    """
+
+    data: jax.Array  # (num_rows, num_cols)
+    grid: QuasiGrid  # static metadata
+
+    # -- pytree protocol (grid is static) ---------------------------------
+    def tree_flatten(self):
+        return (self.data,), self.grid
+
+    @classmethod
+    def tree_unflatten(cls, grid, children):
+        return cls(data=children[0], grid=grid)
+
+    # -- convenience -------------------------------------------------------
+    @property
+    def num_rows(self) -> int:
+        return self.grid.num_rows
+
+    @property
+    def num_cols(self) -> int:
+        return self.grid.num_cols
+
+    @property
+    def out_shape(self) -> Tuple[int, ...]:
+        return self.grid.out_shape
+
+    def center_column(self) -> jax.Array:
+        """Values of the grid centers, shape (num_rows,)."""
+        c = int(np.ravel_multi_index(
+            tuple((k - 1) // 2 for k in self.grid.op_shape), self.grid.op_shape
+        ))
+        return self.data[:, c]
+
+
+def _pad(x: jax.Array, grid: QuasiGrid, pad_value) -> jax.Array:
+    if all(l == 0 and h == 0 for l, h in zip(grid.pad_lo, grid.pad_hi)):
+        return x
+    if pad_value == "edge":
+        return jnp.pad(x, list(zip(grid.pad_lo, grid.pad_hi)), mode="edge")
+    if pad_value == "reflect":
+        return jnp.pad(x, list(zip(grid.pad_lo, grid.pad_hi)), mode="reflect")
+    return jnp.pad(
+        x,
+        list(zip(grid.pad_lo, grid.pad_hi)),
+        mode="constant",
+        constant_values=pad_value,
+    )
+
+
+def melt(
+    x: jax.Array,
+    op_shape,
+    stride=1,
+    padding: str = "same",
+    dilation=1,
+    pad_value=0.0,
+    grid: Optional[QuasiGrid] = None,
+) -> MeltMatrix:
+    """Decouple: build the melt matrix of ``x`` under operator shape ``op_shape``.
+
+    Dimension-independent: works for any rank (the Hilbert-completeness
+    requirement — rank is data, not code structure).
+    """
+    if grid is None:
+        grid = make_quasi_grid(x.shape, op_shape, stride, padding, dilation)
+    xp = _pad(x, grid, pad_value)
+    flat = xp.reshape(-1)
+    base = jnp.asarray(grid.base_flat_indices())  # (rows,)
+    offs = jnp.asarray(grid.flat_offsets())  # (cols,)
+    idx = base[:, None] + offs[None, :]  # (rows, cols)
+    return MeltMatrix(data=flat[idx], grid=grid)
+
+
+def unmelt(
+    values: jax.Array,
+    grid: QuasiGrid,
+    mode: str = "grid",
+) -> jax.Array:
+    """Couple: aggregate per-row results back to the output grid.
+
+    ``values`` is (num_rows,) or (num_rows, c) — one result per grid point
+    (the usual case after broadcasting a kernel over the melt matrix and
+    reducing over columns).  ``mode='grid'`` reshapes to ``s'`` (+ trailing
+    channel dims).
+    """
+    if mode != "grid":
+        raise ValueError(f"unknown unmelt mode {mode!r}")
+    trailing = values.shape[1:]
+    return values.reshape(grid.out_shape + trailing)
+
+
+def scatter_unmelt(column_values: jax.Array, grid: QuasiGrid) -> jax.Array:
+    """Overlap-add inverse: scatter full melt-matrix values (rows, cols) back
+    into (padded) input positions, summing overlaps, then crop padding.
+
+    Used to verify the partition/aggregation algebra (tests) and for
+    transposed/stencil-adjoint operations.
+    """
+    pshape = grid.padded_shape
+    base = jnp.asarray(grid.base_flat_indices())
+    offs = jnp.asarray(grid.flat_offsets())
+    idx = (base[:, None] + offs[None, :]).reshape(-1)
+    flat = jnp.zeros(int(np.prod(pshape)), column_values.dtype)
+    flat = flat.at[idx].add(column_values.reshape(-1))
+    out = flat.reshape(pshape)
+    slices = tuple(
+        slice(lo, lo + n) for lo, n in zip(grid.pad_lo, grid.in_shape)
+    )
+    return out[slices]
+
+
+def melt_rows_for_slab(grid: QuasiGrid, start: int, stop: int):
+    """Indexing plan for computing melt rows [start, stop) from an input slab.
+
+    Returns ``(slab_lo, slab_hi, local_base)`` where the shard only needs
+    padded-input rows [slab_lo, slab_hi) along dim 0, and ``local_base`` are
+    base indices rebased to that slab.  This is the constructive proof of the
+    paper's computational separability (§2.4): each row block of M depends on
+    a bounded input slab (its partition + halo).
+    """
+    rows_per_slice = grid.num_rows // grid.out_shape[0]
+    if start % rows_per_slice or stop % rows_per_slice:
+        raise ValueError("slab partition must align to leading-dim slices")
+    g0, g1 = start // rows_per_slice, stop // rows_per_slice
+    (lo0, hi0) = grid.halo()[0]
+    # centers of grid slices g0..g1-1 live at padded rows g*stride + pad_lo
+    c_first = g0 * grid.stride[0] + (grid.pad_lo[0] if grid.padding == "same"
+                                     else (grid.op_shape[0] - 1) // 2 * grid.dilation[0])
+    c_last = (g1 - 1) * grid.stride[0] + (grid.pad_lo[0] if grid.padding == "same"
+                                          else (grid.op_shape[0] - 1) // 2 * grid.dilation[0])
+    slab_lo = c_first - lo0
+    slab_hi = c_last + hi0 + 1
+    return slab_lo, slab_hi, (g0, g1)

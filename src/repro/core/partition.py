@@ -1,0 +1,94 @@
+"""Row-partition planner for melt matrices (paper §2.4).
+
+A valid columnar partition ``P = {P_1..P_s}`` of a matrix ``M ∈ R^{n×m}``
+must satisfy (paper §2.4):
+
+  1. ``P_i ∈ R^{k_i×m}`` with ``n = Σ k_i``, ``k_i > 0``
+  2. row blocks pairwise disjoint
+  3. ∃ invertible ``A`` with ``A · vstack(P) = M`` (i.e. the blocks cover
+     all rows; ``A`` is the row permutation restoring original order)
+
+Because melt-matrix rows are computationally independent, any such partition
+yields an embarrassingly-parallel decomposition; this module plans them and
+verifies the three conditions (used by the hypothesis property tests).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.grid import QuasiGrid
+
+__all__ = [
+    "plan_row_partition",
+    "validate_partition",
+    "permutation_matrix",
+    "plan_slab_partition",
+]
+
+
+def plan_row_partition(num_rows: int, num_shards: int) -> List[Tuple[int, int]]:
+    """Contiguous near-equal row ranges [(start, stop), ...].
+
+    Shards that would be empty are dropped (condition 1 requires k_i > 0), so
+    the returned list may be shorter than ``num_shards``.
+    """
+    if num_rows <= 0:
+        raise ValueError("num_rows must be positive")
+    num_shards = max(1, min(num_shards, num_rows))
+    base, rem = divmod(num_rows, num_shards)
+    out, start = [], 0
+    for i in range(num_shards):
+        k = base + (1 if i < rem else 0)
+        out.append((start, start + k))
+        start += k
+    return out
+
+
+def validate_partition(ranges: Sequence[Tuple[int, int]], num_rows: int) -> bool:
+    """Check the three §2.4 conditions for a list of row ranges."""
+    if not ranges:
+        return False
+    # condition 1: non-empty, sizes sum to n
+    if any(stop <= start for start, stop in ranges):
+        return False
+    if sum(stop - start for start, stop in ranges) != num_rows:
+        return False
+    # condition 2: pairwise disjoint; condition 3: covering (⇒ a permutation
+    # matrix A with full rank n exists)
+    covered = np.zeros(num_rows, dtype=bool)
+    for start, stop in ranges:
+        if start < 0 or stop > num_rows:
+            return False
+        if covered[start:stop].any():
+            return False
+        covered[start:stop] = True
+    return bool(covered.all())
+
+
+def permutation_matrix(ranges: Sequence[Tuple[int, int]], num_rows: int) -> np.ndarray:
+    """The explicit ``A`` of condition 3 (for tests; never materialized at scale).
+
+    ``A @ vstack([M[start:stop] for ...]) == M`` and ``det(A) = ±1``.
+    """
+    order = np.concatenate([np.arange(s, e) for s, e in ranges])
+    A = np.zeros((num_rows, num_rows), dtype=np.int8)
+    A[order, np.arange(num_rows)] = 1
+    # row i of M is row position[i] of the stack:
+    return A
+
+
+def plan_slab_partition(grid: QuasiGrid, num_shards: int):
+    """Partition aligned to leading-grid-dim slices (for distributed slabs).
+
+    Returns a list of ((row_start, row_stop), (slice_start, slice_stop)).
+    Used by the shard_map engine where each device owns a contiguous slab of
+    the leading dimension plus a halo.
+    """
+    g0 = grid.out_shape[0]
+    rows_per_slice = grid.num_rows // g0
+    slices = plan_row_partition(g0, num_shards)
+    return [
+        ((s * rows_per_slice, e * rows_per_slice), (s, e)) for s, e in slices
+    ]

@@ -1,0 +1,35 @@
+"""Melt-based data augmentation (the paper's own application domain).
+
+Generic, rank-agnostic augmentations for modality frontends: adaptive
+bilateral denoising (paper Eq. 3 / Fig. 3b) and curvature-based keypoint
+boosting (Eq. 6).  These run on frame/patch tensors before embedding; they
+are the production integration of ``repro.core.filters``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.filters import bilateral_filter, gaussian_curvature, gaussian_filter
+
+
+def denoise(x: jax.Array, op_size: int = 5, sigma_d: float = 1.5,
+            sigma_r="adaptive") -> jax.Array:
+    """Adaptive bilateral denoise of one sample of any rank."""
+    return bilateral_filter(x, op_size, sigma_d, sigma_r)
+
+
+def denoise_batch(x: jax.Array, **kw) -> jax.Array:
+    """vmap over the leading batch dim (each sample any rank)."""
+    return jax.vmap(lambda t: denoise(t, **kw))(x)
+
+
+def keypoint_boost(x: jax.Array, gain: float = 4.0) -> jax.Array:
+    """Emphasize high-curvature (corner-like) regions, any rank."""
+    k = gaussian_curvature(x)
+    k = k / (jnp.max(jnp.abs(k)) + 1e-9)
+    return x * (1.0 + gain * jnp.abs(k))
+
+
+def smooth(x: jax.Array, op_size: int = 5, sigma: float = 1.0) -> jax.Array:
+    return gaussian_filter(x, op_size, sigma)

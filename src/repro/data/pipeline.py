@@ -1,0 +1,102 @@
+"""Sharded token data pipeline.
+
+Production posture: each host feeds only its addressable shard of the
+global batch (``host_batch_slice``), double-buffered with a background
+prefetch thread.  Sources: synthetic (seeded, for tests/benchmarks) or
+memory-mapped token files (one ``.bin`` of uint16/uint32 tokens).
+
+The melt-matrix tie-in (paper §3.2 / DESIGN.md §4): modality pre-processing
+(e.g. denoising frame/patch inputs) runs through ``repro.data.augment``
+which is built on the core melt filters.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SyntheticLM:
+    """Deterministic synthetic next-token data (zipfian unigrams + shift)."""
+
+    def __init__(self, vocab: int, batch: int, seq_len: int, seed: int = 0):
+        self.vocab, self.batch, self.seq_len = vocab, batch, seq_len
+        self._rng = np.random.default_rng(seed)
+        ranks = np.arange(1, vocab + 1, dtype=np.float64)
+        self._probs = (1.0 / ranks) / np.sum(1.0 / ranks)
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            toks = self._rng.choice(
+                self.vocab, size=(self.batch, self.seq_len + 1), p=self._probs
+            ).astype(np.int32)
+            yield {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+
+
+class TokenFileLM:
+    """Memory-mapped flat token file → (tokens, targets) windows."""
+
+    def __init__(self, path: str, vocab: int, batch: int, seq_len: int,
+                 dtype=np.uint16, seed: int = 0):
+        self.tokens = np.memmap(path, dtype=dtype, mode="r")
+        self.vocab, self.batch, self.seq_len = vocab, batch, seq_len
+        self._rng = np.random.default_rng(seed)
+
+    def __iter__(self):
+        n = len(self.tokens) - self.seq_len - 1
+        while True:
+            starts = self._rng.integers(0, n, size=self.batch)
+            rows = np.stack([
+                self.tokens[s : s + self.seq_len + 1] for s in starts
+            ]).astype(np.int32)
+            yield {"tokens": rows[:, :-1], "targets": rows[:, 1:]}
+
+
+def host_batch_slice(global_batch: int, host_id: int, num_hosts: int):
+    """Row range of the global batch owned by this host."""
+    per = global_batch // num_hosts
+    return slice(host_id * per, (host_id + 1) * per)
+
+
+class Prefetcher:
+    """Background-thread prefetch (double buffering) over a batch iterator."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._it = iter(it)
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _fill(self):
+        try:
+            for item in self._it:
+                self._q.put(item)
+        except BaseException as e:  # propagate to consumer
+            self._err = e
+            self._q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is None:
+            raise self._err or StopIteration
+        return item
+
+
+def make_pipeline(cfg, shape, source: str = "synthetic", path: str = "",
+                  seed: int = 0, prefetch: int = 2):
+    if source == "synthetic":
+        base = SyntheticLM(cfg.vocab, shape.global_batch, shape.seq_len, seed)
+    elif source == "file":
+        base = TokenFileLM(path, cfg.vocab, shape.global_batch, shape.seq_len,
+                           seed=seed)
+    else:
+        raise ValueError(source)
+    return Prefetcher(base, prefetch)

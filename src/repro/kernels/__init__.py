@@ -1,0 +1,24 @@
+"""Pallas TPU kernels for the melt-matrix hot paths (+ ops wrappers, refs).
+
+- melt_stencil : fused melt×contract (linear stencils, any rank)
+- bilateral    : data-dependent melt weights (paper Eq. 3) in VMEM
+- local_attn   : sliding-window flash attention (melt over the sequence)
+
+Validated with interpret=True against ref.py oracles (CPU container);
+the same pallas_call code paths target real TPUs.
+"""
+from repro.kernels import ops as melt_stencil_ops  # noqa: F401 (engine hook)
+from repro.kernels.ops import (
+    depthwise_conv1d,
+    fused_bilateral,
+    fused_stencil,
+    sliding_window_attention,
+)
+
+__all__ = [
+    "melt_stencil_ops",
+    "depthwise_conv1d",
+    "fused_bilateral",
+    "fused_stencil",
+    "sliding_window_attention",
+]

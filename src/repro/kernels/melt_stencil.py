@@ -1,0 +1,77 @@
+"""Fused melt×contract Pallas kernel — the TPU-native melt matrix.
+
+DESIGN.md §2: the paper materializes the melt matrix ``M`` (rows = grid
+points, cols = operator elements) in memory and broadcasts over it.  On TPU
+that inflates HBM traffic by ``numel(m)``; this kernel instead builds each
+*tile* of melt rows in VMEM from shifted slices of a halo-extended input
+slab and contracts with the operator ravel vector on the fly — ``M`` never
+exists in HBM.
+
+Canonicalization: any rank-k stride-1 'same' stencil flattens to a 2-D
+problem (R, C): R = prod(leading grid dims), C = trailing (lane) dim, and a
+static per-operator-element *row offset* table derived from
+``QuasiGrid.flat_offsets`` — the offset table carries all the geometry, so
+one kernel serves every rank.  Each output tile i reads input rows
+``[i·T, i·T + T + halo_lo + halo_hi)`` (the §2.4 slab + halo) and computes
+``Σ_c w_c · slab[c_off : c_off + T]`` on the VPU; multi-channel variants
+feed the MXU via an (T, numel) × (numel, C) contraction.
+
+The input arrives as a whole-array ref (HBM); slices are pulled with
+``pl.ds`` — on real TPUs these lower to DMA copies into VMEM, in interpret
+mode they execute directly.  Validated against ``ref.py`` (materialized
+melt) over shape/dtype sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _stencil_kernel(x_ref, w_ref, o_ref, *, offsets: Tuple[int, ...],
+                    tile_rows: int):
+    i = pl.program_id(0)
+    base = i * tile_rows  # x is pre-padded by halo_lo at the front
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for c, off in enumerate(offsets):
+        sl = pl.load(x_ref, (pl.ds(base + off, tile_rows), slice(None)))
+        acc = acc + w_ref[c, 0].astype(jnp.float32) * sl.astype(jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def fused_stencil_rows(x_halo: jax.Array, weights: jax.Array,
+                       row_offsets, out_rows: int, halo_lo: int,
+                       tile_rows: int = 256, interpret: bool = True):
+    """2-D canonical form.
+
+    x_halo: (out_rows + halo_lo + halo_hi, C) — input rows with halo padding.
+    row_offsets: per operator element, row shift in [-halo_lo, +halo_hi].
+    Returns (out_rows, C).
+    """
+    R, C = out_rows, x_halo.shape[1]
+    tiles = -(-R // tile_rows)
+    pad_r = tiles * tile_rows + (x_halo.shape[0] - R) - x_halo.shape[0]
+    if pad_r > 0:
+        x_halo = jnp.pad(x_halo, ((0, pad_r), (0, 0)))
+    w2 = weights.reshape(-1, 1).astype(jnp.float32)
+    # shift offsets to be relative to the slab start (all ≥ 0)
+    offs = tuple(int(o) + halo_lo for o in np.asarray(row_offsets))
+
+    kernel = functools.partial(_stencil_kernel, offsets=offs,
+                               tile_rows=tile_rows)
+    out = pl.pallas_call(
+        kernel,
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec(block_shape=None),          # whole array (HBM ref)
+            pl.BlockSpec((w2.shape[0], 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tiles * tile_rows, C), x_halo.dtype),
+        interpret=interpret,
+    )(x_halo, w2)
+    return out[:R]

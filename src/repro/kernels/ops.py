@@ -1,0 +1,144 @@
+"""jit'd wrappers: rank-agnostic canonicalization → Pallas kernels.
+
+The canonical trick (melt_stencil.py docstring): a stride-1 'same' stencil
+on any rank is computed at EVERY position of the halo-padded flattened
+tensor (output row r ↔ padded flat row r, offsets = QuasiGrid.flat_offsets)
+and the valid grid region is cropped afterwards — pad positions cost
+(P−N)/N extra compute (a few %) and buy exact flat-offset addressing.
+
+``interpret`` defaults to True off-TPU (this container); on TPU backends
+the same code emits real Pallas kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.grid import QuasiGrid, make_quasi_grid
+from repro.kernels import bilateral as _bil
+from repro.kernels import local_attn as _la
+from repro.kernels import melt_stencil as _ms
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_for(x, grid: QuasiGrid, pad_value):
+    pads = list(zip(grid.pad_lo, grid.pad_hi))
+    if pad_value == "edge":
+        return jnp.pad(x, pads, mode="edge")
+    return jnp.pad(x, pads, constant_values=pad_value)
+
+
+def _canonical(x, grid: QuasiGrid, pad_value):
+    """(x_flat (P,1), offsets, halo_lo, crop_fn)."""
+    xp = _pad_for(x, grid, pad_value)
+    flat = xp.reshape(-1, 1)
+    offs = grid.flat_offsets()
+    halo_lo = int(-offs.min()) if offs.size else 0
+    halo_hi = int(max(0, offs.max()))
+    # extend with halo rows so every padded position can be computed
+    flat = jnp.pad(flat, ((halo_lo, halo_hi), (0, 0)))
+    pshape = grid.padded_shape
+
+    def crop(rows):
+        out = rows.reshape(pshape)
+        slices = tuple(slice(lo, lo + n)
+                       for lo, n in zip(grid.pad_lo, grid.in_shape))
+        return out[slices]
+
+    return flat, offs, halo_lo, int(np.prod(pshape)), crop
+
+
+@functools.partial(jax.jit, static_argnames=("grid", "pad_value", "interpret"))
+def fused_stencil(x, grid: QuasiGrid, weights, pad_value=0.0,
+                  interpret=None):
+    """Rank-agnostic fused melt×contract (stride-1 'same' grids)."""
+    if grid.stride != (1,) * grid.rank or grid.padding != "same":
+        raise NotImplementedError("fused path covers stride-1 'same' stencils")
+    interpret = _interpret_default() if interpret is None else interpret
+    flat, offs, halo_lo, total, crop = _canonical(x, grid, pad_value)
+    rows = _ms.fused_stencil_rows(
+        flat, jnp.asarray(weights), offs, total, halo_lo,
+        interpret=interpret)
+    return crop(rows[:, 0]).astype(x.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("op_shape", "sigma_d", "sigma_r", "pad_value", "interpret"),
+)
+def fused_bilateral(x, op_shape, sigma_d, sigma_r="adaptive",
+                    pad_value="edge", interpret=None):
+    """Rank-agnostic bilateral filter (paper Eq. 3) via the Pallas kernel."""
+    from repro.core.filters import _spatial_log_weights
+
+    interpret = _interpret_default() if interpret is None else interpret
+    rank = x.ndim
+    op = (op_shape,) * rank if isinstance(op_shape, int) else tuple(op_shape)
+    grid = make_quasi_grid(x.shape, op, 1, "same", 1)
+    log_sp = _spatial_log_weights(grid, sigma_d)
+    center = int(np.ravel_multi_index(
+        tuple((k - 1) // 2 for k in grid.op_shape), grid.op_shape))
+    flat, offs, halo_lo, total, crop = _canonical(
+        x.astype(jnp.float32), grid, pad_value)
+    rows = _bil.bilateral_rows(
+        flat, log_sp, offs, total, halo_lo, center, sigma_r=sigma_r,
+        interpret=interpret)
+    return crop(rows[:, 0]).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "tile", "interpret"))
+def sliding_window_attention(q, k, v, window: int, tile: int = 128,
+                             interpret=None):
+    """(B,S,H,dh) sliding-window flash attention (melt over sequence)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _la.local_attention(q, k, v, window, tile=tile,
+                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def depthwise_conv1d(x, w, interpret=None):
+    """Causal depthwise conv (B,L,C)·(K,C) — per-channel weighted melt.
+
+    Channel-in-lanes layout: offsets shift L rows per batch; implemented via
+    the generic stencil kernel applied per (batch, tap) shift with
+    per-channel weights broadcast in lanes.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    B, L, C = x.shape
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    return _dw(xp, w.astype(x.dtype), L, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("L", "interpret"))
+def _dw(xp, w, L, interpret):
+    import functools as ft
+
+    from jax.experimental import pallas as pl
+
+    B, LP, C = xp.shape
+    K = w.shape[0]
+
+    def kernel(x_ref, w_ref, o_ref):
+        b = pl.program_id(0)
+        acc = jnp.zeros((L, C), jnp.float32)
+        for k in range(K):
+            sl = pl.load(x_ref, (b, pl.ds(k, L), slice(None)))
+            acc = acc + sl.astype(jnp.float32) * w_ref[k, :][None, :].astype(jnp.float32)
+        pl.store(o_ref, (b, slice(None), slice(None)), acc.astype(o_ref.dtype))
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[pl.BlockSpec(block_shape=None),
+                  pl.BlockSpec(block_shape=None)],
+        out_specs=pl.BlockSpec(block_shape=None),
+        out_shape=jax.ShapeDtypeStruct((B, L, C), xp.dtype),
+        interpret=interpret,
+    )(xp, w)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+- ``stencil_ref``          : materialized melt matrix → M @ w (paper-faithful)
+- ``depthwise_conv1d_ref`` : causal depthwise conv (melt window over L)
+- ``local_attention_ref``  : dense masked sliding-window attention
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.grid import make_quasi_grid
+from repro.core.melt import melt, unmelt
+
+
+def stencil_ref(x, op_shape, weights, pad_value=0.0):
+    """Rank-agnostic linear stencil via the materialized melt matrix."""
+    M = melt(x, op_shape, pad_value=pad_value)
+    rows = M.data @ jnp.asarray(weights).reshape(-1).astype(M.data.dtype)
+    return unmelt(rows, M.grid)
+
+
+def depthwise_conv1d_ref(x, w):
+    """x (B,L,C), w (K,C) — causal, per-channel."""
+    B, L, C = x.shape
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(xp[:, k : k + L, :] * w[k][None, None, :] for k in range(K))
+
+
+def local_attention_ref(q, k, v, window: int, causal: bool = True):
+    """q,k,v (B,S,H,dh) — dense reference with window+causal mask."""
+    B, S, H, dh = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    s = s / math.sqrt(dh)
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(S)[None, :]
+    m = (qi - kj < window)
+    if causal:
+        m = m & (qi >= kj)
+    else:
+        m = m & (kj - qi < window)
+    s = jnp.where(m[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)

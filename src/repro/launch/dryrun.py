@@ -1,0 +1,128 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay the first statements in this file — jax locks
+the device count at first initialization (see the assignment's dry-run
+spec).  Everything else imports after that.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch grok1_314b \
+        --shape train_4k --mesh multi                             # one cell
+    PYTHONPATH=src python -m repro.launch.dryrun --json out.json  # record
+
+Per cell we print/record: compile wall-time, per-device argument bytes and
+peak memory from ``compiled.memory_analysis()``, HLO flops/bytes from
+``compiled.cost_analysis()``, and the collective-bytes parse of the HLO —
+the roofline inputs (EXPERIMENTS.md §Dry-run / §Roofline).
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+from repro.launch.hlo_stats import collective_bytes_by_kind, cost_summary
+
+
+def skip_reason(cfg, shape_name: str):
+    """Assignment skip rules (DESIGN.md §5)."""
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return "pure full-attention arch at 524k context (O(S²)) — skipped per spec"
+    return None
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+             verbose: bool = True):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    reason = skip_reason(cfg, shape_name)
+    if reason:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": reason}
+    t0 = time.time()
+    bundle = build_step(cfg, mesh, shape)
+    lowered = bundle.lower()
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes_by_kind(compiled.as_text())
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "status": "ok",
+        "kind": shape.kind,
+        "t_lower_s": round(t_lower, 2), "t_compile_s": round(t_compile, 2),
+        "mem": {
+            "argument_gib": mem.argument_size_in_bytes / 2**30,
+            "output_gib": mem.output_size_in_bytes / 2**30,
+            "temp_gib": mem.temp_size_in_bytes / 2**30,
+            "peak_gib": (mem.argument_size_in_bytes + mem.temp_size_in_bytes)
+                        / 2**30,
+        },
+        "cost": cost_summary(cost),
+        "collectives": coll,
+    }
+    if verbose:
+        m = rec["mem"]
+        print(f"  [{mesh_name}] {arch} × {shape_name}: "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s | "
+              f"args {m['argument_gib']:.2f} GiB/dev temp {m['temp_gib']:.2f} "
+              f"GiB/dev | flops/dev {rec['cost'].get('flops', 0)/1e12:.2f} TF "
+              f"| coll {sum(coll.values())/2**30:.3f} GiB/dev", flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES), help="one shape")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--json", default=None, help="write records to this path")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16", make_production_mesh(multi_pod=True)))
+
+    records, failures = [], 0
+    for mesh_name, mesh in meshes:
+        print(f"=== mesh {mesh_name} ({mesh.devices.size} devices) ===", flush=True)
+        for arch in archs:
+            for shape_name in shapes:
+                try:
+                    rec = run_cell(arch, shape_name, mesh, mesh_name)
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                           "status": "error", "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                if rec["status"] == "skipped":
+                    print(f"  [{mesh_name}] {arch} × {shape_name}: SKIP — {rec['reason']}",
+                          flush=True)
+                records.append(rec)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=2)
+        print(f"wrote {len(records)} records → {args.json}")
+    ok = sum(r["status"] == "ok" for r in records)
+    skip = sum(r["status"] == "skipped" for r in records)
+    print(f"DRY-RUN SUMMARY: {ok} ok, {skip} skipped, {failures} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

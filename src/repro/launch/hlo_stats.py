@@ -1,0 +1,81 @@
+"""HLO-text statistics: collective bytes, op census — roofline inputs.
+
+``cost_analysis()`` does not report collective traffic, so we parse the
+compiled HLO: every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute contributes its largest-operand byte size (per device).
+
+NB (calibrated in this container): XLA's cost analysis counts a while-loop
+(lax.scan) body ONCE, not × trip-count — the roofline harness corrects for
+this with a two-point unrolled lowering (see benchmarks/roofline.py).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %ag = bf16[8,1024,512] all-gather(%x), ...
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_by_kind(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes of every collective op, by kind (per device)."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for kind in _COLLECTIVES:
+            # match the op name as `= <shape> kind(` or fusion-inlined calls
+            if f" {kind}(" in stripped or f" {kind}-start(" in stripped:
+                m = _SHAPE_RE.search(stripped.split("=", 1)[-1])
+                if m:
+                    # tuple shapes: take all element shapes on the line
+                    total = 0
+                    rhs = stripped.split("=", 1)[-1].split(f" {kind}", 1)[0]
+                    for mm in _SHAPE_RE.finditer(rhs):
+                        total += _shape_bytes(mm.group(1), mm.group(2))
+                    out[kind] = out.get(kind, 0) + total
+                break
+    return out
+
+
+def op_census(hlo_text: str) -> Dict[str, int]:
+    """Count occurrences of interesting ops (fusion/reshard smell test)."""
+    names = ("fusion", "dot", "convolution", "transpose", "reshape",
+             "dynamic-slice", "dynamic-update-slice", "while", "gather",
+             "scatter") + _COLLECTIVES
+    out = {}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        rhs = s.split("=", 1)[-1]
+        for n in names:
+            if f" {n}(" in rhs:
+                out[n] = out.get(n, 0) + 1
+                break
+    return out
+
+
+def cost_summary(cost: dict) -> dict:
+    """Pick the standard keys out of compiled.cost_analysis()."""
+    keys = ("flops", "bytes accessed", "transcendentals",
+            "optimal_seconds", "utilization")
+    return {k.replace(" ", "_"): float(cost[k]) for k in keys if k in cost}

@@ -1,0 +1,29 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  Single-pod: (16,16) = 256 chips, axes (data, model).
+Multi-pod: (2,16,16) = 512 chips with a leading pure-DP 'pod' axis riding
+the inter-pod DCN links.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over host devices for tests/examples."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto),
+    )

@@ -1,0 +1,232 @@
+"""Step builders: train / prefill / serve(decode) with full sharding wiring.
+
+``build_step(cfg, mesh, shape)`` returns a :class:`StepBundle`: the jit-able
+function, its in/out shardings, and ShapeDtypeStruct input specs — enough
+for both the real launcher (device_put + call) and the dry-run
+(.lower(**specs).compile()).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import build_model
+from repro.models.layers import AxisNames
+from repro.optim import adamw
+from repro.optim.schedule import warmup_cosine
+from repro.parallel.sharding import (
+    LogicalRules,
+    axis_rules_for,
+    logical_to_spec,
+    set_rules,
+    shardings_for_tree,
+)
+
+
+@dataclasses.dataclass
+class StepBundle:
+    kind: str
+    fn: Callable  # jit-ready python callable
+    in_shardings: Any
+    out_shardings: Any
+    input_specs: Dict[str, Any]  # name → ShapeDtypeStruct tree (step inputs)
+    rules: LogicalRules
+    mesh: Mesh
+    donate_argnums: Tuple[int, ...] = ()
+
+    def jitted(self):
+        return jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+
+    def lower(self):
+        """AOT-lower against the ShapeDtypeStruct input specs (no allocation)."""
+        with self.mesh:
+            return self.jitted().lower(*self.input_specs.values())
+
+
+def _batch_spec(rules, *extra):
+    return logical_to_spec(("batch",) + extra, rules)
+
+
+def batch_input_specs(cfg: ArchConfig, shape: ShapeSpec, rules) -> Tuple[Dict, Dict]:
+    """(ShapeDtypeStructs, NamedSharding-specs) for a train/prefill batch."""
+    B, S = shape.global_batch, shape.seq_len
+    cd = jnp.dtype(cfg.compute_dtype)
+    specs, shards = {}, {}
+    s_tokens = S - cfg.n_vis_tokens if cfg.n_vis_tokens else S
+    specs["tokens"] = jax.ShapeDtypeStruct((B, s_tokens), jnp.int32)
+    shards["tokens"] = _batch_spec(rules, None)
+    if shape.kind == "train":
+        specs["targets"] = jax.ShapeDtypeStruct((B, s_tokens), jnp.int32)
+        shards["targets"] = _batch_spec(rules, None)
+    if cfg.n_vis_tokens:
+        specs["vis_embed"] = jax.ShapeDtypeStruct((B, cfg.n_vis_tokens, cfg.d_model), cd)
+        shards["vis_embed"] = _batch_spec(rules, None, None)
+    if cfg.n_enc_layers:
+        specs["enc_embed"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), cd)
+        shards["enc_embed"] = _batch_spec(rules, None, None)
+    return specs, shards
+
+
+def param_shapes_and_shardings(cfg: ArchConfig, mesh: Mesh, rules):
+    model = build_model(cfg)
+    p_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_axes = model.param_axes()
+    p_shard = shardings_for_tree(p_shapes, p_axes, mesh, rules)
+    return model, p_shapes, p_axes, p_shard
+
+
+def build_train_step(cfg: ArchConfig, mesh: Mesh, shape: ShapeSpec,
+                     lr: float = 3e-4, warmup_steps: int = 200,
+                     total_steps: int = 10_000,
+                     compute_rules=None) -> StepBundle:
+    rules = compute_rules or axis_rules_for(
+        cfg, mesh, "train", batch_size=shape.global_batch, seq_len=shape.seq_len)
+    model, p_shapes, p_axes, p_shard = param_shapes_and_shardings(cfg, mesh, rules)
+    opt_dtype = jnp.dtype(cfg.opt_dtype)
+    o_shapes = jax.eval_shape(
+        functools.partial(adamw.init, moment_dtype=opt_dtype), p_shapes)
+    rep = NamedSharding(mesh, P())
+    o_shard = adamw.AdamWState(
+        step=rep,
+        mu=jax.tree.map(lambda s: s, p_shard),
+        nu=jax.tree.map(lambda s: s, p_shard),
+    )
+    b_specs, b_shard_specs = batch_input_specs(cfg, shape, rules)
+    b_shard = {k: NamedSharding(mesh, v) for k, v in b_shard_specs.items()}
+    schedule = warmup_cosine(lr, warmup_steps, total_steps)
+
+    mb = max(1, cfg.microbatches)
+
+    def train_step(params, opt_state, batch):
+        set_rules(rules)
+
+        def loss_of(p, b):
+            loss, metrics = model.loss_fn(p, b)
+            return loss, metrics
+
+        if mb == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+        else:
+            # microbatched grad accumulation: transient activation memory
+            # scales 1/mb; grad reduce-scatter overlaps the next microbatch
+            mbatch = jax.tree.map(
+                lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:]),
+                batch)
+
+            def mb_body(acc, b):
+                (l, m), g = jax.value_and_grad(loss_of, has_aux=True)(params, b)
+                acc = jax.tree.map(lambda a, gg: a + gg.astype(a.dtype), acc, g)
+                return acc, (l, m)
+
+            gd = jnp.dtype(cfg.grad_dtype)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, gd), params)
+            grads, (losses, ms) = jax.lax.scan(mb_body, zeros, mbatch)
+            grads = jax.tree.map(lambda g: g / mb, grads)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+        new_params, new_opt = adamw.update(grads, opt_state, params, lr=schedule)
+        out_metrics = {"loss": loss, **metrics,
+                       "gnorm_proxy": jnp.float32(0.0)}
+        return new_params, new_opt, out_metrics
+
+    metrics_shard = {"loss": rep, "ce": rep, "aux": rep, "gnorm_proxy": rep}
+    return StepBundle(
+        kind="train",
+        fn=train_step,
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, metrics_shard),
+        input_specs={"params": p_shapes, "opt_state": o_shapes, "batch": b_specs},
+        rules=rules,
+        mesh=mesh,
+        donate_argnums=(0, 1),
+    )
+
+
+def build_prefill_step(cfg: ArchConfig, mesh: Mesh, shape: ShapeSpec) -> StepBundle:
+    rules = axis_rules_for(cfg, mesh, "prefill",
+                           batch_size=shape.global_batch, seq_len=shape.seq_len)
+    model, p_shapes, p_axes, p_shard = param_shapes_and_shardings(cfg, mesh, rules)
+    b_specs, b_shard_specs = batch_input_specs(cfg, shape, rules)
+    b_shard = {k: NamedSharding(mesh, v) for k, v in b_shard_specs.items()}
+
+    def prefill_step(params, batch):
+        set_rules(rules)
+        logits, caches = model.prefill(params, batch)
+        return logits, caches
+
+    # cache output shardings
+    c_shapes = jax.eval_shape(
+        lambda p, b: model.prefill(p, b)[1], p_shapes, b_specs)
+    c_shard = shardings_for_tree(c_shapes, model.cache_axes(), mesh, rules)
+    logits_shard = NamedSharding(mesh, logical_to_spec(("batch", "vocab"), rules))
+    return StepBundle(
+        kind="prefill",
+        fn=prefill_step,
+        in_shardings=(p_shard, b_shard),
+        out_shardings=(logits_shard, c_shard),
+        input_specs={"params": p_shapes, "batch": b_specs},
+        rules=rules,
+        mesh=mesh,
+    )
+
+
+def build_serve_step(cfg: ArchConfig, mesh: Mesh, shape: ShapeSpec) -> StepBundle:
+    """One-token decode against a seq_len cache (decode_* / long_* shapes)."""
+    B, S = shape.global_batch, shape.seq_len
+    rules = axis_rules_for(cfg, mesh, "decode", batch_size=B, seq_len=S)
+    model, p_shapes, p_axes, p_shard = param_shapes_and_shardings(cfg, mesh, rules)
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    c_shapes = jax.eval_shape(
+        functools.partial(model.init_caches, B, S), )
+    c_axes = model.cache_axes()
+    c_shard = shardings_for_tree(c_shapes, c_axes, mesh, rules)
+
+    tok_spec = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos_spec = jax.ShapeDtypeStruct((B,), jnp.int32)
+    tok_shard = NamedSharding(mesh, logical_to_spec(("batch",), rules))
+    # enc-dec decode reads cross-attention K/V from the prefilled cache, so
+    # no encoder output is re-fed at decode time.
+    extras_specs, extras_shard = {}, {}
+
+    def serve_step(params, token, pos, caches, extras):
+        set_rules(rules)
+        logits, new_caches = model.decode_step(
+            params, token, pos, caches, enc_out=extras.get("enc_out"))
+        return logits, new_caches
+
+    logits_shard = NamedSharding(mesh, logical_to_spec(("batch", "vocab"), rules))
+    return StepBundle(
+        kind="decode",
+        fn=serve_step,
+        in_shardings=(p_shard, tok_shard, tok_shard, c_shard, extras_shard),
+        out_shardings=(logits_shard, c_shard),
+        input_specs={"params": p_shapes, "token": tok_spec, "pos": pos_spec,
+                     "caches": c_shapes, "extras": extras_specs},
+        rules=rules,
+        mesh=mesh,
+        donate_argnums=(3,),
+    )
+
+
+def build_step(cfg: ArchConfig, mesh: Mesh, shape: ShapeSpec) -> StepBundle:
+    if shape.kind == "train":
+        return build_train_step(cfg, mesh, shape)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, mesh, shape)
+    if shape.kind == "decode":
+        return build_serve_step(cfg, mesh, shape)
+    raise ValueError(shape.kind)

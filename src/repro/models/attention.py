@@ -1,0 +1,368 @@
+"""Attention: GQA, MLA, sliding-window (melt-over-sequence), caches.
+
+Three execution regimes:
+- ``train`` / ``prefill``: chunked online-softmax attention (pure-JAX flash,
+  scan over KV chunks, f32 accumulators) — O(S·chunk) memory, never
+  materializes (S,S) score tensors (required for the 32k shapes).
+- windowed layers use **banded block attention**: the sequence is cut into
+  window-sized blocks and each query block attends to (prev, self) blocks —
+  this is exactly a stride-1 melt over the sequence grid with op extent 2W
+  (DESIGN.md §4); compute is O(S·2W).
+- ``decode``: single-token query against a cache.  GQA keeps (K,V); windowed
+  layers keep a ring buffer of W entries; MLA caches the *latent* (kv_lora +
+  rope) and uses matrix absorption for scores/values.
+
+GQA is computed in grouped form (B,S,KV,G,dh) — KV heads are never
+physically repeated.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, ones_init
+from repro.parallel.sharding import constrain
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def attention_params(cfg, key, cross: bool = False):
+    D, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    if cfg.use_mla and not cross:
+        qd = cfg.nope_dim + cfg.rope_dim
+        p = {}
+        if cfg.q_lora:
+            p["wq_a"] = dense_init(ks[0], (D, cfg.q_lora), ("embed", "mla_latent"))
+            p["q_norm"] = ones_init((cfg.q_lora,), ("norm",))
+            p["wq_b"] = dense_init(ks[1], (cfg.q_lora, H, qd), ("mla_latent", "qkv", None))
+        else:
+            p["wq"] = dense_init(ks[0], (D, H, qd), ("embed", "qkv", None))
+        p["wkv_a"] = dense_init(ks[2], (D, cfg.kv_lora + cfg.rope_dim), ("embed", None))
+        p["kv_norm"] = ones_init((cfg.kv_lora,), ("norm",))
+        p["wkv_b"] = dense_init(
+            ks[3], (cfg.kv_lora, H, cfg.nope_dim + cfg.v_head_dim),
+            ("mla_latent", "qkv", None),
+        )
+        p["wo"] = dense_init(ks[4], (H, cfg.v_head_dim, D), ("qkv", None, "embed"))
+        return p
+    return {
+        "wq": dense_init(ks[0], (D, H, dh), ("embed", "qkv", None)),
+        "wk": dense_init(ks[1], (D, KV, dh), ("embed", "kv_heads", None)),
+        "wv": dense_init(ks[2], (D, KV, dh), ("embed", "kv_heads", None)),
+        "wo": dense_init(ks[3], (H, dh, D), ("qkv", None, "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# masks & math
+# ---------------------------------------------------------------------------
+
+
+def _mask(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """(..., Sq, Sk) boolean validity mask from absolute positions."""
+    m = k_pos[..., None, :] < 2**29  # poisoned/padded keys are invalid
+    m = jnp.broadcast_to(
+        m, q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1])
+    )
+    if causal:
+        m = m & (q_pos[..., :, None] >= k_pos[..., None, :])
+    if window is not None:
+        m = m & ((q_pos[..., :, None] - k_pos[..., None, :]) < window)
+    return m
+
+
+def _repeat_kv(k, H):
+    """(B,S,KV,dh) → (B,S,H,dh).  Under head-sharded TP each device only
+    materializes its local heads' copies, so this is sharding-friendly
+    (per-head einsums propagate cleanly through SPMD, unlike grouped dims).
+    """
+    KV = k.shape[2]
+    if KV == H:
+        return k
+    return jnp.repeat(k, H // KV, axis=2)
+
+
+def chunked_attention(q, k, v, q_pos, k_pos, *, causal, window, kv_chunk=1024,
+                      softmax_scale=None):
+    """Online-softmax attention over KV chunks.  Shapes:
+    q (B,Sq,H,dh) / k,v (B,Sk,KV,dh) → out (B,Sq,H,dv).
+    """
+    B, Sq, H, dh = q.shape
+    Sk = k.shape[1]
+    dv = v.shape[-1]  # may differ from dh (MLA)
+    scale = softmax_scale or (1.0 / math.sqrt(dh))
+    qh = q * scale
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    nchunks = -(-Sk // kv_chunk)
+    if nchunks <= 1:
+        s = jnp.einsum("bqhd,bkhd->bhqk", qh, k,
+                       preferred_element_type=jnp.float32)
+        s = jnp.where(_mask(q_pos, k_pos, causal, window)[:, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+        return out
+
+    pad = nchunks * kv_chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=2**30)
+    kc = k.reshape(B, nchunks, kv_chunk, H, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunks, kv_chunk, H, dv).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(B, nchunks, kv_chunk).transpose(1, 0, 2)
+
+    # checkpoint: without it autodiff saves every chunk's (B,H,Sq,chunk)
+    # score tensor for the backward — exactly the S² memory flash avoids
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        kb, vb, kp = xs
+        s = jnp.einsum("bqhd,bkhd->bhqk", qh, kb,
+                       preferred_element_type=jnp.float32)
+        valid = _mask(q_pos, kp, causal, window)[:, None]
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def banded_attention(q, k, v, window: int, softmax_scale=None):
+    """Sliding-window attention as a melt over the sequence grid.
+
+    Each query block (size W) attends to its own + previous key blocks
+    (2W keys) — the melt rows of op extent 2W, stride W.  O(S·2W) compute.
+    Requires S % W == 0.
+    """
+    B, S, H, dh = q.shape
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    W = window
+    S0 = S
+    if S % W:  # pad to a whole number of window blocks; pad keys are masked
+        pad = W - S % W
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nb = S // W
+    scale = softmax_scale or (1.0 / math.sqrt(dh))
+    qb = (q * scale).reshape(B, nb, W, H, dh)
+    kb = k.reshape(B, nb, W, H, dh)
+    vb = v.reshape(B, nb, W, H, dh)
+    # halo: previous block (zero block for the first) — the melt-row halo
+    kprev = jnp.pad(kb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    vprev = jnp.pad(vb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    k2 = jnp.concatenate([kprev, kb], axis=2)  # (B,nb,2W,H,dh)
+    v2 = jnp.concatenate([vprev, vb], axis=2)
+    s = jnp.einsum("bnqhd,bnshd->bnhqs", qb, k2,
+                   preferred_element_type=jnp.float32)
+    qi = jnp.arange(W)[:, None] + W       # (W, 1) position in the 2W tile
+    kj = jnp.arange(2 * W)[None, :]       # (1, 2W)
+    band = (qi >= kj) & (qi - kj < W)     # (W, 2W) causal + window
+    first_block = (jnp.arange(nb) == 0)   # (nb,)
+    # the first block's "previous" half is padding → invalid
+    valid_k = ~(first_block[:, None] & (kj[0] < W)[None, :])  # (nb, 2W)
+    # absolute key position per (block, tile-slot): mask sequence padding
+    abs_k = (jnp.arange(nb)[:, None] - 1) * W + kj[0][None, :]
+    valid_k = valid_k & (abs_k < S0)
+    mask = band[None, :, :] & valid_k[:, None, :]             # (nb, W, 2W)
+    s = jnp.where(mask[None, :, None], s, NEG_INF)  # (1,nb,1,W,2W)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bnhqs,bnshd->bnqhd", p, v2)
+    return out.reshape(B, S, H, dh)[:, :S0]
+
+
+# ---------------------------------------------------------------------------
+# full layer application (projections + cache handling)
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, Smax, KV, dh)   [ring of W entries for windowed]
+    v: jax.Array
+
+
+class MLACache(NamedTuple):
+    latent: jax.Array  # (B, Smax, kv_lora)
+    k_rope: jax.Array  # (B, Smax, rope_dim)
+
+
+def init_cache(cfg, batch: int, max_len: int, window: Optional[int], dtype):
+    length = min(window, max_len) if window else max_len
+    if cfg.use_mla:
+        return MLACache(
+            latent=jnp.zeros((batch, length, cfg.kv_lora), dtype),
+            k_rope=jnp.zeros((batch, length, cfg.rope_dim), dtype),
+        )
+    return KVCache(
+        k=jnp.zeros((batch, length, cfg.n_kv, cfg.head_dim), dtype),
+        v=jnp.zeros((batch, length, cfg.n_kv, cfg.head_dim), dtype),
+    )
+
+
+def _cache_axes(cfg):
+    if cfg.use_mla:
+        return MLACache(latent=("batch", "cache_seq", None),
+                        k_rope=("batch", "cache_seq", None))
+    return KVCache(k=("batch", "cache_seq", "kv_heads", None),
+                   v=("batch", "cache_seq", "kv_heads", None))
+
+
+def gqa_apply(cfg, p, x, *, positions, mode, cache=None, window=None,
+              causal=True, rope=True, kv_override=None, kv_chunk=None):
+    kv_chunk = kv_chunk or cfg.kv_chunk
+    """Standard / GQA attention.  Returns (out, new_cache).
+
+    ``kv_override``: (k, v, k_pos) for cross-attention (encoder memory).
+    """
+    B, S, D = x.shape
+    cd = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    if kv_override is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cd))
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cd))
+        if rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        k_pos = positions
+    else:
+        k, v, k_pos = kv_override
+    q = constrain(q, "batch", "seq_act", "heads", None)
+
+    new_cache = cache
+    if mode == "decode" and kv_override is None:
+        pos = positions[:, 0]  # (B,) current absolute position
+        W = cache.k.shape[1]
+        slot = (pos % W) if window else pos
+        bidx = jnp.arange(B)
+        ck = cache.k.at[bidx, slot].set(k[:, 0].astype(cache.k.dtype))
+        cv = cache.v.at[bidx, slot].set(v[:, 0].astype(cache.v.dtype))
+        new_cache = KVCache(ck, cv)
+        k, v = ck.astype(cd), cv.astype(cd)
+        if window:
+            idx = jnp.arange(W)[None, :]
+            age = pos[:, None] % W  # ring slot of the current token
+            # absolute position stored in each ring slot:
+            k_pos = pos[:, None] + (idx - age) - jnp.where(idx > age, W, 0)
+            # slots never written yet (pos < W) → poison so causal masks them
+            k_pos = jnp.where(k_pos < 0, 2**30, k_pos)
+        else:
+            k_pos = jnp.broadcast_to(jnp.arange(k.shape[1])[None], (B, k.shape[1]))
+        out = chunked_attention(q, k, v, positions, k_pos, causal=causal,
+                                window=window, kv_chunk=kv_chunk)
+    elif mode == "prefill" and kv_override is None:
+        if window:
+            out = banded_attention(q, k, v, window)
+            # ring cache keeps the last W tokens
+            ck, cv = k[:, -window:], v[:, -window:]
+            # roll so that slot (pos % W) layout matches decode expectations
+            shift = (S % window)
+            ck = jnp.roll(ck, shift, axis=1)
+            cv = jnp.roll(cv, shift, axis=1)
+            new_cache = KVCache(ck.astype(cache.k.dtype) if cache else ck.astype(cd),
+                                cv.astype(cache.v.dtype) if cache else cv.astype(cd))
+        else:
+            out = chunked_attention(q, k, v, positions, k_pos, causal=causal,
+                                    window=None, kv_chunk=kv_chunk)
+            new_cache = KVCache(k.astype(cd), v.astype(cd))
+    else:  # train, or cross-attention (no self cache)
+        if window and S > window and kv_override is None:
+            out = banded_attention(q, k, v, window)
+        else:
+            out = chunked_attention(q, k, v, positions, k_pos, causal=causal,
+                                    window=window, kv_chunk=kv_chunk)
+    out = constrain(out, "batch", "seq_act", "heads", None)
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+    return o, new_cache
+
+
+def mla_apply(cfg, p, x, *, positions, mode, cache=None, kv_chunk=None):
+    kv_chunk = kv_chunk or cfg.kv_chunk
+    """Multi-head latent attention (deepseek-v2 / minicpm3).
+
+    train/prefill: up-project latent to full K/V.  decode: matrix-absorbed
+    scores and values against the latent cache (production MLA serving).
+    """
+    B, S, D = x.shape
+    cd = x.dtype
+    H = cfg.n_heads
+    dn, dr, dv = cfg.nope_dim, cfg.rope_dim, cfg.v_head_dim
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    if cfg.q_lora:
+        from repro.models.layers import rms_norm
+
+        cq = rms_norm(x @ p["wq_a"].astype(cd), p["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsq,qhk->bshk", cq, p["wq_b"].astype(cd))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = x @ p["wkv_a"].astype(cd)  # (B,S,lora+dr)
+    latent, k_rope = kv_a[..., : cfg.kv_lora], kv_a[..., cfg.kv_lora :]
+    from repro.models.layers import rms_norm
+
+    latent = rms_norm(latent, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+
+    new_cache = cache
+    if mode == "decode":
+        pos = positions[:, 0]
+        bidx = jnp.arange(B)
+        lat = cache.latent.at[bidx, pos].set(latent[:, 0].astype(cache.latent.dtype))
+        krp = cache.k_rope.at[bidx, pos].set(k_rope[:, 0].astype(cache.k_rope.dtype))
+        new_cache = MLACache(lat, krp)
+        latent_all, k_rope_all = lat.astype(cd), krp.astype(cd)
+        T = latent_all.shape[1]
+        wkv_b = p["wkv_b"].astype(cd)
+        # absorb q_nope through the K up-projection: (B,1,H,dn)·(lora,H,dn)
+        q_lat = jnp.einsum("bshk,qhk->bshq", q_nope, wkv_b[..., :dn])
+        s = jnp.einsum("bshq,btq->bhst", q_lat, latent_all,
+                       preferred_element_type=jnp.float32)
+        s = s + jnp.einsum("bshk,btk->bhst", q_rope, k_rope_all,
+                           preferred_element_type=jnp.float32)
+        s = s * scale
+        k_pos = jnp.arange(T)[None, :]
+        s = jnp.where((k_pos <= pos[:, None])[:, None, None, :], s, NEG_INF)
+        prob = jax.nn.softmax(s, axis=-1).astype(cd)
+        ctx_lat = jnp.einsum("bhst,btq->bshq", prob, latent_all)
+        out = jnp.einsum("bshq,qhk->bshk", ctx_lat, wkv_b[..., dn:])
+    else:
+        wkv_b = p["wkv_b"].astype(cd)
+        kv = jnp.einsum("bsq,qhk->bshk", latent, wkv_b)
+        k_nope, v = kv[..., :dn], kv[..., dn:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))],
+            axis=-1,
+        )
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = chunked_attention(qf, k, v, positions, positions, causal=True,
+                                window=None, kv_chunk=kv_chunk,
+                                softmax_scale=scale)
+        if mode == "prefill":
+            new_cache = MLACache(latent.astype(cd), k_rope.astype(cd))
+    out = constrain(out, "batch", "seq_act", "heads", None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd)), new_cache

@@ -1,0 +1,212 @@
+"""Shared neural building blocks (pure JAX, pytree params).
+
+All initializers return (params, logical_axes) pairs so the sharding planner
+can mirror every tensor; everything is rank/shape-driven by the ArchConfig.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import constrain
+
+# ---------------------------------------------------------------------------
+# init helpers: params and their logical axes are built as twin pytrees.
+# AxisNames is a tree-opaque leaf so axes trees can be tree.map'ed safely.
+# ---------------------------------------------------------------------------
+
+
+class AxisNames(tuple):
+    """Logical axis names of one parameter; a pytree *leaf*, not a node."""
+
+
+def is_axes(x) -> bool:
+    return isinstance(x, AxisNames)
+
+
+def map_axes(f, tree):
+    return jax.tree.map(f, tree, is_leaf=is_axes)
+
+
+def dense_init(key, shape, axes, scale: Optional[float] = None, dtype=jnp.float32):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return jax.random.normal(key, shape, dtype) * scale, AxisNames(axes)
+
+
+def zeros_init(shape, axes, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype), AxisNames(axes)
+
+
+def ones_init(shape, axes, dtype=jnp.float32):
+    return jnp.ones(shape, dtype), AxisNames(axes)
+
+
+def split_tree(pairs):
+    """Nested dict of (param, AxisNames) pairs → (params_dict, axes_dict)."""
+    params, axes = {}, {}
+    for k, v in pairs.items():
+        if isinstance(v, dict):
+            params[k], axes[k] = split_tree(v)
+        else:
+            params[k], axes[k] = v
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps: float):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x, weight, bias, eps: float):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight + bias).astype(dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down, compute_dtype):
+    x = x.astype(compute_dtype)
+    h = jax.nn.silu(x @ w_gate.astype(compute_dtype)) * (x @ w_up.astype(compute_dtype))
+    h = constrain(h, "batch", None, "ff")
+    return h @ w_down.astype(compute_dtype)
+
+
+def gelu_mlp(x, w_in, b_in, w_out, b_out, compute_dtype):
+    x = x.astype(compute_dtype)
+    h = jax.nn.gelu(x @ w_in.astype(compute_dtype) + b_in.astype(compute_dtype))
+    h = constrain(h, "batch", None, "ff")
+    return h @ w_out.astype(compute_dtype) + b_out.astype(compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings — computed on the fly (no 500k-row tables in HBM)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, Dh) or (..., S, Dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)  # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    if x.ndim == cos.ndim + 1:  # head axis present
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = x[..., : dh // 2], x[..., dh // 2 :]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int) -> np.ndarray:
+    pos = np.arange(length)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    angle = pos / np.power(10_000.0, 2 * i / dim)
+    out = np.zeros((length, dim), np.float32)
+    out[:, 0::2] = np.sin(angle)
+    out[:, 1::2] = np.cos(angle)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d — the melt engine's 1-D fused form (DESIGN.md §4):
+# a width-K causal window over the sequence grid is a melt with op_shape
+# (K,) and the contraction below is exactly `melt_row @ w` per channel.
+# ---------------------------------------------------------------------------
+
+
+def causal_depthwise_conv1d(x, w, cache: Optional[jax.Array] = None):
+    """x: (B, L, C); w: (K, C).  Returns (out, new_cache).
+
+    With a cache (B, K-1, C) this is the streaming/decode form: the cache is
+    the melt-row halo carried across step boundaries (paper §2.4 slab halo).
+    """
+    K = w.shape[0]
+    if cache is not None:
+        xc = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+        new_cache = xc[:, -(K - 1):, :] if K > 1 else cache
+    else:
+        xc = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+        new_cache = None
+    L = x.shape[1]
+    out = sum(
+        xc[:, k : k + L, :] * w[k][None, None, :].astype(x.dtype)
+        for k in range(K)
+    )
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# embedding lookup with a matmul backward
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def embedding_lookup(table, tokens):
+    """Gather forward; one-hot×grad matmul backward.
+
+    The default VJP of a gather is a scatter-add, which SPMD materializes as
+    a full f32 (V,D) buffer per device (3+ GiB for 131k vocabs).  The
+    backward here is a dot that partitions cleanly across a vocab-sharded
+    table: grad_table[v] = Σ_{positions with token v} grad_x.
+    """
+    return table[tokens]
+
+
+def _emb_fwd(table, tokens):
+    # static shape/dtype travel via zero-size residual arrays
+    meta = jnp.zeros((0,) + table.shape, table.dtype)
+    return table[tokens], (tokens, meta)
+
+
+def _emb_bwd(res, g):
+    tokens, meta = res
+    V, D = meta.shape[1], meta.shape[2]
+    dtype = meta.dtype
+    flat_t = tokens.reshape(-1)
+    flat_g = g.reshape(-1, D)
+    oh = jax.nn.one_hot(flat_t, V, dtype=flat_g.dtype)  # (N, V) — fused iota
+    oh = constrain(oh, "batch", "vocab")  # (N/dp, V/tp) per device
+    gt = jnp.einsum("nv,nd->vd", oh, flat_g,
+                    preferred_element_type=jnp.float32)
+    return gt.astype(dtype), None
+
+
+embedding_lookup.defvjp(_emb_fwd, _emb_bwd)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits, targets, mask=None, z_loss: float = 0.0):
+    """logits (B,S,V) f32-upcast CE with optional z-loss; targets (B,S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * lse**2
+    if mask is not None:
+        loss = loss * mask
+        return loss.sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss.mean()

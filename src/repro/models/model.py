@@ -1,0 +1,254 @@
+"""Model facade: build(config) → init / loss / prefill / decode + axes trees.
+
+The facade owns the embedding, layer groups, final norm, LM head, the
+whisper encoder stack, and the internvl2 visual-token merge (frontend stub
+per the assignment: ``vis_embed`` arrives precomputed).
+
+Every param/cache tree has a twin *axes* tree (AxisNames leaves) consumed by
+the sharding planner — models never import mesh code.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, LayerKind
+from repro.models import transformer as tfm
+from repro.models.layers import (
+    AxisNames,
+    dense_init,
+    map_axes,
+    ones_init,
+    rms_norm,
+    sinusoidal_positions,
+    softmax_cross_entropy,
+    split_tree,
+)
+from repro.parallel.sharding import constrain
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        ks = jax.random.split(key, 8 + len(cfg.layer_groups))
+        top = {
+            "embed": dense_init(ks[0], (cfg.vocab, cfg.d_model),
+                                ("vocab", "embed"), scale=0.02),
+            "final_norm": ones_init((cfg.d_model,), ("norm",)),
+        }
+        if not cfg.tie_embeddings:
+            top["head"] = dense_init(ks[1], (cfg.d_model, cfg.vocab),
+                                     ("embed", "vocab"))
+        if cfg.pos == "learned":
+            top["pos_embed"] = dense_init(
+                ks[2], (cfg.max_learned_pos, cfg.d_model), (None, "embed"),
+                scale=0.02)
+        params, _ = split_tree(top)
+        params["groups"] = []
+        for i, (count, kind) in enumerate(cfg.layer_groups):
+            stack, _ = tfm.group_params(cfg, count, kind, ks[3 + i])
+            params["groups"].append(stack)
+        if cfg.n_enc_layers:
+            enc_kind = LayerKind(mixer="attn", mlp="gelu", causal=False)
+            stack, _ = tfm.group_params(cfg, cfg.n_enc_layers, enc_kind, ks[-2])
+            enc_norm, _ = split_tree({"n": ones_init((cfg.d_model,), ("norm",))})
+            params["enc"] = {"layers": stack, "final_norm": enc_norm["n"]}
+        return params
+
+    def param_axes(self):
+        cfg = self.cfg
+
+        def axes_of(kind):
+            # run the initializer abstractly — only the AxisNames survive
+            box = {}
+
+            def f(key):
+                stack, axes = tfm.group_params(cfg, 1, kind, key)
+                box["axes"] = axes
+                return stack
+
+            jax.eval_shape(f, jax.random.PRNGKey(0))
+            return box["axes"]
+
+        top = {
+            "embed": AxisNames(("vocab", "embed")),
+            "final_norm": AxisNames(("norm",)),
+        }
+        if not cfg.tie_embeddings:
+            top["head"] = AxisNames(("embed", "vocab"))
+        if cfg.pos == "learned":
+            top["pos_embed"] = AxisNames((None, "embed"))
+        top["groups"] = [axes_of(kind) for _, kind in cfg.layer_groups]
+        if cfg.n_enc_layers:
+            enc_kind = LayerKind(mixer="attn", mlp="gelu", causal=False)
+            top["enc"] = {"layers": axes_of(enc_kind),
+                          "final_norm": AxisNames(("norm",))}
+        return top
+
+    # -------------------------------------------------------------- helpers
+    def _embed(self, params, tokens):
+        from repro.models.layers import embedding_lookup
+
+        cfg = self.cfg
+        cd = jnp.dtype(cfg.compute_dtype)
+        x = embedding_lookup(params["embed"].astype(cd), tokens)
+        return constrain(x, "batch", None, None)  # seq_res applied post-merge
+
+    def _head(self, params, x):
+        cfg = self.cfg
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        w = (params["embed"].T if cfg.tie_embeddings else params["head"])
+        logits = x @ w.astype(x.dtype)
+        return constrain(logits, "batch", "seq_res", "vocab")
+
+    def _encode(self, params, enc_embed):
+        """Whisper encoder (frontend stub: enc_embed is post-conv frames)."""
+        cfg = self.cfg
+        cd = jnp.dtype(cfg.compute_dtype)
+        B, S, _ = enc_embed.shape
+        pos_tab = jnp.asarray(sinusoidal_positions(S, cfg.d_model), cd)
+        x = enc_embed.astype(cd) + pos_tab[None]
+        io = tfm.LayerIO(
+            positions=jnp.broadcast_to(jnp.arange(S)[None], (B, S)),
+            mode="train")
+        enc_kind = LayerKind(mixer="attn", mlp="gelu", causal=False)
+        x, _, _ = tfm.group_apply(cfg, enc_kind, params["enc"]["layers"], x, io)
+        return rms_norm(x, params["enc"]["final_norm"], cfg.norm_eps)
+
+    def _trunk(self, params, x, io: tfm.LayerIO, caches=None):
+        """Run all layer groups; returns (x, aux, new_caches)."""
+        cfg = self.cfg
+        cd = jnp.dtype(cfg.compute_dtype)
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches = []
+        for gi, (count, kind) in enumerate(cfg.layer_groups):
+            cache_g = caches[gi] if caches is not None else None
+            # cast the stack ONCE (outside the scan): scan copies, FSDP
+            # all-gathers and remat saves all run at compute precision
+            stack = jax.tree.map(lambda w: w.astype(cd), params["groups"][gi])
+            x, aux, nc = tfm.group_apply(cfg, kind, stack, x, io, cache_g)
+            aux_total += aux
+            new_caches.append(nc)
+        return x, aux_total, new_caches
+
+    def _prep_inputs(self, params, batch, mode):
+        """tokens (+vis/enc stubs) → (x, positions, io-extras)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens)
+        if cfg.n_vis_tokens and "vis_embed" in batch:
+            cd = x.dtype
+            x = jnp.concatenate([batch["vis_embed"].astype(cd), x], axis=1)
+        B, S = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        if cfg.pos == "learned":
+            x = x + params["pos_embed"][:S][None].astype(x.dtype)
+        enc_out = enc_pos = None
+        if cfg.n_enc_layers:
+            enc_out = self._encode(params, batch["enc_embed"])
+            Se = enc_out.shape[1]
+            enc_pos = jnp.broadcast_to(jnp.arange(Se)[None], (B, Se))
+        return x, tfm.LayerIO(positions=positions, mode=mode,
+                              enc_out=enc_out, enc_pos=enc_pos)
+
+    # ----------------------------------------------------------------- train
+    def loss_fn(self, params, batch):
+        cfg = self.cfg
+        x, io = self._prep_inputs(params, batch, "train")
+        x, aux, _ = self._trunk(params, x, io)
+        if cfg.n_vis_tokens and "vis_embed" in batch:
+            x = x[:, cfg.n_vis_tokens:]  # loss over text positions only
+        loss = self._chunked_ce(params, x, batch["targets"],
+                                batch.get("loss_mask"))
+        return loss + aux, {"ce": loss, "aux": aux}
+
+    def _chunked_ce(self, params, x, targets, mask=None, chunk: int = 1024):
+        """CE over sequence chunks: the (B,S,V) f32 logits (+ grad buffer)
+        never materialize — 8+ GiB on 200k-vocab heads.  The chunk body is
+        checkpointed so backward recomputes logits chunkwise too."""
+        cfg = self.cfg
+        B, S, D = x.shape
+        if S <= chunk or S % chunk:
+            logits = self._head(params, x)
+            return softmax_cross_entropy(logits, targets, mask, z_loss=1e-4)
+        nc = S // chunk
+        xc = x.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+        tc = targets.reshape(B, nc, chunk).transpose(1, 0, 2)
+        mc = (mask.reshape(B, nc, chunk).transpose(1, 0, 2)
+              if mask is not None else None)
+
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def body(acc, xs):
+            xb, tb, mb = xs
+            logits = self._head(params, xb)
+            logits = logits.astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(logits, tb[..., None], axis=-1)[..., 0]
+            tok_loss = lse - ll + 1e-4 * lse**2
+            if mb is not None:
+                return (acc[0] + (tok_loss * mb).sum(), acc[1] + mb.sum()), None
+            return (acc[0] + tok_loss.sum(), acc[1] + float(tok_loss.size)), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (xc, tc, mc))
+        return tot / jnp.maximum(cnt, 1.0)
+
+    # ----------------------------------------------------------------- serve
+    def init_caches(self, batch: int, max_len: int, dtype=None):
+        cfg = self.cfg
+        dtype = dtype or jnp.dtype(cfg.compute_dtype)
+        return [
+            tfm.init_group_cache(cfg, count, kind, batch, max_len, dtype,
+                                 enc_len=cfg.enc_len)
+            for count, kind in cfg.layer_groups
+        ]
+
+    def cache_axes(self):
+        return [tfm.group_cache_axes(self.cfg, kind)
+                for _, kind in self.cfg.layer_groups]
+
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        """Full-sequence forward filling caches; returns (last_logits, caches).
+
+        ``max_len``: pre-size full-attention caches for subsequent decoding
+        (zero-padded beyond the prefilled region; masked by position).
+        """
+        x, io = self._prep_inputs(params, batch, "prefill")
+        x, _, caches = self._trunk(params, x, io)
+        if max_len is not None:
+            caches = [
+                tfm.pad_group_cache(kind, c, max_len)
+                for (n, kind), c in zip(self.cfg.layer_groups, caches)
+            ]
+        logits = self._head(params, x[:, -1:])
+        return logits[:, 0], caches
+
+    def decode_step(self, params, token, pos, caches, enc_out=None):
+        """One decode step.  token (B,), pos (B,) absolute position."""
+        cfg = self.cfg
+        x = self._embed(params, token[:, None])
+        enc_pos = None
+        if enc_out is not None:
+            B, Se = enc_out.shape[0], enc_out.shape[1]
+            enc_pos = jnp.broadcast_to(jnp.arange(Se)[None], (B, Se))
+        if cfg.pos == "learned":
+            x = x + params["pos_embed"][pos][:, None].astype(x.dtype)
+        io = tfm.LayerIO(positions=pos[:, None], mode="decode",
+                         enc_out=enc_out, enc_pos=enc_pos)
+        x, _, new_caches = self._trunk(params, x, io, caches)
+        logits = self._head(params, x)
+        return logits[:, 0], new_caches
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,113 @@
+"""Mixture-of-Experts: grouped capacity-based dispatch (static shapes).
+
+MaxText-style "dropping" MoE: tokens are reshaped into groups of
+``moe_group`` tokens; within each group every expert accepts at most
+``C = group·top_k·capacity_factor / E`` tokens (overflow dropped, standard
+at scale).  Dispatch/combine are one-hot einsums — fully static shapes, so
+the same code lowers for EP (experts sharded over 'model') or expert-TP
+(grok-1's 8 experts can't split 16 ways; their ff dim shards instead — see
+parallel/sharding.axis_rules_for).
+
+Router runs in f32; aux load-balance loss follows the switch-transformer
+formulation.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, swiglu
+from repro.parallel.sharding import constrain
+
+MOE_GROUP = 512  # tokens per dispatch group (perf knob, see EXPERIMENTS §Perf)
+
+
+def moe_params(cfg, key):
+    D, E, Fe = cfg.d_model, cfg.n_experts, cfg.expert_ff
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": dense_init(ks[0], (D, E), ("embed", None), scale=0.02),
+        "w_gate": dense_init(ks[1], (E, D, Fe), ("expert", "embed", "ff_expert")),
+        "w_up": dense_init(ks[2], (E, D, Fe), ("expert", "embed", "ff_expert")),
+        "w_down": dense_init(ks[3], (E, Fe, D), ("expert", "ff_expert", "embed")),
+    }
+    if cfg.n_shared_experts:
+        Fs = cfg.shared_ff
+        p["shared"] = {
+            "w_gate": dense_init(ks[4], (D, Fs), ("embed", "ff_shared")),
+            "w_up": dense_init(ks[5], (D, Fs), ("embed", "ff_shared")),
+            "w_down": dense_init(ks[6], (Fs, D), ("ff_shared", "embed")),
+        }
+    return p
+
+
+def _capacity(cfg, group: int) -> int:
+    c = int(group * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(4, (c + 3) // 4 * 4)  # pad to multiple of 4 for tiling
+
+
+def moe_apply(cfg, p, x, *, group_size: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """x (B,S,D) → (out (B,S,D), aux_loss scalar)."""
+    group_size = group_size or getattr(cfg, "moe_group", MOE_GROUP)
+    B, S, D = x.shape
+    cd = x.dtype
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    g = min(group_size, T)
+    assert T % g == 0, (T, g)
+    G = T // g
+    C = _capacity(cfg, g)
+
+    xt = constrain(x.reshape(G, g, D), "batch", None, None)
+    # bf16 inputs, f32 accumulation — avoids materializing xt in f32
+    logits = constrain(
+        jnp.einsum("gtd,de->gte", xt, p["router"].astype(cd),
+                   preferred_element_type=jnp.float32),
+        "batch", None, None)  # (G,g,E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(gates, K)  # (G,g,K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)  # renorm
+
+    # K-loop dispatch: per slot-k one-hots only — the (G,g,K,E,C) tensor of
+    # the naive formulation never exists (it replicated 20+ GiB/device).
+    # Everything stays in compute dtype: a single f32 edge here would drag
+    # every backward dot of the expert path up to f32 (2× HBM).
+    dispatch = jnp.zeros((G, g, E, C), cd)
+    combine = jnp.zeros((G, g, E, C), cd)
+    offset = jnp.zeros((G, 1, E), jnp.float32)  # earlier slots claim first
+    for k in range(K):
+        sel_k = jax.nn.one_hot(top_i[..., k], E, dtype=jnp.float32)  # (G,g,E)
+        sel_k = constrain(sel_k, "batch", None, None)
+        pos_k = jnp.cumsum(sel_k, axis=1) - 1.0 + offset  # exact in f32
+        offset = offset + jnp.sum(sel_k, axis=1, keepdims=True)
+        keep_k = sel_k * (pos_k < C)
+        slot = jnp.where(keep_k > 0, pos_k, -1.0).astype(jnp.int32)
+        oh = jax.nn.one_hot(slot, C, dtype=cd)  # (G,g,E,C)
+        oh = constrain(oh, "batch", None, "expert", None)
+        dispatch = dispatch + oh
+        combine = combine + oh * top_w[..., k][..., None, None].astype(cd)
+
+    dispatch = constrain(dispatch, "batch", None, "expert", None)
+    combine = constrain(combine, "batch", None, "expert", None)
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xt.astype(cd))  # (G,E,C,D)
+    # batch stays the leading shard; weight FSDP dims get all-gathered
+    xe = constrain(xe, "batch", "expert", None, None)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(cd)))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(cd))
+    h = constrain(h, "batch", "expert", None, "ff_expert")
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(cd))
+    ye = constrain(ye, "batch", "expert", None, None)
+    out = jnp.einsum("gtec,gecd->gtd", combine.astype(cd), ye)
+    out = out.reshape(B, S, D)
+
+    # switch load-balance aux loss
+    importance = gates.mean(axis=(0, 1))                     # (E,)
+    load = (dispatch.astype(jnp.float32).sum(3) > 0).mean((0, 1))  # (E,)
+    aux = cfg.router_aux_coef * E * jnp.sum(importance * load)
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        out = out + swiglu(x, sp["w_gate"], sp["w_up"], sp["w_down"], cd)
+    return out, aux

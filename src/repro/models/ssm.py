@@ -1,0 +1,246 @@
+"""Mamba-2 SSD (state-space duality) mixer — chunked, MXU-friendly.
+
+The chunked SSD algorithm (Dao & Gu 2024) is itself a melt-style
+decomposition of the sequence grid (DESIGN.md §5): the sequence is split
+into row blocks (chunks); each block's computation is independent given a
+carried boundary state — precisely the paper's decouple → compute → couple
+pattern with the inter-chunk recurrence as the coupling term.
+
+Sharding: the SSD head *dim* P is sharded over 'model' ("ssd_head_dim") —
+P is a free axis of every SSD einsum, so the mixer runs collective-free
+(see parallel/sharding.py).  Works for any head count (hymba's 50 heads).
+
+State layout: (B, H, N, P); conv caches are the melt-row halos carried
+across step boundaries.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import causal_depthwise_conv1d, dense_init, ones_init, zeros_init
+from repro.parallel.sharding import constrain
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array    # (B, H, N, P) f32
+    conv_x: jax.Array   # (B, K-1, H*P)
+    conv_B: jax.Array   # (B, K-1, G*N)
+    conv_C: jax.Array   # (B, K-1, G*N)
+
+
+def ssm_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = d_in // P
+    G = cfg.ssm_groups
+    N = cfg.ssm_state
+    return d_in, H, P, G, N
+
+
+def ssm_params(cfg, key):
+    D = cfg.d_model
+    d_in, H, P, G, N = ssm_dims(cfg)
+    K = cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": dense_init(ks[0], (D, H, P), ("embed", "ssd_head", "ssd_head_dim")),
+        "wx": dense_init(ks[1], (D, H, P), ("embed", "ssd_head", "ssd_head_dim")),
+        "wB": dense_init(ks[2], (D, G, N), ("embed", None, None)),
+        "wC": dense_init(ks[3], (D, G, N), ("embed", None, None)),
+        "wdt": dense_init(ks[4], (D, H), ("embed", None)),
+        "dt_bias": zeros_init((H,), (None,)),
+        "A_log": (jnp.log(jnp.linspace(1.0, 16.0, H)), (None,)),
+        "skip_D": ones_init((H,), (None,)),
+        "conv_x": dense_init(ks[5], (K, H, P), (None, "ssd_head", "ssd_head_dim"), scale=0.5),
+        "conv_B": dense_init(ks[6], (K, G, N), (None, None, None), scale=0.5),
+        "conv_C": dense_init(ks[7], (K, G, N), (None, None, None), scale=0.5),
+        "norm": ones_init((H, P), ("ssd_head", "ssd_head_dim")),
+        "out": dense_init(ks[5], (H, P, D), ("ssd_head", "ssd_head_dim", "embed")),
+    }
+
+
+def init_ssm_cache(cfg, batch: int, dtype):
+    d_in, H, P, G, N = ssm_dims(cfg)
+    K = cfg.ssm_conv
+    return SSMCache(
+        state=jnp.zeros((batch, H, N, P), jnp.float32),
+        conv_x=jnp.zeros((batch, K - 1, H * P), dtype),
+        conv_B=jnp.zeros((batch, K - 1, G * N), dtype),
+        conv_C=jnp.zeros((batch, K - 1, G * N), dtype),
+    )
+
+
+def _ssm_cache_axes(cfg):
+    return SSMCache(
+        state=("batch", "ssd_head", None, "ssd_head_dim"),
+        conv_x=("batch", None, None),
+        conv_B=("batch", None, None),
+        conv_C=("batch", None, None),
+    )
+
+
+def _project(cfg, p, u):
+    """u (B,L,D) → z, x, B_, C, dt (pre-conv, pre-activation)."""
+    cd = u.dtype
+    z = jnp.einsum("bld,dhp->blhp", u, p["wz"].astype(cd))
+    x = jnp.einsum("bld,dhp->blhp", u, p["wx"].astype(cd))
+    Bm = jnp.einsum("bld,dgn->blgn", u, p["wB"].astype(cd))
+    Cm = jnp.einsum("bld,dgn->blgn", u, p["wC"].astype(cd))
+    dt = jnp.einsum("bld,dh->blh", u, p["wdt"].astype(cd))
+    return z, x, Bm, Cm, dt
+
+
+def _conv_all(cfg, p, x, Bm, Cm, caches=None):
+    """Causal depthwise convs (melt window K over the sequence grid)."""
+    B, L = x.shape[:2]
+    d_in, H, P, G, N = ssm_dims(cfg)
+    cx, cb, cc = (caches.conv_x, caches.conv_B, caches.conv_C) if caches else (None, None, None)
+    xf, new_cx = causal_depthwise_conv1d(
+        x.reshape(B, L, H * P), p["conv_x"].reshape(cfg.ssm_conv, H * P).astype(x.dtype), cx)
+    Bf, new_cb = causal_depthwise_conv1d(
+        Bm.reshape(B, L, G * N), p["conv_B"].reshape(cfg.ssm_conv, G * N).astype(x.dtype), cb)
+    Cf, new_cc = causal_depthwise_conv1d(
+        Cm.reshape(B, L, G * N), p["conv_C"].reshape(cfg.ssm_conv, G * N).astype(x.dtype), cc)
+    x = jax.nn.silu(xf).reshape(B, L, H, P)
+    Bm = jax.nn.silu(Bf).reshape(B, L, G, N)
+    Cm = jax.nn.silu(Cf).reshape(B, L, G, N)
+    return x, Bm, Cm, (new_cx, new_cb, new_cc)
+
+
+def _gated_out(cfg, p, y, z):
+    """Gated RMSNorm (over all H·P channels) + output projection."""
+    cd = y.dtype
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    var = jnp.mean(gf * gf, axis=(-2, -1), keepdims=True)
+    g = (gf * jax.lax.rsqrt(var + cfg.norm_eps)).astype(cd) * p["norm"].astype(cd)
+    return jnp.einsum("blhp,hpd->bld", g, p["out"].astype(cd))
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, h0: Optional[jax.Array] = None):
+    """Chunked SSD scan.  x (B,L,H,P), dt (B,L,H) post-softplus, A (H,)<0,
+    Bm/Cm (B,L,G,N).  Returns (y (B,L,H,P), h_last (B,H,N,P)).
+    """
+    B, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hpg = H // G
+    Q = min(chunk, L)
+    L0 = L
+    if L % Q:  # pad; dt=0 in the pad ⇒ no decay, no state contribution
+        pad = Q - L % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        L = L + pad
+    nc = L // Q
+
+    xc = x.reshape(B, nc, Q, H, P)
+    dtc = dt.reshape(B, nc, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, Q, G, N)
+    Cc = Cm.reshape(B, nc, Q, G, N)
+    dA = dtc * A  # (B,nc,Q,H) negative
+    cum = jnp.cumsum(dA, axis=2)  # within-chunk cumulative log-decay
+
+    # ---- intra-chunk (quadratic in Q, all matmuls) -------------------------
+    # scores[b,c,g,i,j] = C_i · B_j  (per group)
+    scores = jnp.einsum("bcigm,bcjgm->bcgij", Cc, Bc,
+                        preferred_element_type=jnp.float32)
+    i_ge_j = jnp.tril(jnp.ones((Q, Q), bool))
+    # decay[b,c,h,i,j] = exp(cum_i - cum_j) for i >= j
+    cum_h = cum.transpose(0, 1, 3, 2)  # (B,nc,H,Q)
+    decay = jnp.exp(
+        jnp.where(
+            i_ge_j[None, None, None],
+            cum_h[..., :, None] - cum_h[..., None, :],
+            -jnp.inf,
+        )
+    )  # (B,nc,H,Q,Q)
+    M = scores.reshape(B, nc, G, 1, Q, Q) * decay.reshape(B, nc, G, hpg, Q, Q)
+    M = M * dtc.transpose(0, 1, 3, 2).reshape(B, nc, G, hpg, 1, Q)
+    xg = xc.reshape(B, nc, Q, G, hpg, P)  # (b,c,j,g,h,p), G-major head layout
+    y_intra = jnp.einsum(
+        "bcghij,bcjghp->bcighp", M.astype(x.dtype), xg,
+        preferred_element_type=jnp.float32,
+    ).reshape(B, nc, Q, H, P)
+
+    # ---- chunk summaries ----------------------------------------------------
+    # state contribution of chunk c: S_c[h,n,p] = Σ_j exp(cumQ - cum_j) dt_j B_j[n] x_j[p]
+    last = cum[:, :, -1:, :]  # (B,nc,1,H)
+    w = jnp.exp(last - cum) * dtc  # (B,nc,Q,H)
+    Bx = jnp.einsum(
+        "bcjgn,bcjghp,bcjgh->bcghnp",
+        Bc.astype(jnp.float32), xg.astype(jnp.float32),
+        w.reshape(B, nc, Q, G, hpg),
+        preferred_element_type=jnp.float32,
+    ).reshape(B, nc, H, N, P)
+
+    # ---- inter-chunk recurrence (the coupling term) ---------------------------
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))  # (B,nc,H)
+
+    def body(h, xs):
+        S_c, d_c = xs  # (B,H,N,P), (B,H)
+        h_new = h * d_c[:, :, None, None] + S_c
+        return h_new, h  # emit state *entering* the chunk
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32) if h0 is None else h0
+    h_last, h_in = jax.lax.scan(
+        body, h0,
+        (Bx.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_in = h_in.transpose(1, 0, 2, 3, 4)  # (B,nc,H,N,P)
+
+    # y_inter[i] = exp(cum_i) · C_i · h_in
+    dec_in = jnp.exp(cum)  # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcign,bcghnp->bcighp",
+                         Cc.astype(jnp.float32),
+                         h_in.reshape(B, nc, G, hpg, N, P))
+    y_inter = y_inter.reshape(B, nc, Q, H, P) * dec_in[..., None]
+    y = y_intra.astype(jnp.float32) + y_inter
+    return y.reshape(B, L, H, P)[:, :L0].astype(x.dtype), h_last
+
+
+def ssm_apply(cfg, p, u, *, mode: str = "train", cache: Optional[SSMCache] = None):
+    """Full mamba2 mixer.  u (B,L,D) → (out (B,L,D), new_cache)."""
+    B, L, D = u.shape
+    cd = u.dtype
+    d_in, H, P, G, N = ssm_dims(cfg)
+    z, x, Bm, Cm, dt_raw = _project(cfg, p, u)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+
+    if mode == "decode":
+        x1, Bm1, Cm1, (ncx, ncb, ncc) = _conv_all(cfg, p, x, Bm, Cm, cache)
+        # single-step state update: h = exp(dtA) h + dt B ⊗ x
+        dA1 = jnp.exp(dt[:, 0] * A)  # (B,H)
+        Bh = Bm1[:, 0].reshape(B, G, 1, N).repeat(H // G, axis=2).reshape(B, H, N)
+        Ch = Cm1[:, 0].reshape(B, G, 1, N).repeat(H // G, axis=2).reshape(B, H, N)
+        upd = (dt[:, 0, :, None, None] * Bh[..., None].astype(jnp.float32)
+               * x1[:, 0, :, None, :].astype(jnp.float32))  # (B,H,N,P)
+        h = cache.state * dA1[..., None, None] + upd
+        y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), h)
+        y = y + p["skip_D"].astype(jnp.float32)[None, :, None] * x1[:, 0].astype(jnp.float32)
+        y = y[:, None].astype(cd)  # (B,1,H,P)
+        out = _gated_out(cfg, p, y, z)
+        return out, SSMCache(state=h, conv_x=ncx, conv_B=ncb, conv_C=ncc)
+
+    # train / prefill
+    x1, Bm1, Cm1, (ncx, ncb, ncc) = _conv_all(cfg, p, x, Bm, Cm, None)
+    x1 = constrain(x1, "batch", None, "ssd_head", "ssd_head_dim")
+    h0 = cache.state if (cache is not None) else None
+    y, h_last = ssd_chunked(x1, dt, A, Bm1, Cm1, cfg.ssm_chunk, h0)
+    y = y + p["skip_D"].astype(cd)[None, None, :, None] * x1
+    out = _gated_out(cfg, p, y, z)
+    new_cache = None
+    if mode == "prefill":
+        K = cfg.ssm_conv
+        new_cache = SSMCache(
+            state=h_last,
+            conv_x=x.reshape(B, L, H * P)[:, -(K - 1):],
+            conv_B=Bm.reshape(B, L, G * N)[:, -(K - 1):],
+            conv_C=Cm.reshape(B, L, G * N)[:, -(K - 1):],
+        )
+    return out, new_cache

@@ -1,0 +1,277 @@
+"""Layer / stack assembly: heterogeneous layer groups, scan-over-layers, remat.
+
+A model is a sequence of *layer groups* (count × LayerKind); each group is
+one ``jax.lax.scan`` over stacked parameters — HLO size stays O(1) in depth
+and activation memory is bounded by the remat policy.  Heterogeneity (hymba
+full/SWA interleave, deepseek-v2 dense-first-layer) is expressed across
+groups, homogeneity within.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerKind
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    dense_init,
+    gelu_mlp,
+    ones_init,
+    rms_norm,
+    swiglu,
+    zeros_init,
+)
+from repro.parallel.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# single-layer params / apply
+# ---------------------------------------------------------------------------
+
+
+def layer_params(cfg: ArchConfig, kind: LayerKind, key):
+    """Returns the twin tree of (param, AxisNames) pairs for one layer."""
+    ks = jax.random.split(key, 6)
+    p = {"ln1": ones_init((cfg.d_model,), ("norm",)),
+         "ln2": ones_init((cfg.d_model,), ("norm",))}
+    if kind.mixer in ("attn", "hybrid"):
+        p["attn"] = attn_mod.attention_params(cfg, ks[0])
+    if kind.mixer == "hybrid":
+        p["ln_attn_out"] = ones_init((cfg.d_model,), ("norm",))
+        p["ln_ssm_out"] = ones_init((cfg.d_model,), ("norm",))
+    if kind.mixer in ("ssm", "hybrid"):
+        p["ssm"] = ssm_mod.ssm_params(cfg, ks[1])
+    if kind.cross_attn:
+        p["cross"] = attn_mod.attention_params(cfg, ks[2], cross=True)
+        p["ln_x"] = ones_init((cfg.d_model,), ("norm",))
+    if kind.mlp == "swiglu":
+        F = cfg.d_ff
+        p["mlp"] = {
+            "w_gate": dense_init(ks[3], (cfg.d_model, F), ("embed", "ff")),
+            "w_up": dense_init(ks[4], (cfg.d_model, F), ("embed", "ff")),
+            "w_down": dense_init(ks[5], (F, cfg.d_model), ("ff", "embed")),
+        }
+    elif kind.mlp == "gelu":
+        F = cfg.d_ff
+        p["mlp"] = {
+            "w_in": dense_init(ks[3], (cfg.d_model, F), ("embed", "ff")),
+            "b_in": zeros_init((F,), ("ff",)),
+            "w_out": dense_init(ks[4], (F, cfg.d_model), ("ff", "embed")),
+            "b_out": zeros_init((cfg.d_model,), ("norm",)),
+        }
+    elif kind.mlp == "moe":
+        p["moe"] = moe_mod.moe_params(cfg, ks[3])
+    return p
+
+
+class LayerIO(NamedTuple):
+    """Per-layer inputs that are not scanned-over parameters."""
+
+    positions: jax.Array
+    mode: str
+    enc_out: Optional[jax.Array] = None
+    enc_pos: Optional[jax.Array] = None
+
+
+def layer_apply(cfg: ArchConfig, kind: LayerKind, p, x, io: LayerIO, cache):
+    """One block. Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    new_cache = dict(cache) if cache else {}
+
+    mixer_outs = []
+    if kind.mixer in ("attn", "hybrid"):
+        if cfg.use_mla:
+            o, nc = attn_mod.mla_apply(
+                cfg, p["attn"], h, positions=io.positions, mode=io.mode,
+                cache=cache.get("attn") if cache else None)
+        else:
+            o, nc = attn_mod.gqa_apply(
+                cfg, p["attn"], h, positions=io.positions, mode=io.mode,
+                cache=cache.get("attn") if cache else None,
+                window=kind.window, causal=kind.causal,
+                rope=(cfg.pos == "rope"))
+        mixer_outs.append(o)
+        if nc is not None:
+            new_cache["attn"] = nc
+    if kind.mixer in ("ssm", "hybrid"):
+        o, nc = ssm_mod.ssm_apply(
+            cfg, p["ssm"], h, mode=io.mode,
+            cache=cache.get("ssm") if cache else None)
+        mixer_outs.append(o)
+        if nc is not None:
+            new_cache["ssm"] = nc
+    if len(mixer_outs) == 1:
+        x = x + mixer_outs[0]
+    else:  # hymba parallel hybrid heads: mean-fuse the normalized branches
+        a = rms_norm(mixer_outs[0], p["ln_attn_out"], cfg.norm_eps)
+        s = rms_norm(mixer_outs[1], p["ln_ssm_out"], cfg.norm_eps)
+        x = x + 0.5 * (a + s)
+
+    if kind.cross_attn:
+        hx = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        ko, vo = _cross_kv(cfg, p["cross"], io, cache)
+        if io.mode == "decode" and cache and "cross_k" in cache:
+            new_cache["cross_k"], new_cache["cross_v"] = cache["cross_k"], cache["cross_v"]
+        elif io.mode == "prefill":
+            new_cache["cross_k"], new_cache["cross_v"] = ko, vo
+        enc_pos = io.enc_pos
+        if enc_pos is None:
+            Se = ko.shape[1]
+            enc_pos = jnp.broadcast_to(jnp.arange(Se)[None], (hx.shape[0], Se))
+        o, _ = attn_mod.gqa_apply(
+            cfg, p["cross"], hx, positions=io.positions, mode="train",
+            causal=False, rope=False, kv_override=(ko, vo, enc_pos))
+        x = x + o
+
+    if kind.mlp != "none":
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if kind.mlp == "moe":
+            o, aux = moe_mod.moe_apply(cfg, p["moe"], h2)
+        elif kind.mlp == "gelu":
+            m = p["mlp"]
+            o = gelu_mlp(h2, m["w_in"], m["b_in"], m["w_out"], m["b_out"], h2.dtype)
+        else:
+            m = p["mlp"]
+            o = swiglu(h2, m["w_gate"], m["w_up"], m["w_down"], h2.dtype)
+        x = x + o
+    x = constrain(x, "batch", "seq_res", None)
+    return x, new_cache, aux
+
+
+def _cross_kv(cfg, pc, io: LayerIO, cache):
+    """Cross-attention K/V: from cache (decode) or encoder output."""
+    if cache and "cross_k" in cache:
+        return cache["cross_k"], cache["cross_v"]
+    cd = io.enc_out.dtype
+    k = jnp.einsum("bsd,dhk->bshk", io.enc_out, pc["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", io.enc_out, pc["wv"].astype(cd))
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# group stacks: init (vmapped) + apply (scanned)
+# ---------------------------------------------------------------------------
+
+
+def group_params(cfg: ArchConfig, count: int, kind: LayerKind, key):
+    """Stacked (leading layer dim) param tree + axes tree for one group."""
+    from repro.models.layers import AxisNames, map_axes, split_tree
+
+    keys = jax.random.split(key, count)
+    _, axes = split_tree(layer_params(cfg, kind, keys[0]))
+    axes = map_axes(lambda a: AxisNames(("layer",) + tuple(a)), axes)
+
+    def one(k):
+        params, _ = split_tree(layer_params(cfg, kind, k))
+        return params
+
+    return jax.vmap(one)(keys), axes
+
+
+def _remat_policy(name: str):
+    if name == "none":
+        return None
+    if name == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    if name == "minimal":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    raise ValueError(name)
+
+
+def group_apply(cfg: ArchConfig, kind: LayerKind, stack, x, io: LayerIO,
+                cache_stack=None):
+    """Scan a stacked layer group.  cache_stack leaves have leading L dim.
+
+    ``cfg.scan_layers=False`` unrolls the group as a Python loop — used by
+    the roofline harness (XLA cost analysis counts a while body once, so
+    exact per-layer costs need unrolled lowerings) and available as a perf
+    knob for shallow models.
+    """
+
+    def body(carry, xs):
+        x, aux_acc = carry
+        p, cache = xs
+        x, new_cache, aux = layer_apply(cfg, kind, p, x, io, cache)
+        return (x, aux_acc + aux), new_cache
+
+    body_fn = body
+    if cfg.remat_policy != "none" and io.mode == "train":
+        policy = _remat_policy(cfg.remat_policy)
+        body_fn = jax.checkpoint(
+            body, policy=policy, prevent_cse=False,
+        )
+    if not cfg.scan_layers:
+        count = jax.tree.leaves(stack)[0].shape[0]
+        carry = (x, jnp.zeros((), jnp.float32))
+        caches_out = []
+        for i in range(count):
+            p_i = jax.tree.map(lambda t: t[i], stack)
+            c_i = (jax.tree.map(lambda t: t[i], cache_stack)
+                   if cache_stack is not None else None)
+            carry, nc = body_fn(carry, (p_i, c_i))
+            caches_out.append(nc)
+        (x, aux) = carry
+        new_caches = (jax.tree.map(lambda *xs: jnp.stack(xs), *caches_out)
+                      if caches_out and caches_out[0] else {})
+        return x, aux, new_caches
+    (x, aux), new_caches = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                        (stack, cache_stack))
+    return x, aux, new_caches
+
+
+def init_group_cache(cfg: ArchConfig, count: int, kind: LayerKind, batch: int,
+                     max_len: int, dtype, enc_len: int = 0):
+    """Per-group cache stack with leading layer dim."""
+    def one(_):
+        c = {}
+        if kind.mixer in ("attn", "hybrid"):
+            c["attn"] = attn_mod.init_cache(cfg, batch, max_len, kind.window, dtype)
+        if kind.mixer in ("ssm", "hybrid"):
+            c["ssm"] = ssm_mod.init_ssm_cache(cfg, batch, dtype)
+        if kind.cross_attn:
+            c["cross_k"] = jnp.zeros((batch, enc_len, cfg.n_kv, cfg.head_dim), dtype)
+            c["cross_v"] = jnp.zeros((batch, enc_len, cfg.n_kv, cfg.head_dim), dtype)
+        return c
+
+    caches = [one(i) for i in range(count)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+
+
+def pad_group_cache(kind: LayerKind, cache, max_len: int):
+    """Zero-pad full-attention caches (seq axis 2 after the layer dim) so a
+    prefill-produced cache can serve decoding up to ``max_len``."""
+    if "attn" not in cache or kind.window:
+        return cache
+    c = cache["attn"]
+    def pad(a):
+        S = a.shape[2]
+        if S >= max_len:
+            return a
+        width = [(0, 0)] * a.ndim
+        width[2] = (0, max_len - S)
+        return jnp.pad(a, width)
+    out = dict(cache)
+    out["attn"] = type(c)(*[pad(a) for a in c])
+    return out
+
+
+def group_cache_axes(cfg: ArchConfig, kind: LayerKind):
+    from repro.models.layers import AxisNames, map_axes
+
+    c = {}
+    if kind.mixer in ("attn", "hybrid"):
+        ca = attn_mod._cache_axes(cfg)
+        c["attn"] = type(ca)(*[AxisNames(ax) for ax in ca])
+    if kind.mixer in ("ssm", "hybrid"):
+        cs = ssm_mod._ssm_cache_axes(cfg)
+        c["ssm"] = type(cs)(*[AxisNames(ax) for ax in cs])
+    if kind.cross_attn:
+        c["cross_k"] = AxisNames(("batch", None, "kv_heads", None))
+        c["cross_v"] = AxisNames(("batch", None, "kv_heads", None))
+    return map_axes(lambda ax: AxisNames(("layer",) + tuple(ax)), c)

@@ -1,0 +1,17 @@
+"""LR schedules (warmup + cosine), pure functions of the step counter."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return lr

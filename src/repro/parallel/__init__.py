@@ -1,0 +1,17 @@
+from repro.parallel.sharding import (
+    LogicalRules,
+    axis_rules_for,
+    constrain,
+    logical_to_spec,
+    set_rules,
+    get_rules,
+)
+
+__all__ = [
+    "LogicalRules",
+    "axis_rules_for",
+    "constrain",
+    "logical_to_spec",
+    "set_rules",
+    "get_rules",
+]

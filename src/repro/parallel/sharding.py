@@ -1,0 +1,310 @@
+"""Logical-axis sharding rules (MaxText-style) for the production meshes.
+
+Model code names tensor dimensions with *logical* axes ("batch", "embed",
+"qkv", "ff", "expert", "vocab", ...).  A :class:`LogicalRules` table maps
+each logical axis to zero or more mesh axes; ``constrain`` applies a
+``with_sharding_constraint`` when a mesh is active, and ``logical_to_spec``
+builds the PartitionSpec trees for pjit in/out shardings.
+
+The per-arch planner :func:`axis_rules_for` encodes the DP/FSDP/TP/EP/SP
+decisions (see DESIGN.md §6), including the fallbacks for dimensions that do
+not divide the fixed 16-way 'model' axis (e.g. 24-head archs use sequence
+parallelism for attention instead of head-sharded TP, hymba's 50 SSD heads
+shard the SSD head_dim instead of the head count).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+class LogicalRules:
+    def __init__(self, table: Dict[str, MeshAxes], mesh_axis_sizes: Dict[str, int]):
+        self.table = dict(table)
+        self.mesh_axis_sizes = dict(mesh_axis_sizes)
+
+    def mesh_axes(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        if logical not in self.table:
+            raise KeyError(f"unknown logical axis {logical!r}")
+        return self.table[logical]
+
+    def size(self, logical: str) -> int:
+        ax = self.mesh_axes(logical)
+        if ax is None:
+            return 1
+        if isinstance(ax, str):
+            ax = (ax,)
+        n = 1
+        for a in ax:
+            n *= self.mesh_axis_sizes[a]
+        return n
+
+
+def set_rules(rules: Optional[LogicalRules]) -> None:
+    _state.rules = rules
+
+
+def get_rules() -> Optional[LogicalRules]:
+    return getattr(_state, "rules", None)
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], rules: Optional[LogicalRules] = None) -> P:
+    """Logical names → PartitionSpec.  A mesh axis may appear only once per
+    spec; later logical axes that would reuse one are demoted to replicated
+    (first-wins, e.g. the logits' 'vocab' beats 'seq_res' on 'model')."""
+    rules = rules or get_rules()
+    if rules is None:
+        return P()
+    used = set()
+    out = []
+    for a in reversed(axes):  # trailing dims win: params/logits shard cleanly
+        m = rules.mesh_axes(a)
+        if m is None:
+            out.append(None)
+            continue
+        ms = (m,) if isinstance(m, str) else tuple(m)
+        if any(x in used for x in ms):
+            out.append(None)
+        else:
+            used.update(ms)
+            out.append(m)
+    return P(*reversed(out))
+
+
+def constrain(x: jax.Array, *axes: Optional[str]):
+    """Apply a logical sharding constraint if rules are active (no-op else).
+
+    Dims that do not divide their mapped mesh extent are silently left
+    unsharded (e.g. the S=1 slice fed to the LM head during prefill).
+    """
+    rules = get_rules()
+    if rules is None:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(f"{len(axes)} axes for rank-{x.ndim} tensor")
+    eff = [
+        a if (a is not None and rules.size(a) > 0 and d % max(rules.size(a), 1) == 0)
+        else None
+        for a, d in zip(axes, x.shape)
+    ]
+    try:
+        return jax.lax.with_sharding_constraint(x, logical_to_spec(eff, rules))
+    except (ValueError, RuntimeError):
+        # no mesh context (e.g. pure-CPU smoke test) — constraints are advisory
+        return x
+
+
+def _divisible(n: int, ways: int) -> bool:
+    return ways > 0 and n % ways == 0
+
+
+def axis_rules_for(
+    cfg,
+    mesh: Mesh,
+    shape_kind: str = "train",
+    batch_size: Optional[int] = None,
+    seq_len: Optional[int] = None,
+    overrides: Optional[Dict[str, MeshAxes]] = None,
+) -> LogicalRules:
+    """Plan logical→mesh rules for one (arch, shape, mesh) cell.
+
+    Decisions (DESIGN.md §6):
+    - batch    → all DP axes ('pod','data') when divisible, else fewer/none
+    - embed    → 'data' (FSDP / ZeRO-3 parameter+optimizer sharding)
+    - qkv      → 'model' when n_heads divides, else SP fallback: 'seq_act'
+                 → 'model' (context parallel attention, KV all-gathered)
+    - ff       → 'model' (Megatron TP)
+    - expert   → 'model' when n_experts divides (EP), else experts stay
+                 unsharded and 'ff_expert' → 'model' (expert-TP fallback)
+    - ssd_head_dim → 'model' (SSD shards the head *dim*, never head count —
+                 P is a free axis of every SSD einsum, so zero collectives)
+    - vocab    → 'model'
+    - cache_seq→ KV-cache sequence axis; sharded for decode shapes when the
+                 batch can't cover the DP axes (long-context serving)
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = "model"
+    dp_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    dp = 1
+    for a in dp_axes:
+        dp *= sizes[a]
+
+    table: Dict[str, MeshAxes] = {}
+    # --- batch ------------------------------------------------------------
+    # TP/SP shards pay ~4 residual-sized collectives per layer (Megatron-SP
+    # all-gather/reduce-scatter) — for ≤40B models that traffic dwarfs the
+    # FSDP weight gathers of pure DP.  Fold 'model' into the DP axes when
+    # the batch divides (measured 14-55× collective reduction; see
+    # EXPERIMENTS.md §Perf).  SSM/hybrid trunks additionally avoid the
+    # SSD-layout↔sequence-sharding thrash this way.
+    model_in_batch = False
+    candidates = [dp_axes]
+    try:
+        small_enough = cfg.total_params() <= 40e9
+    except Exception:
+        small_enough = False
+    if small_enough and shape_kind in ("train", "prefill"):
+        # the folded candidate must divide exactly — a partial fold that
+        # drops 'data' but keeps 'model' would leave DP axes idle
+        candidates = [dp_axes + (model,), dp_axes]
+    chosen = None
+    for ci, cand in enumerate(candidates):
+        cand = list(cand)
+        exact = ci == 0 and len(candidates) > 1
+        while cand:
+            ways = 1
+            for a in cand:
+                ways *= sizes[a]
+            if batch_size is None or _divisible(batch_size, ways):
+                break
+            if exact:
+                cand = []
+                break
+            cand.pop(0)
+        if cand:
+            chosen = tuple(cand)
+            break
+    table["batch"] = chosen
+    model_in_batch = bool(chosen and model in chosen)
+    # --- params ------------------------------------------------------------
+    fsdp = "data" if "data" in sizes else None
+    if getattr(cfg, "fsdp_pods", False) and "pod" in sizes and fsdp:
+        fsdp = ("data", "pod")
+    if model_in_batch and fsdp:
+        # FSDP naturally extends over every DP axis — shard weights over
+        # (data, model) too when d_model divides, else keep data-only
+        cand = ("data", model) if isinstance(fsdp, str) else fsdp + (model,)
+        ways = 1
+        for a in cand:
+            ways *= sizes[a]
+        if _divisible(cfg.d_model, ways):
+            fsdp = cand
+    if shape_kind == "decode":
+        # serving: keep weights resident (replicated over DP) when the
+        # TP-sharded copy fits HBM — FSDP would re-gather them every token
+        try:
+            per_dev = cfg.total_params() * 4 / sizes[model]
+        except Exception:  # paper_stencil-style configs
+            per_dev = 0
+        if per_dev <= 6e9:
+            fsdp = None
+    fsdp_ways = 1
+    for a in ((fsdp,) if isinstance(fsdp, str) else (fsdp or ())):
+        fsdp_ways *= sizes[a]
+    # FSDP shards the d_model dim of weight matrices:
+    table["embed"] = fsdp if _divisible(cfg.d_model, fsdp_ways) else None
+    table["vocab"] = model if _divisible(cfg.vocab, sizes[model]) else None
+    # input-embedding table: D over 'model' (local gather fwd, local
+    # scatter-add bwd); a vocab-sharded table turns the lookup into a
+    # full-table f32 scatter per device (3+ GiB on 131k vocabs)
+    table["embed_tp"] = model if _divisible(cfg.d_model, sizes[model]) else None
+    table["ff"] = model if _divisible(cfg.d_ff or 1, sizes[model]) else None
+    table["layer"] = None
+    table["norm"] = None
+    # --- attention -----------------------------------------------------------
+    tp_heads = _divisible(cfg.n_heads, sizes[model]) and not model_in_batch
+    table["qkv"] = model if tp_heads else None
+    table["heads"] = model if tp_heads else None
+    kv_rep = cfg.n_kv and cfg.n_kv < sizes[model]
+    table["kv_heads"] = model if (tp_heads and cfg.n_kv and _divisible(cfg.n_kv, sizes[model])) else None
+    # SP fallback: shard attention activations along sequence
+    table["seq_act"] = None if (tp_heads or model_in_batch) else model
+    table["mla_latent"] = None  # latent is small; replicate
+    # Megatron-style sequence sharding of the residual stream between layers
+    # (bounds the scanned-carry activation memory at 64-layer depth)
+    table["seq_res"] = (
+        model
+        if (shape_kind in ("train", "prefill") and seq_len
+            and _divisible(seq_len, sizes[model])
+            and not model_in_batch
+            and getattr(cfg, "family", "") not in ("ssm", "hybrid"))
+        else None
+    )
+    # --- MoE -------------------------------------------------------------------
+    if cfg.n_experts:
+        ep = _divisible(cfg.n_experts, sizes[model])
+        table["expert"] = model if ep else None
+        table["ff_expert"] = None if ep else (
+            model if _divisible(cfg.expert_ff, sizes[model]) else None
+        )
+    else:
+        table["expert"] = None
+        table["ff_expert"] = None
+    table["ff_shared"] = model if (cfg.shared_ff and _divisible(cfg.shared_ff, sizes[model])) else None
+    # --- SSM ---------------------------------------------------------------------
+    table["ssd_head"] = None
+    table["ssd_head_dim"] = (
+        model
+        if (_divisible(cfg.ssm_head_dim or 1, sizes[model])
+            and not model_in_batch and cfg.ssm_state)
+        else None
+    )
+    table["ssd_state"] = None
+    table["ssd_inner"] = None  # packed inner projections stay head-dim sharded
+    # --- serving caches ---------------------------------------------------------
+    # KV caches dominate serving HBM; shard their sequence axis over 'model'
+    # (KV-head counts rarely divide a 16-way axis — spec dedup keeps
+    # kv_heads when both apply).  Degenerate batches (long_500k B=1) also
+    # spread over the DP axes the batch can't use.
+    if shape_kind in ("decode", "prefill") and seq_len:
+        axes_c = []
+        if table["batch"] != dp_axes:
+            axes_c += [a for a in dp_axes
+                       if (table["batch"] is None or a not in table["batch"])]
+        axes_c.append(model)
+        ways = 1
+        for a in axes_c:
+            ways *= sizes[a]
+        table["cache_seq"] = tuple(axes_c) if _divisible(seq_len, ways) else None
+    else:
+        table["cache_seq"] = None
+    table["seq"] = None
+    if model_in_batch:
+        # 'model' is folded into the DP axes — no other logical axis may
+        # claim it (a conflicting claim would demote the batch sharding via
+        # spec dedup and replicate every activation)
+        for key in ("ff", "ff_expert", "ff_shared", "qkv", "heads",
+                    "kv_heads", "vocab", "embed_tp", "expert", "seq_act",
+                    "seq_res", "ssd_head_dim", "cache_seq"):
+            if table.get(key) == model:
+                table[key] = None
+            elif isinstance(table.get(key), tuple) and model in table[key]:
+                table[key] = tuple(a for a in table[key] if a != model) or None
+    if overrides:
+        table.update(overrides)
+    return LogicalRules(table, sizes)
+
+
+def named_sharding(mesh: Mesh, axes: Sequence[Optional[str]], rules: LogicalRules) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(axes, rules))
+
+
+def spec_for_shape(shape, axes, rules: LogicalRules) -> P:
+    """PartitionSpec with indivisible dims demoted to replicated."""
+    eff = [
+        a if (a is not None and d % max(rules.size(a), 1) == 0) else None
+        for a, d in zip(axes, shape)
+    ]
+    return logical_to_spec(eff, rules)
+
+
+def shardings_for_tree(shapes_tree, axes_tree, mesh: Mesh, rules: LogicalRules):
+    """Twin (ShapeDtypeStruct tree, AxisNames tree) → NamedSharding tree."""
+    from repro.models.layers import is_axes
+
+    flat_s, tdef = jax.tree.flatten(shapes_tree)
+    flat_a = tdef.flatten_up_to(jax.tree.map(lambda a: a, axes_tree, is_leaf=is_axes))
+    out = [
+        NamedSharding(mesh, spec_for_shape(s.shape, tuple(a), rules))
+        for s, a in zip(flat_s, flat_a)
+    ]
+    return tdef.unflatten(out)

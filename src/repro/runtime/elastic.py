@@ -1,0 +1,34 @@
+"""Elastic scaling: re-mesh a checkpoint to a different device count.
+
+Because checkpoints store unsharded leaves + the sharding is derived from
+(config, mesh) at restore time, scaling from N to M devices is:
+
+    rules_M   = axis_rules_for(cfg, mesh_M, ...)
+    shard_M   = shardings_for_tree(shapes, axes, mesh_M, rules_M)
+    state     = checkpoint.restore(dir, step, like, shard_M)
+
+``replan`` wraps that; tests verify a train state saved on a (4,) mesh
+restores and keeps training on (2,) and (8,) meshes bit-identically.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.parallel.sharding import axis_rules_for, shardings_for_tree
+
+
+def replan(cfg, new_mesh, shape_kind, batch_size, seq_len, shapes_tree,
+           axes_tree):
+    rules = axis_rules_for(cfg, new_mesh, shape_kind, batch_size=batch_size,
+                           seq_len=seq_len)
+    return rules, shardings_for_tree(shapes_tree, axes_tree, new_mesh, rules)
+
+
+def restore_elastic(ckpt_dir: str, step: int, like_tree, cfg, new_mesh,
+                    shape_kind: str, batch_size: int, seq_len: int,
+                    axes_tree):
+    shapes = jax.eval_shape(lambda: like_tree)
+    _, shardings = replan(cfg, new_mesh, shape_kind, batch_size, seq_len,
+                          shapes, axes_tree)
+    return ckpt.restore(ckpt_dir, step, like_tree, shardings)

@@ -1,0 +1,127 @@
+"""Fault tolerance: heartbeats, straggler detection, restartable step loop.
+
+At 1000+ nodes the failure model is: a host disappears (hardware), a step
+hangs (network), or a step is abnormally slow (straggler).  The runtime
+pieces here are host-side and framework-agnostic:
+
+- :class:`Heartbeat` — per-host liveness file + stale-detection (on real
+  pods this is a distributed KV store; the protocol is identical);
+- :class:`StragglerMonitor` — per-step deadline from a running latency
+  percentile; flags ranks whose step time exceeds ``k × p50``;
+- :func:`run_restartable` — the crash-only training driver: any exception
+  → restore from the last committed checkpoint and continue; bounded
+  restarts to avoid crash loops.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from collections import deque
+from typing import Callable, Optional
+
+from repro.checkpoint import checkpoint as ckpt
+
+
+class Heartbeat:
+    def __init__(self, dir_: str, host_id: int, interval_s: float = 10.0):
+        self.dir = dir_
+        self.host_id = host_id
+        self.interval_s = interval_s
+        os.makedirs(dir_, exist_ok=True)
+
+    def beat(self, step: int):
+        path = os.path.join(self.dir, f"host_{self.host_id}.hb")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"t": time.time(), "step": step}, f)
+        os.replace(tmp, path)
+
+    def stale_hosts(self, num_hosts: int, timeout_s: float = 60.0):
+        now = time.time()
+        stale = []
+        for h in range(num_hosts):
+            path = os.path.join(self.dir, f"host_{h}.hb")
+            try:
+                with open(path) as f:
+                    t = json.load(f)["t"]
+                if now - t > timeout_s:
+                    stale.append(h)
+            except (FileNotFoundError, json.JSONDecodeError):
+                stale.append(h)
+        return stale
+
+
+class StragglerMonitor:
+    """Flags steps slower than ``factor × running-median``."""
+
+    def __init__(self, factor: float = 2.0, window: int = 50, warmup: int = 5):
+        self.factor = factor
+        self.times = deque(maxlen=window)
+        self.warmup = warmup
+        self.flagged = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        is_straggler = False
+        if len(self.times) >= self.warmup:
+            med = sorted(self.times)[len(self.times) // 2]
+            if dt > self.factor * med:
+                self.flagged.append((step, dt, med))
+                is_straggler = True
+        self.times.append(dt)
+        return is_straggler
+
+    def median(self) -> Optional[float]:
+        if not self.times:
+            return None
+        return sorted(self.times)[len(self.times) // 2]
+
+
+def run_restartable(
+    step_fn: Callable,           # (state, batch) -> state
+    init_state_fn: Callable,     # () -> state   (fresh start)
+    batches,                     # iterator of batches
+    *,
+    ckpt_dir: str,
+    total_steps: int,
+    save_every: int = 100,
+    max_restarts: int = 3,
+    state_to_tree: Callable = lambda s: s,
+    tree_to_state: Callable = lambda t, like: t,
+    shardings=None,
+    on_step: Optional[Callable] = None,
+):
+    """Crash-only driver: exceptions roll back to the last committed step."""
+    restarts = 0
+    monitor = StragglerMonitor()
+    while True:
+        try:
+            last = ckpt.latest_step(ckpt_dir)
+            if last is not None:
+                state = init_state_fn()
+                tree = ckpt.restore(ckpt_dir, last,
+                                    state_to_tree(state), shardings)
+                state = tree_to_state(tree, state)
+                step = last
+            else:
+                state = init_state_fn()
+                step = 0
+            it = iter(batches)
+            while step < total_steps:
+                batch = next(it)
+                t0 = time.time()
+                state = step_fn(state, batch)
+                dt = time.time() - t0
+                step += 1
+                monitor.observe(step, dt)
+                if on_step:
+                    on_step(step, state, dt)
+                if step % save_every == 0 or step == total_steps:
+                    ckpt.save(ckpt_dir, step, state_to_tree(state))
+            return state, monitor
+        except KeyboardInterrupt:
+            raise
+        except Exception:  # noqa: BLE001 — crash-only restart
+            restarts += 1
+            if restarts > max_restarts:
+                raise

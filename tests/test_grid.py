@@ -1,0 +1,92 @@
+"""Quasi-grid shape algebra (paper §3.1 f1) — unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.grid import (
+    QuasiGrid,
+    grid_shape,
+    make_quasi_grid,
+    neighborhood_offsets,
+)
+
+
+def test_same_grid_matches_input():
+    g = make_quasi_grid((10, 12), (3, 3))
+    assert g.out_shape == (10, 12)
+    assert g.pad_lo == (1, 1) and g.pad_hi == (1, 1)
+
+
+def test_valid_grid_shrinks():
+    g = make_quasi_grid((10, 12), (3, 5), padding="valid")
+    assert g.out_shape == (8, 8)
+    assert g.pad_lo == (0, 0)
+
+
+def test_stride_and_dilation():
+    g = make_quasi_grid((16,), (3,), stride=2, padding="valid", dilation=2)
+    # effective extent 5 → (16-5)//2+1 = 6
+    assert g.out_shape == (6,)
+    offs = g.offsets()
+    assert offs.tolist() == [[-2], [0], [2]]
+
+
+def test_offsets_center_is_zero():
+    for shape in [(3,), (3, 3), (5, 3, 3)]:
+        offs = neighborhood_offsets(shape, (1,) * len(shape))
+        center = int(np.prod(shape)) // 2 if all(k % 2 for k in shape) else None
+        assert (offs == 0).all(axis=1).any()
+
+
+def test_halo_widths():
+    g = make_quasi_grid((10, 10), (5, 3), dilation=(2, 1))
+    assert g.halo() == ((4, 4), (1, 1))
+
+
+def test_flat_offsets_consistency():
+    g = make_quasi_grid((6, 7), (3, 3))
+    offs = g.offsets()
+    pshape = g.padded_shape
+    flat = g.flat_offsets()
+    manual = offs[:, 0] * pshape[1] + offs[:, 1]
+    np.testing.assert_array_equal(flat, manual)
+
+
+def test_invalid_padding_rejected():
+    with pytest.raises(ValueError):
+        make_quasi_grid((4, 4), (3, 3), padding="bogus")
+    with pytest.raises(ValueError):
+        make_quasi_grid((2,), (5,), padding="valid")
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    dims=st.lists(st.integers(4, 24), min_size=1, max_size=4),
+    op=st.integers(1, 5),
+    stride=st.integers(1, 3),
+)
+def test_grid_shape_bounds(dims, op, stride):
+    """Property: 'same' grids follow ceil(n/s); 'valid' never exceed it."""
+    in_shape = tuple(dims)
+    rank = len(dims)
+    g = make_quasi_grid(in_shape, (op,) * rank, stride=stride, padding="same")
+    assert g.out_shape == tuple(-(-n // stride) for n in dims)
+    if all(n >= op for n in dims):
+        gv = make_quasi_grid(in_shape, (op,) * rank, stride=stride,
+                             padding="valid")
+        assert all(a <= b for a, b in zip(gv.out_shape, g.out_shape))
+        assert gv.num_rows >= 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    dims=st.lists(st.integers(3, 16), min_size=1, max_size=3),
+    op=st.sampled_from([1, 3, 5]),
+)
+def test_offsets_within_halo(dims, op):
+    rank = len(dims)
+    g = make_quasi_grid(tuple(dims), (op,) * rank)
+    offs = g.offsets()
+    for d, (lo, hi) in enumerate(g.halo()):
+        assert offs[:, d].min() >= -lo
+        assert offs[:, d].max() <= hi

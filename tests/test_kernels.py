@@ -1,0 +1,114 @@
+"""Pallas kernels vs ref.py oracles — shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.filters import bilateral_filter, gaussian_weights
+from repro.core.grid import make_quasi_grid
+from repro.kernels import ops
+from repro.kernels import ref as kref
+
+
+@pytest.mark.parametrize("shape", [(64,), (17, 23), (9, 12, 11), (5, 6, 4, 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_stencil_matches_melt(shape, dtype):
+    rng = np.random.RandomState(len(shape))
+    x = jnp.asarray(rng.randn(*shape), dtype)
+    op = (3,) * len(shape)
+    w = gaussian_weights(op, 1.0)
+    grid = make_quasi_grid(shape, op, 1, "same", 1)
+    got = ops.fused_stencil(x, grid, w)
+    want = kref.stencil_ref(x.astype(jnp.float32), op, w).astype(dtype)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("op", [3, 5])
+def test_fused_stencil_op_sizes(op):
+    rng = np.random.RandomState(op)
+    x = jnp.asarray(rng.randn(20, 20), jnp.float32)
+    w = gaussian_weights((op, op), 1.3)
+    grid = make_quasi_grid(x.shape, (op, op), 1, "same", 1)
+    got = ops.fused_stencil(x, grid, w)
+    want = kref.stencil_ref(x, (op, op), w)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(8, 40), m=st.integers(8, 40))
+def test_fused_stencil_property_sweep(n, m):
+    rng = np.random.RandomState(n * 41 + m)
+    x = jnp.asarray(rng.randn(n, m), jnp.float32)
+    w = jnp.asarray(rng.randn(9), jnp.float32)  # arbitrary operator
+    grid = make_quasi_grid((n, m), (3, 3), 1, "same", 1)
+    got = ops.fused_stencil(x, grid, w)
+    want = kref.stencil_ref(x, (3, 3), w)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("sigma_r", [0.5, "adaptive"])
+@pytest.mark.parametrize("shape", [(24, 18), (10, 9, 8)])
+def test_bilateral_kernel_matches_core(shape, sigma_r):
+    rng = np.random.RandomState(42)
+    x = jnp.asarray(rng.randn(*shape), jnp.float32)
+    got = ops.fused_bilateral(x, 3, 1.5, sigma_r)
+    want = bilateral_filter(x, 3, 1.5, sigma_r)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window,tile", [(128, 128), (256, 128), (128, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_local_attention_matches_dense(window, tile, dtype):
+    rng = np.random.RandomState(window + tile)
+    B, S, H, dh = 2, 512, 4, 64
+    q = jnp.asarray(rng.randn(B, S, H, dh) * 0.3, dtype)
+    k = jnp.asarray(rng.randn(B, S, H, dh) * 0.3, dtype)
+    v = jnp.asarray(rng.randn(B, S, H, dh), dtype)
+    got = ops.sliding_window_attention(q, k, v, window=window, tile=tile)
+    want = kref.local_attention_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        window=window)
+    tol = 3e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_local_attention_matches_banded_model_path():
+    """Kernel ≡ the model's banded attention (same melt-over-sequence)."""
+    from repro.models.attention import banded_attention
+
+    rng = np.random.RandomState(3)
+    B, S, H, dh = 1, 256, 2, 32
+    q = jnp.asarray(rng.randn(B, S, H, dh) * 0.4, jnp.float32)
+    k = jnp.asarray(rng.randn(B, S, H, dh) * 0.4, jnp.float32)
+    v = jnp.asarray(rng.randn(B, S, H, dh), jnp.float32)
+    got = ops.sliding_window_attention(q, k, v, window=64, tile=64)
+    want = banded_attention(q, k, v, window=64)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("K", [2, 4])
+@pytest.mark.parametrize("C", [8, 64])
+def test_depthwise_conv_sweep(K, C):
+    rng = np.random.RandomState(K * C)
+    x = jnp.asarray(rng.randn(3, 33, C), jnp.float32)
+    w = jnp.asarray(rng.randn(K, C), jnp.float32)
+    got = ops.depthwise_conv1d(x, w)
+    want = kref.depthwise_conv1d_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_depthwise_matches_model_layer():
+    from repro.models.layers import causal_depthwise_conv1d
+
+    rng = np.random.RandomState(9)
+    x = jnp.asarray(rng.randn(2, 16, 12), jnp.float32)
+    w = jnp.asarray(rng.randn(4, 12), jnp.float32)
+    got = ops.depthwise_conv1d(x, w)
+    want, _ = causal_depthwise_conv1d(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,52 @@
+"""Paper §2.4 partition conditions — property-based."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.grid import make_quasi_grid
+from repro.core.partition import (
+    permutation_matrix,
+    plan_row_partition,
+    plan_slab_partition,
+    validate_partition,
+)
+
+
+@settings(max_examples=100, deadline=None)
+@given(rows=st.integers(1, 500), shards=st.integers(1, 64))
+def test_planned_partitions_satisfy_conditions(rows, shards):
+    ranges = plan_row_partition(rows, shards)
+    assert validate_partition(ranges, rows)
+    assert len(ranges) == min(shards, rows)
+    sizes = [e - s for s, e in ranges]
+    assert max(sizes) - min(sizes) <= 1  # near-equal load
+
+
+@settings(max_examples=50, deadline=None)
+@given(rows=st.integers(2, 100), shards=st.integers(2, 8))
+def test_condition3_permutation_reconstructs(rows, shards):
+    """∃ invertible A with A·vstack(P) = M (checked explicitly)."""
+    rng = np.random.RandomState(rows * 7 + shards)
+    M = rng.randn(rows, 3)
+    ranges = plan_row_partition(rows, shards)
+    A = permutation_matrix(ranges, rows)
+    stack = np.vstack([M[s:e] for s, e in ranges])
+    np.testing.assert_array_equal(A @ stack, M)
+    assert abs(round(float(np.linalg.det(A)))) == 1  # invertible
+
+
+def test_invalid_partitions_rejected():
+    assert not validate_partition([(0, 3), (2, 5)], 5)   # overlap
+    assert not validate_partition([(0, 2), (3, 5)], 5)   # gap
+    assert not validate_partition([(0, 0), (0, 5)], 5)   # empty block
+    assert not validate_partition([], 5)
+
+
+def test_slab_partition_alignment():
+    g = make_quasi_grid((12, 7), (3, 3))
+    plan = plan_slab_partition(g, 4)
+    rows_per = g.num_rows // 12
+    covered = []
+    for (r0, r1), (s0, s1) in plan:
+        assert r0 == s0 * rows_per and r1 == s1 * rows_per
+        covered.append((r0, r1))
+    assert validate_partition(covered, g.num_rows)
