@@ -5,9 +5,20 @@ partition planning satisfying the paper's §2.4 conditions, generic
 (Hilbert-complete) filters, and the distributed shard_map engine with halo
 exchange.
 """
-from repro.core.grid import QuasiGrid, make_quasi_grid, neighborhood_offsets
+from repro.core.grid import (
+    QuasiGrid,
+    make_quasi_grid,
+    neighborhood_offsets,
+    normalize_pad_value,
+)
 from repro.core.melt import MeltMatrix, melt, unmelt
 from repro.core.engine import MeltEngine, apply_stencil
+from repro.core.plan import (
+    StencilPlan,
+    clear_plan_cache,
+    get_plan,
+    plan_cache_stats,
+)
 from repro.core.partition import (
     plan_row_partition,
     plan_slab_partition,
@@ -24,6 +35,11 @@ __all__ = [
     "QuasiGrid",
     "make_quasi_grid",
     "neighborhood_offsets",
+    "normalize_pad_value",
+    "StencilPlan",
+    "get_plan",
+    "plan_cache_stats",
+    "clear_plan_cache",
     "MeltMatrix",
     "melt",
     "unmelt",

@@ -12,6 +12,13 @@ JAX-native mapping (DESIGN.md §2):
   input to every worker as a multiprocessing pool does;
 - the aggregation (unmelt) is shard-local — output sharding equals input
   sharding, so chained stencils need no resharding.
+
+Batch × slab sharding (DESIGN.md §3): with ``batch_axis_name`` set,
+``sharded_stencil_fn`` expects inputs ``(B, *spatial)`` sharded as
+``P(batch_axis, spatial_axis, ...)`` — the batch axis is embarrassingly
+parallel (no exchange), the leading spatial dim keeps the halo exchange,
+and each device runs one *batched* local stencil over its (batch-slab ×
+spatial-slab) block.
 """
 from __future__ import annotations
 
@@ -23,10 +30,33 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.grid import make_quasi_grid
+from repro.core.grid import make_quasi_grid, normalize_pad_value
 from repro.core.engine import apply_stencil
+from repro.core.melt import pad_array
 
 __all__ = ["halo_exchange", "distributed_stencil", "sharded_stencil_fn"]
+
+
+def _slice_axis(x: jax.Array, lo: int, hi: int, axis: int) -> jax.Array:
+    return jax.lax.slice_in_dim(x, lo, hi, axis=axis)
+
+
+def _edge_block(x_local: jax.Array, width: int, axis: int, first: bool,
+                pad_value) -> jax.Array:
+    """Edge padding block for a boundary device (constant or edge mode)."""
+    pv = normalize_pad_value(pad_value)
+    if isinstance(pv, str):
+        if pv != "edge":
+            raise NotImplementedError(
+                f"halo_exchange supports constant or 'edge' padding, "
+                f"got {pv!r}")
+        n = x_local.shape[axis]
+        sl = _slice_axis(x_local, 0, 1, axis) if first else \
+            _slice_axis(x_local, n - 1, n, axis)
+        return jnp.repeat(sl, width, axis=axis)
+    shape = list(x_local.shape)
+    shape[axis] = width
+    return jnp.full(tuple(shape), pv, x_local.dtype)
 
 
 def halo_exchange(
@@ -35,60 +65,49 @@ def halo_exchange(
     halo_hi: int,
     axis_name: str,
     pad_value=0.0,
+    axis: int = 0,
 ) -> jax.Array:
-    """Extend a device-local slab with neighbour boundary slices along dim 0.
+    """Extend a device-local slab with neighbour boundary slices along ``axis``.
 
     Edge devices receive constant/edge padding instead of wrapped data.
-    Returns an array of shape (halo_lo + n_local + halo_hi, ...).
+    Returns an array whose ``axis`` extent grows by ``halo_lo + halo_hi``.
     """
     idx = jax.lax.axis_index(axis_name)
-    num = jax.lax.axis_size(axis_name)
+    num = jax.lax.psum(1, axis_name)  # axis size (portable across jax vers)
+    n = x_local.shape[axis]
     parts = []
     if halo_lo > 0:
         # receive the *last* halo_lo rows of the left neighbour
         src = jax.lax.ppermute(
-            x_local[-halo_lo:], axis_name,
+            _slice_axis(x_local, n - halo_lo, n, axis), axis_name,
             perm=[(i, (i + 1) % num) for i in range(num)],
         )
-        if pad_value == "edge":
-            edge = jnp.broadcast_to(x_local[:1], (halo_lo,) + x_local.shape[1:])
-        else:
-            edge = jnp.full((halo_lo,) + x_local.shape[1:], pad_value,
-                            x_local.dtype)
+        edge = _edge_block(x_local, halo_lo, axis, True, pad_value)
         parts.append(jnp.where(idx == 0, edge, src))
     parts.append(x_local)
     if halo_hi > 0:
         src = jax.lax.ppermute(
-            x_local[:halo_hi], axis_name,
+            _slice_axis(x_local, 0, halo_hi, axis), axis_name,
             perm=[(i, (i - 1) % num) for i in range(num)],
         )
-        if pad_value == "edge":
-            edge = jnp.broadcast_to(x_local[-1:], (halo_hi,) + x_local.shape[1:])
-        else:
-            edge = jnp.full((halo_hi,) + x_local.shape[1:], pad_value,
-                            x_local.dtype)
+        edge = _edge_block(x_local, halo_hi, axis, False, pad_value)
         parts.append(jnp.where(idx == num - 1, edge, src))
-    return jnp.concatenate(parts, axis=0)
+    return jnp.concatenate(parts, axis=axis)
 
 
-def _local_stencil(x_halo, grid_full, weights, pad_value, method):
-    """Stencil on a halo-extended slab: valid along dim0, same elsewhere."""
-    rank = x_halo.ndim
-    # pad the non-leading dims exactly as the global 'same' grid would
-    pads = [(0, 0)] + [
+def _local_stencil(x_halo, grid_full, weights, pad_value, method,
+                   batched: bool = False):
+    """Stencil on a halo-extended slab: valid along the sharded spatial dim,
+    'same' elsewhere (non-leading spatial dims are pre-padded here)."""
+    pads = ([(0, 0)] if batched else []) + [(0, 0)] + [
         (lo, hi) for lo, hi in zip(grid_full.pad_lo[1:], grid_full.pad_hi[1:])
     ]
-    if any(p != (0, 0) for p in pads):
-        if pad_value == "edge":
-            xp = jnp.pad(x_halo, pads, mode="edge")
-        else:
-            xp = jnp.pad(x_halo, pads, constant_values=pad_value)
-    else:
-        xp = x_halo
+    xp = pad_array(x_halo, pads, pad_value) \
+        if any(p != (0, 0) for p in pads) else x_halo
     return apply_stencil(
         xp, grid_full.op_shape, weights,
         stride=grid_full.stride, padding="valid", dilation=grid_full.dilation,
-        pad_value=0.0, method=method,
+        pad_value=0.0, method=method, batched=batched,
     )
 
 
@@ -102,28 +121,48 @@ def sharded_stencil_fn(
     dilation=1,
     pad_value=0.0,
     method: str = "auto",
+    batch_axis_name: Optional[str] = None,
 ):
     """Build a jit-able distributed stencil for inputs sharded on dim 0.
 
     stride is fixed to 1 (sharded slab boundaries must align with grid
     slices; production LM uses stride-1 windows).  Returns ``f(x)`` with
     in/out sharding ``P(axis_name, None, ...)``.
+
+    With ``batch_axis_name``, ``in_shape`` is ``(B, *spatial)`` and the
+    returned function shards the batch over ``batch_axis_name`` and the
+    leading *spatial* dim over ``axis_name`` (batch × spatial-slab).
     """
-    grid_full = make_quasi_grid(in_shape, op_shape, 1, "same", dilation)
+    pad_value = normalize_pad_value(pad_value)
+    batched = batch_axis_name is not None
+    in_shape = tuple(int(s) for s in in_shape)
+    spatial_shape = in_shape[1:] if batched else in_shape
+    grid_full = make_quasi_grid(spatial_shape, op_shape, 1, "same", dilation)
     halo_lo, halo_hi = grid_full.halo()[0]
     n_shards = mesh.shape[axis_name]
-    if grid_full.in_shape[0] % n_shards:
+    if spatial_shape[0] % n_shards:
         raise ValueError(
-            f"leading dim {grid_full.in_shape[0]} not divisible by "
+            f"leading spatial dim {spatial_shape[0]} not divisible by "
             f"{n_shards} shards"
         )
+    if batched and in_shape[0] % mesh.shape[batch_axis_name]:
+        raise ValueError(
+            f"batch dim {in_shape[0]} not divisible by "
+            f"{mesh.shape[batch_axis_name]} batch shards"
+        )
+    sdim = 1 if batched else 0  # sharded spatial dim in the local block
 
     def local_fn(x_local):
-        x_halo = halo_exchange(x_local, halo_lo, halo_hi, axis_name, pad_value)
-        return _local_stencil(x_halo, grid_full, weights, pad_value, method)
+        x_halo = halo_exchange(x_local, halo_lo, halo_hi, axis_name,
+                               pad_value, axis=sdim)
+        return _local_stencil(x_halo, grid_full, weights, pad_value, method,
+                              batched=batched)
 
-    rank = len(in_shape)
-    spec = P(axis_name, *([None] * (rank - 1)))
+    rank = len(spatial_shape)
+    if batched:
+        spec = P(batch_axis_name, axis_name, *([None] * (rank - 1)))
+    else:
+        spec = P(axis_name, *([None] * (rank - 1)))
     return shard_map(
         local_fn, mesh=mesh, in_specs=(spec,), out_specs=spec,
         check_rep=False,
@@ -136,11 +175,18 @@ def distributed_stencil(
     axis_name: str,
     op_shape,
     weights,
+    *,
+    batch_axis_name: Optional[str] = None,
     **kw,
 ) -> jax.Array:
     """One-shot convenience wrapper around :func:`sharded_stencil_fn`."""
-    fn = sharded_stencil_fn(mesh, axis_name, x.shape, op_shape, weights, **kw)
-    rank = x.ndim
-    spec = P(axis_name, *([None] * (rank - 1)))
+    fn = sharded_stencil_fn(mesh, axis_name, x.shape, op_shape, weights,
+                            batch_axis_name=batch_axis_name, **kw)
+    batched = batch_axis_name is not None
+    rank = x.ndim - (1 if batched else 0)
+    if batched:
+        spec = P(batch_axis_name, axis_name, *([None] * (rank - 1)))
+    else:
+        spec = P(axis_name, *([None] * (rank - 1)))
     x = jax.device_put(x, NamedSharding(mesh, spec))
     return jax.jit(fn)(x)

@@ -12,7 +12,14 @@ execution paths implement the identical math:
 - ``lax``         : XLA-native convolution lowering, used as a second
   independent reference and as the fast CPU path.
 
-All paths are rank-agnostic.
+All paths are rank-agnostic, and all three accept an optional leading
+*batch* dimension (``batched=True``): every melt row of every batch item is
+independent (paper §3.1), so a batch is just more rows — one dispatch, one
+kernel launch (DESIGN.md §3).
+
+Concrete (non-traced) calls are routed through the :class:`StencilPlan`
+cache (DESIGN.md §7): repeated calls with the same shape signature reuse a
+pre-derived ``QuasiGrid`` and a pre-traced jitted executor.
 """
 from __future__ import annotations
 
@@ -22,32 +29,36 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.grid import QuasiGrid, make_quasi_grid
-from repro.core.melt import melt, unmelt
+from repro.core.grid import (
+    QuasiGrid,
+    make_quasi_grid,
+    normalize_pad_value,
+)
+from repro.core.melt import melt, pad_array, unmelt
+from repro.core.plan import get_plan, resolve_method
 
-__all__ = ["apply_stencil", "MeltEngine"]
+__all__ = ["apply_stencil", "execute_stencil", "MeltEngine"]
 
 
-def _stencil_materialize(x, grid: QuasiGrid, weights, pad_value):
+def _stencil_materialize(x, grid: QuasiGrid, weights, pad_value, batched):
     M = melt(x, grid.op_shape, grid.stride, grid.padding, grid.dilation,
-             pad_value=pad_value, grid=grid)
+             pad_value=pad_value, grid=grid, batched=batched)
     rows = M.data @ weights.astype(M.data.dtype)
-    return unmelt(rows, grid)
+    return unmelt(rows, grid, batched=batched)
 
 
-def _stencil_lax(x, grid: QuasiGrid, weights, pad_value):
-    if pad_value not in (0, 0.0):
+def _stencil_lax(x, grid: QuasiGrid, weights, pad_value, batched):
+    pv = normalize_pad_value(pad_value)
+    lead = [(0, 0)] if batched else []
+    if isinstance(pv, str) or pv != 0.0:
         # lax conv only supports zero padding; pre-pad and run 'valid'
-        xp = jnp.pad(x, list(zip(grid.pad_lo, grid.pad_hi)), mode="edge") \
-            if pad_value == "edge" else jnp.pad(
-                x, list(zip(grid.pad_lo, grid.pad_hi)), mode="constant",
-                constant_values=pad_value)
+        xp = pad_array(x, lead + list(zip(grid.pad_lo, grid.pad_hi)), pv)
         pad_cfg = [(0, 0)] * grid.rank
     else:
         xp = x
         pad_cfg = list(zip(grid.pad_lo, grid.pad_hi))
     kern = weights.reshape(grid.op_shape).astype(x.dtype)
-    lhs = xp[None, None]  # N, C, spatial...
+    lhs = xp[:, None] if batched else xp[None, None]  # N, C, spatial...
     rhs = kern[None, None]  # O, I, spatial...
     spatial = "".join(chr(ord("0") + i) for i in range(grid.rank))
     dn = jax.lax.conv_dimension_numbers(
@@ -61,7 +72,24 @@ def _stencil_lax(x, grid: QuasiGrid, weights, pad_value):
         rhs_dilation=grid.dilation,
         dimension_numbers=dn,
     )
-    return out[0, 0]
+    return out[:, 0] if batched else out[0, 0]
+
+
+def execute_stencil(x, grid: QuasiGrid, weights, pad_value, method: str,
+                    batched: bool = False):
+    """Run one resolved stencil problem — shared by plans and direct calls."""
+    if method == "materialize":
+        return _stencil_materialize(x, grid, weights, pad_value, batched)
+    if method == "lax":
+        return _stencil_lax(x, grid, weights, pad_value, batched)
+    if method == "fused":
+        from repro.kernels import melt_stencil_ops  # lazy: kernels optional
+
+        return melt_stencil_ops.fused_stencil(
+            x, grid, weights, pad_value=normalize_pad_value(pad_value),
+            batched=batched,
+        )
+    raise ValueError(f"unknown method {method!r}")
 
 
 def apply_stencil(
@@ -75,68 +103,79 @@ def apply_stencil(
     pad_value=0.0,
     method: str = "auto",
     grid: Optional[QuasiGrid] = None,
+    batched: bool = False,
 ) -> jax.Array:
     """Apply a linear stencil (operator ravel-vector ``weights``) to ``x``.
 
     Correlation convention: output[g] = Σ_c weights[c] · x[g + offset_c].
+
+    With ``batched=True`` the leading dim of ``x`` is a stack of independent
+    tensors and ``op_shape``/``stride``/... describe the trailing dims; the
+    result keeps the batch dim.  Concrete inputs dispatch through the
+    process-wide :class:`~repro.core.plan.StencilPlan` cache; traced inputs
+    (already inside someone's jit/shard_map) execute inline.
     """
-    if grid is None:
-        grid = make_quasi_grid(x.shape, op_shape, stride, padding, dilation)
     weights = jnp.asarray(weights).reshape(-1)
+    if grid is None:
+        if not isinstance(x, jax.core.Tracer):
+            plan = get_plan(x.shape, x.dtype, op_shape, stride, padding,
+                            dilation, pad_value, method, batched)
+            _check_weights(weights, plan.grid)
+            return plan(x, weights)
+        spatial = x.shape[1:] if batched else x.shape
+        grid = make_quasi_grid(spatial, op_shape, stride, padding, dilation)
+    _check_weights(weights, grid)
+    return execute_stencil(x, grid, weights, pad_value,
+                           resolve_method(method), batched)
+
+
+def _check_weights(weights, grid: QuasiGrid):
     if weights.shape[0] != grid.num_cols:
         raise ValueError(
-            f"weights has {weights.shape[0]} elements, operator needs {grid.num_cols}"
+            f"weights has {weights.shape[0]} elements, operator needs "
+            f"{grid.num_cols}"
         )
-    if method == "auto":
-        on_tpu = jax.default_backend() == "tpu"
-        method = "fused" if on_tpu else "lax"
-    if method == "materialize":
-        return _stencil_materialize(x, grid, weights, pad_value)
-    if method == "lax":
-        return _stencil_lax(x, grid, weights, pad_value)
-    if method == "fused":
-        from repro.kernels import melt_stencil_ops  # lazy: kernels optional
-
-        return melt_stencil_ops.fused_stencil(
-            x, grid, weights, pad_value=pad_value
-        )
-    raise ValueError(f"unknown method {method!r}")
 
 
 class MeltEngine:
     """Explicit decouple→compute→couple driver (paper Fig. 2).
 
     Mostly useful for inspection/benchmarks; production code calls
-    ``apply_stencil`` / the distributed engine directly.
+    ``apply_stencil`` / the distributed engine directly.  ``batched=True``
+    treats the leading dim of every input as a stack of independent tensors.
     """
 
     def __init__(self, op_shape, stride=1, padding="same", dilation=1,
-                 pad_value=0.0, method="auto"):
+                 pad_value=0.0, method="auto", batched=False):
         self.op_shape = op_shape
         self.stride = stride
         self.padding = padding
         self.dilation = dilation
-        self.pad_value = pad_value
+        self.pad_value = normalize_pad_value(pad_value)
         self.method = method
+        self.batched = batched
 
     def grid_for(self, x) -> QuasiGrid:
+        spatial = x.shape[1:] if self.batched else x.shape
         return make_quasi_grid(
-            x.shape, self.op_shape, self.stride, self.padding, self.dilation
+            spatial, self.op_shape, self.stride, self.padding, self.dilation
         )
 
     def decouple(self, x):
         return melt(x, self.op_shape, self.stride, self.padding,
-                    self.dilation, pad_value=self.pad_value)
+                    self.dilation, pad_value=self.pad_value,
+                    batched=self.batched)
 
     def compute(self, M, weights):
         return M.data @ jnp.asarray(weights).reshape(-1).astype(M.data.dtype)
 
     def couple(self, rows, grid: QuasiGrid):
-        return unmelt(rows, grid)
+        return unmelt(rows, grid, batched=self.batched)
 
     def __call__(self, x, weights):
         return apply_stencil(
             x, self.op_shape, weights,
             stride=self.stride, padding=self.padding, dilation=self.dilation,
             pad_value=self.pad_value, method=self.method,
+            batched=self.batched,
         )

@@ -58,14 +58,20 @@ def gaussian_filter(
     *,
     method: str = "auto",
     pad_value=0.0,
+    batched: bool = False,
 ) -> jax.Array:
-    """Rank-agnostic Gaussian smoothing: melt → broadcast → couple."""
-    rank = x.ndim
+    """Rank-agnostic Gaussian smoothing: melt → broadcast → couple.
+
+    ``batched=True``: the leading dim of ``x`` is a stack of independent
+    tensors, filtered in one batched stencil dispatch (DESIGN.md §3).
+    """
+    rank = x.ndim - (1 if batched else 0)
     op = (op_shape,) * rank if isinstance(op_shape, int) else tuple(op_shape)
     w = gaussian_weights(op, sigma).astype(x.dtype)
     from repro.core.engine import apply_stencil  # local import, avoids cycle
 
-    return apply_stencil(x, op, w, method=method, pad_value=pad_value)
+    return apply_stencil(x, op, w, method=method, pad_value=pad_value,
+                         batched=batched)
 
 
 def _spatial_log_weights(grid: QuasiGrid, sigma_d) -> jnp.ndarray:
@@ -84,6 +90,7 @@ def bilateral_filter(
     *,
     pad_value="edge",
     eps: float = 1e-6,
+    batched: bool = False,
 ) -> jax.Array:
     """Generic bilateral filter, Eq. (3), any rank.
 
@@ -92,24 +99,28 @@ def bilateral_filter(
     — the paper's proposal that σ_r should be a function of the grid point:
     we use the *local standard deviation of the melt row*, i.e. a dynamic
     ruler per scanned scope (§3.2).
+
+    ``batched=True``: leading dim of ``x`` is a stack; all row-wise math
+    below reduces over the last (column) axis, so one batched melt feeds the
+    whole stack.
     """
-    rank = x.ndim
+    rank = x.ndim - (1 if batched else 0)
     op = (op_shape,) * rank if isinstance(op_shape, int) else tuple(op_shape)
-    M = melt(x.astype(jnp.float32), op, pad_value=pad_value)
-    data = M.data  # (rows, cols)
-    center = M.center_column()[:, None]  # (rows, 1)
-    log_sp = _spatial_log_weights(M.grid, sigma_d)[None, :]  # (1, cols)
+    M = melt(x.astype(jnp.float32), op, pad_value=pad_value, batched=batched)
+    data = M.data  # (..., rows, cols)
+    center = M.center_column()[..., None]  # (..., rows, 1)
+    log_sp = _spatial_log_weights(M.grid, sigma_d)  # (cols,)
     diff2 = (data - center) ** 2
     if isinstance(sigma_r, str):
         if sigma_r != "adaptive":
             raise ValueError(f"unknown sigma_r mode {sigma_r!r}")
-        var_local = jnp.var(data, axis=1, keepdims=True) + eps
+        var_local = jnp.var(data, axis=-1, keepdims=True) + eps
         log_rng = -diff2 / (2.0 * var_local)
     else:
         log_rng = -diff2 / (2.0 * float(sigma_r) ** 2)
     W = jnp.exp(log_sp + log_rng)
-    out_rows = jnp.sum(W * data, axis=1) / (jnp.sum(W, axis=1) + eps)
-    return unmelt(out_rows, M.grid).astype(x.dtype)
+    out_rows = jnp.sum(W * data, axis=-1) / (jnp.sum(W, axis=-1) + eps)
+    return unmelt(out_rows, M.grid, batched=batched).astype(x.dtype)
 
 
 def difference_stencils(rank: int) -> tuple[np.ndarray, np.ndarray]:
@@ -152,23 +163,26 @@ def difference_stencils(rank: int) -> tuple[np.ndarray, np.ndarray]:
     return grad_w, hess_w
 
 
-def gaussian_curvature(x: jax.Array, *, pad_value="edge") -> jax.Array:
+def gaussian_curvature(x: jax.Array, *, pad_value="edge",
+                       batched: bool = False) -> jax.Array:
     """Generalized Gaussian curvature, Eq. (6)/(7), for any-rank dense tensors.
 
     K = det(H(I)) / (1 + Σ_i I_{d_i}²)²  with H the melt-derived Hessian.
+    ``batched=True`` stacks independent tensors along the leading dim.
     """
-    rank = x.ndim
-    M = melt(x.astype(jnp.float32), (3,) * rank, pad_value=pad_value)
+    rank = x.ndim - (1 if batched else 0)
+    M = melt(x.astype(jnp.float32), (3,) * rank, pad_value=pad_value,
+             batched=batched)
     grad_w, hess_w = difference_stencils(rank)
     cols = M.num_cols
-    # single fused contraction: (rows, cols) @ (cols, rank + rank²)
+    # single fused contraction: (..., rows, cols) @ (cols, rank + rank²)
     W = jnp.asarray(
         np.concatenate([grad_w, hess_w.reshape(cols, rank * rank)], axis=1),
         dtype=jnp.float32,
     )
-    D = M.data @ W  # (rows, rank + rank²)
-    g = D[:, :rank]
-    H = D[:, rank:].reshape(-1, rank, rank)
+    D = M.data @ W  # (..., rows, rank + rank²)
+    g = D[..., :rank]
+    H = D[..., rank:].reshape(D.shape[:-1] + (rank, rank))
     detH = jnp.linalg.det(H)
-    K = detH / (1.0 + jnp.sum(g * g, axis=1)) ** 2
-    return unmelt(K, M.grid).astype(x.dtype)
+    K = detH / (1.0 + jnp.sum(g * g, axis=-1)) ** 2
+    return unmelt(K, M.grid, batched=batched).astype(x.dtype)

@@ -26,10 +26,32 @@ import numpy as np
 __all__ = [
     "QuasiGrid",
     "normalize_tuple",
+    "normalize_pad_value",
     "grid_shape",
     "neighborhood_offsets",
     "make_quasi_grid",
 ]
+
+#: padding modes accepted as string ``pad_value``s (jnp.pad mode names)
+PAD_MODES = ("edge", "reflect")
+
+
+def normalize_pad_value(pad_value):
+    """Canonicalize a ``pad_value`` to a float or a known mode string.
+
+    Numeric values (ints, numpy scalars, ...) become ``float`` so that plan
+    keys hash consistently (``0`` and ``0.0`` are the same plan) and so that
+    execution paths can branch on ``isinstance(pv, str)`` instead of
+    comparing a possibly-string value against floats.
+    """
+    if isinstance(pad_value, str):
+        if pad_value not in PAD_MODES:
+            raise ValueError(
+                f"unknown pad_value mode {pad_value!r}; "
+                f"expected a number or one of {PAD_MODES}"
+            )
+        return pad_value
+    return float(pad_value)
 
 
 def normalize_tuple(v, rank: int, name: str) -> Tuple[int, ...]:

@@ -19,9 +19,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.grid import QuasiGrid, make_quasi_grid
+from repro.core.grid import QuasiGrid, make_quasi_grid, normalize_pad_value
 
-__all__ = ["MeltMatrix", "melt", "unmelt", "melt_rows_for_slab"]
+__all__ = ["MeltMatrix", "melt", "unmelt", "melt_rows_for_slab", "pad_array"]
+
+
+def pad_array(x: jax.Array, pads, pad_value) -> jax.Array:
+    """``jnp.pad`` under the engine's pad_value convention.
+
+    ``pad_value`` is a number (constant fill) or a ``jnp.pad`` mode string
+    (see ``grid.normalize_pad_value``).  Every execution path pads through
+    here so the two interpretations can never drift apart again.
+    """
+    pv = normalize_pad_value(pad_value)
+    if isinstance(pv, str):
+        return jnp.pad(x, pads, mode=pv)
+    return jnp.pad(x, pads, mode="constant", constant_values=pv)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -36,8 +49,8 @@ class MeltMatrix:
     included inside the intermediary structure".
     """
 
-    data: jax.Array  # (num_rows, num_cols)
-    grid: QuasiGrid  # static metadata
+    data: jax.Array  # (num_rows, num_cols), or (batch, num_rows, num_cols)
+    grid: QuasiGrid  # static metadata (spatial dims only; batch is data)
 
     # -- pytree protocol (grid is static) ---------------------------------
     def tree_flatten(self):
@@ -61,26 +74,19 @@ class MeltMatrix:
         return self.grid.out_shape
 
     def center_column(self) -> jax.Array:
-        """Values of the grid centers, shape (num_rows,)."""
+        """Values of the grid centers, shape (num_rows,) (+ leading batch)."""
         c = int(np.ravel_multi_index(
             tuple((k - 1) // 2 for k in self.grid.op_shape), self.grid.op_shape
         ))
-        return self.data[:, c]
+        return self.data[..., c]
 
 
-def _pad(x: jax.Array, grid: QuasiGrid, pad_value) -> jax.Array:
+def _pad(x: jax.Array, grid: QuasiGrid, pad_value, batched: bool = False
+         ) -> jax.Array:
     if all(l == 0 and h == 0 for l, h in zip(grid.pad_lo, grid.pad_hi)):
         return x
-    if pad_value == "edge":
-        return jnp.pad(x, list(zip(grid.pad_lo, grid.pad_hi)), mode="edge")
-    if pad_value == "reflect":
-        return jnp.pad(x, list(zip(grid.pad_lo, grid.pad_hi)), mode="reflect")
-    return jnp.pad(
-        x,
-        list(zip(grid.pad_lo, grid.pad_hi)),
-        mode="constant",
-        constant_values=pad_value,
-    )
+    pads = ([(0, 0)] if batched else []) + list(zip(grid.pad_lo, grid.pad_hi))
+    return pad_array(x, pads, pad_value)
 
 
 def melt(
@@ -91,38 +97,49 @@ def melt(
     dilation=1,
     pad_value=0.0,
     grid: Optional[QuasiGrid] = None,
+    batched: bool = False,
 ) -> MeltMatrix:
     """Decouple: build the melt matrix of ``x`` under operator shape ``op_shape``.
 
     Dimension-independent: works for any rank (the Hilbert-completeness
-    requirement — rank is data, not code structure).
+    requirement — rank is data, not code structure).  With ``batched=True``
+    the leading dim of ``x`` is a stack of independent tensors; the grid
+    describes the trailing (spatial) dims and ``data`` gains a leading batch
+    dim — every row of every item is still independent (paper §3.1 extends
+    trivially to batches).
     """
     if grid is None:
-        grid = make_quasi_grid(x.shape, op_shape, stride, padding, dilation)
-    xp = _pad(x, grid, pad_value)
-    flat = xp.reshape(-1)
+        spatial = x.shape[1:] if batched else x.shape
+        grid = make_quasi_grid(spatial, op_shape, stride, padding, dilation)
+    xp = _pad(x, grid, pad_value, batched=batched)
     base = jnp.asarray(grid.base_flat_indices())  # (rows,)
     offs = jnp.asarray(grid.flat_offsets())  # (cols,)
     idx = base[:, None] + offs[None, :]  # (rows, cols)
-    return MeltMatrix(data=flat[idx], grid=grid)
+    if batched:
+        flat = xp.reshape(xp.shape[0], -1)
+        return MeltMatrix(data=flat[:, idx], grid=grid)
+    return MeltMatrix(data=xp.reshape(-1)[idx], grid=grid)
 
 
 def unmelt(
     values: jax.Array,
     grid: QuasiGrid,
     mode: str = "grid",
+    batched: bool = False,
 ) -> jax.Array:
     """Couple: aggregate per-row results back to the output grid.
 
     ``values`` is (num_rows,) or (num_rows, c) — one result per grid point
     (the usual case after broadcasting a kernel over the melt matrix and
     reducing over columns).  ``mode='grid'`` reshapes to ``s'`` (+ trailing
-    channel dims).
+    channel dims).  With ``batched=True`` a leading batch dim is preserved.
     """
     if mode != "grid":
         raise ValueError(f"unknown unmelt mode {mode!r}")
-    trailing = values.shape[1:]
-    return values.reshape(grid.out_shape + trailing)
+    nb = 1 if batched else 0
+    batch = values.shape[:nb]
+    trailing = values.shape[nb + 1:]
+    return values.reshape(batch + grid.out_shape + trailing)
 
 
 def scatter_unmelt(column_values: jax.Array, grid: QuasiGrid) -> jax.Array:

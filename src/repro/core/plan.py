@@ -1,0 +1,199 @@
+"""StencilPlan — cached, hashable execution plans for the melt engine.
+
+Serving-oriented amortization (ROADMAP: "serve heavy traffic"): deriving the
+:class:`~repro.core.grid.QuasiGrid` and retracing/compiling the stencil body
+are pure per-*shape* costs, yet ``apply_stencil`` used to pay them per call.
+A :class:`StencilPlan` captures everything static about one stencil problem —
+
+    (input shape, dtype, op_shape, stride, padding, dilation,
+     normalized pad_value, execution path, batched?)
+
+— together with its derived ``QuasiGrid`` and a jitted executor, in a
+process-wide cache.  Repeated calls with the same signature skip grid
+derivation and XLA retracing entirely: dispatch is one dict lookup plus a
+jit cache hit (DESIGN.md §7).
+
+The cache is LRU-bounded (``PLAN_CACHE_CAPACITY`` plans): each plan pins a
+compiled executor, so a server fed ragged shapes must not accumulate them
+forever.  Eviction drops the plan and its executor together; a re-request
+simply rebuilds (one miss).
+
+``pad_value`` is normalized at plan construction (``0`` ≡ ``0.0``; strings
+must be known ``jnp.pad`` modes), so downstream paths never compare a
+possibly-string value against floats.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.grid import (
+    QuasiGrid,
+    make_quasi_grid,
+    normalize_pad_value,
+    normalize_tuple,
+)
+
+__all__ = [
+    "StencilPlan",
+    "get_plan",
+    "plan_cache_stats",
+    "clear_plan_cache",
+]
+
+#: max resident plans; each pins one jitted executor (compiled computation)
+PLAN_CACHE_CAPACITY = 256
+
+_CACHE: "OrderedDict[tuple, StencilPlan]" = OrderedDict()
+_LOCK = threading.Lock()
+_GLOBAL = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def resolve_method(method: str) -> str:
+    if method == "auto":
+        return "fused" if jax.default_backend() == "tpu" else "lax"
+    if method not in ("materialize", "lax", "fused"):
+        raise ValueError(f"unknown method {method!r}")
+    return method
+
+
+class StencilPlan:
+    """One fully-specified stencil problem and its cached jitted executor.
+
+    Instances are created through :func:`get_plan` (which interns them in the
+    process-wide cache) and are callable: ``plan(x, weights)``.  Weights are
+    a traced argument, so varying weights never retraces; only a new shape /
+    dtype / geometry yields a new plan.
+    """
+
+    __slots__ = (
+        "key", "in_shape", "op_shape", "stride", "padding", "dilation",
+        "pad_value", "method", "dtype", "batched", "grid",
+        "_exec", "_hits", "_calls", "_traces",
+    )
+
+    def __init__(self, key: tuple, in_shape, op_shape, stride, padding,
+                 dilation, pad_value, method, dtype, batched, grid: QuasiGrid):
+        self.key = key
+        self.in_shape = in_shape
+        self.op_shape = op_shape
+        self.stride = stride
+        self.padding = padding
+        self.dilation = dilation
+        self.pad_value = pad_value
+        self.method = method
+        self.dtype = dtype
+        self.batched = batched
+        self.grid = grid
+        self._hits = 0
+        self._calls = 0
+        self._traces = 0
+        self._exec = self._build_executor()
+
+    # -- identity ----------------------------------------------------------
+    def __hash__(self):
+        return hash(self.key)
+
+    def __eq__(self, other):
+        return isinstance(other, StencilPlan) and self.key == other.key
+
+    def __repr__(self):
+        return (f"StencilPlan(in_shape={self.in_shape}, op={self.op_shape}, "
+                f"method={self.method!r}, batched={self.batched}, "
+                f"dtype={self.dtype})")
+
+    # -- execution ---------------------------------------------------------
+    def _build_executor(self):
+        from repro.core import engine  # deferred: engine imports this module
+
+        grid, pad_value = self.grid, self.pad_value
+        method, batched = self.method, self.batched
+
+        def run(x, weights):
+            # Python side effect fires only while tracing — this IS the
+            # retrace counter asserted by tests/test_plan_cache.py.
+            self._traces += 1
+            return engine.execute_stencil(
+                x, grid, weights, pad_value, method, batched
+            )
+
+        return jax.jit(run)
+
+    def __call__(self, x: jax.Array, weights: jax.Array) -> jax.Array:
+        self._calls += 1
+        return self._exec(x, weights)
+
+    def stats(self) -> Dict[str, int]:
+        """Per-plan counters: cache ``hits``, executor ``calls``, ``traces``."""
+        return {"hits": self._hits, "calls": self._calls,
+                "traces": self._traces}
+
+
+def get_plan(
+    in_shape: Tuple[int, ...],
+    dtype,
+    op_shape,
+    stride=1,
+    padding: str = "same",
+    dilation=1,
+    pad_value=0.0,
+    method: str = "auto",
+    batched: bool = False,
+) -> StencilPlan:
+    """Return the interned plan for this stencil signature (building it once).
+
+    ``in_shape`` is the *full* input shape — leading batch dim included when
+    ``batched`` — so each batch size owns one plan and one traced executor.
+    """
+    in_shape = tuple(int(s) for s in in_shape)
+    spatial = in_shape[1:] if batched else in_shape
+    rank = len(spatial)
+    op_t = normalize_tuple(op_shape, rank, "op_shape")
+    stride_t = normalize_tuple(stride, rank, "stride")
+    dil_t = normalize_tuple(dilation, rank, "dilation")
+    pv = normalize_pad_value(pad_value)
+    meth = resolve_method(method)
+    dt = jnp.dtype(dtype).name
+    key = (in_shape, op_t, stride_t, padding, dil_t, pv, meth, dt, batched)
+    with _LOCK:
+        plan = _CACHE.get(key)
+        if plan is not None:
+            _CACHE.move_to_end(key)
+            plan._hits += 1
+            _GLOBAL["hits"] += 1
+            return plan
+    # Build outside the lock (tracing can be slow); insertion below keeps the
+    # first-inserted plan authoritative so counters stay on one object.
+    grid = make_quasi_grid(spatial, op_t, stride_t, padding, dil_t)
+    plan = StencilPlan(key, in_shape, op_t, stride_t, padding, dil_t, pv,
+                       meth, dt, batched, grid)
+    with _LOCK:
+        existing = _CACHE.get(key)
+        if existing is not None:
+            _CACHE.move_to_end(key)
+            existing._hits += 1
+            _GLOBAL["hits"] += 1
+            return existing
+        _CACHE[key] = plan
+        _GLOBAL["misses"] += 1
+        while len(_CACHE) > PLAN_CACHE_CAPACITY:
+            _CACHE.popitem(last=False)  # least-recently used
+            _GLOBAL["evictions"] += 1
+    return plan
+
+
+def plan_cache_stats() -> Dict[str, int]:
+    """Process-wide counters: ``size``, ``hits``, ``misses``, ``evictions``."""
+    with _LOCK:
+        return {"size": len(_CACHE), **_GLOBAL}
+
+
+def clear_plan_cache() -> None:
+    with _LOCK:
+        _CACHE.clear()
+        for k in _GLOBAL:
+            _GLOBAL[k] = 0

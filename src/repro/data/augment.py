@@ -20,8 +20,10 @@ def denoise(x: jax.Array, op_size: int = 5, sigma_d: float = 1.5,
 
 
 def denoise_batch(x: jax.Array, **kw) -> jax.Array:
-    """vmap over the leading batch dim (each sample any rank)."""
-    return jax.vmap(lambda t: denoise(t, **kw))(x)
+    """Batched denoise over the leading dim — one melt for the whole stack
+    (the batched engine path, DESIGN.md §3), not a per-sample vmap."""
+    return bilateral_filter(x, kw.pop("op_size", 5), kw.pop("sigma_d", 1.5),
+                            kw.pop("sigma_r", "adaptive"), batched=True, **kw)
 
 
 def keypoint_boost(x: jax.Array, gain: float = 4.0) -> jax.Array:

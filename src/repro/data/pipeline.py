@@ -91,7 +91,13 @@ class Prefetcher:
 
 
 def make_pipeline(cfg, shape, source: str = "synthetic", path: str = "",
-                  seed: int = 0, prefetch: int = 2):
+                  seed: int = 0, prefetch: int = 2, augment_fn=None):
+    """Build the host-local pipeline: source → (optional batch augment) →
+    prefetch.  ``augment_fn`` maps a batch dict to a batch dict and runs on
+    the prefetch thread, overlapping preprocessing with the train step —
+    the hook for batched melt-filter modality preprocessing via
+    ``repro.data.augment`` (one batched stencil dispatch per batch, not a
+    per-sample python loop; DESIGN.md §3/§4)."""
     if source == "synthetic":
         base = SyntheticLM(cfg.vocab, shape.global_batch, shape.seq_len, seed)
     elif source == "file":
@@ -99,4 +105,7 @@ def make_pipeline(cfg, shape, source: str = "synthetic", path: str = "",
                            seed=seed)
     else:
         raise ValueError(source)
-    return Prefetcher(base, prefetch)
+    it: Iterator = iter(base)
+    if augment_fn is not None:
+        it = map(augment_fn, it)
+    return Prefetcher(it, prefetch)

@@ -75,3 +75,50 @@ def fused_stencil_rows(x_halo: jax.Array, weights: jax.Array,
         interpret=interpret,
     )(x_halo, w2)
     return out[:R]
+
+
+def _stencil_kernel_batched(x_ref, w_ref, o_ref, *, offsets: Tuple[int, ...],
+                            tile_rows: int):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    base = i * tile_rows
+    acc = jnp.zeros(o_ref.shape[1:], jnp.float32)  # (tile_rows, C)
+    for c, off in enumerate(offsets):
+        sl = pl.load(x_ref, (b, pl.ds(base + off, tile_rows), slice(None)))
+        acc = acc + w_ref[c, 0].astype(jnp.float32) * sl.astype(jnp.float32)
+    o_ref[...] = acc[None].astype(o_ref.dtype)
+
+
+def fused_stencil_rows_batched(x_halo: jax.Array, weights: jax.Array,
+                               row_offsets, out_rows: int, halo_lo: int,
+                               tile_rows: int = 256, interpret: bool = True):
+    """Batched 2-D canonical form: one grid axis per batch item.
+
+    x_halo: (B, out_rows + halo_lo + halo_hi, C) — each item's rows with its
+    own halo padding (items never read across the batch boundary).
+    Returns (B, out_rows, C).
+    """
+    B, _, C = x_halo.shape
+    R = out_rows
+    tiles = -(-R // tile_rows)
+    pad_r = tiles * tile_rows + (x_halo.shape[1] - R) - x_halo.shape[1]
+    if pad_r > 0:
+        x_halo = jnp.pad(x_halo, ((0, 0), (0, pad_r), (0, 0)))
+    w2 = weights.reshape(-1, 1).astype(jnp.float32)
+    offs = tuple(int(o) + halo_lo for o in np.asarray(row_offsets))
+
+    kernel = functools.partial(_stencil_kernel_batched, offsets=offs,
+                               tile_rows=tile_rows)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, tiles),
+        in_specs=[
+            pl.BlockSpec(block_shape=None),          # whole array (HBM ref)
+            pl.BlockSpec((w2.shape[0], 1), lambda b, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_rows, C), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, tiles * tile_rows, C),
+                                       x_halo.dtype),
+        interpret=interpret,
+    )(x_halo, w2)
+    return out[:, :R]

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.grid import QuasiGrid, make_quasi_grid
+from repro.core.melt import pad_array
 from repro.kernels import bilateral as _bil
 from repro.kernels import local_attn as _la
 from repro.kernels import melt_stencil as _ms
@@ -27,20 +28,23 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _pad_for(x, grid: QuasiGrid, pad_value):
-    pads = list(zip(grid.pad_lo, grid.pad_hi))
-    if pad_value == "edge":
-        return jnp.pad(x, pads, mode="edge")
-    return jnp.pad(x, pads, constant_values=pad_value)
+def _pad_for(x, grid: QuasiGrid, pad_value, batched: bool = False):
+    pads = ([(0, 0)] if batched else []) + list(zip(grid.pad_lo, grid.pad_hi))
+    return pad_array(x, pads, pad_value)
+
+
+def _halo_extents(grid: QuasiGrid):
+    offs = grid.flat_offsets()
+    halo_lo = int(-offs.min()) if offs.size else 0
+    halo_hi = int(max(0, offs.max())) if offs.size else 0
+    return offs, halo_lo, halo_hi
 
 
 def _canonical(x, grid: QuasiGrid, pad_value):
-    """(x_flat (P,1), offsets, halo_lo, crop_fn)."""
+    """(x_flat (P,1), offsets, halo_lo, total_rows, crop_fn)."""
     xp = _pad_for(x, grid, pad_value)
     flat = xp.reshape(-1, 1)
-    offs = grid.flat_offsets()
-    halo_lo = int(-offs.min()) if offs.size else 0
-    halo_hi = int(max(0, offs.max()))
+    offs, halo_lo, halo_hi = _halo_extents(grid)
     # extend with halo rows so every padded position can be computed
     flat = jnp.pad(flat, ((halo_lo, halo_hi), (0, 0)))
     pshape = grid.padded_shape
@@ -54,13 +58,46 @@ def _canonical(x, grid: QuasiGrid, pad_value):
     return flat, offs, halo_lo, int(np.prod(pshape)), crop
 
 
-@functools.partial(jax.jit, static_argnames=("grid", "pad_value", "interpret"))
+def _canonical_batched(x, grid: QuasiGrid, pad_value):
+    """Batched canonical form: (x_flat (B,P,1), offsets, halo_lo, crop_fn).
+
+    Each item carries its own halo rows, so the offset table never reads
+    across the batch boundary.
+    """
+    xp = _pad_for(x, grid, pad_value, batched=True)
+    flat = xp.reshape(xp.shape[0], -1, 1)
+    offs, halo_lo, halo_hi = _halo_extents(grid)
+    flat = jnp.pad(flat, ((0, 0), (halo_lo, halo_hi), (0, 0)))
+    pshape = grid.padded_shape
+
+    def crop(rows):
+        out = rows.reshape((rows.shape[0],) + pshape)
+        slices = (slice(None),) + tuple(
+            slice(lo, lo + n) for lo, n in zip(grid.pad_lo, grid.in_shape))
+        return out[slices]
+
+    return flat, offs, halo_lo, int(np.prod(pshape)), crop
+
+
+@functools.partial(
+    jax.jit, static_argnames=("grid", "pad_value", "interpret", "batched"))
 def fused_stencil(x, grid: QuasiGrid, weights, pad_value=0.0,
-                  interpret=None):
-    """Rank-agnostic fused melt×contract (stride-1 'same' grids)."""
+                  interpret=None, batched=False):
+    """Rank-agnostic fused melt×contract (stride-1 'same' grids).
+
+    ``batched=True``: leading dim of ``x`` is a stack of independent tensors;
+    the Pallas grid gains a batch axis (one kernel launch for the stack).
+    """
     if grid.stride != (1,) * grid.rank or grid.padding != "same":
         raise NotImplementedError("fused path covers stride-1 'same' stencils")
     interpret = _interpret_default() if interpret is None else interpret
+    if batched:
+        flat, offs, halo_lo, total, crop = _canonical_batched(
+            x, grid, pad_value)
+        rows = _ms.fused_stencil_rows_batched(
+            flat, jnp.asarray(weights), offs, total, halo_lo,
+            interpret=interpret)
+        return crop(rows[:, :, 0]).astype(x.dtype)
     flat, offs, halo_lo, total, crop = _canonical(x, grid, pad_value)
     rows = _ms.fused_stencil_rows(
         flat, jnp.asarray(weights), offs, total, halo_lo,

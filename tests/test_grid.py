@@ -1,7 +1,7 @@
 """Quasi-grid shape algebra (paper §3.1 f1) — unit + property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, strategies as st
 
 from repro.core.grid import (
     QuasiGrid,

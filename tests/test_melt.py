@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, strategies as st
 
 from repro.core.grid import make_quasi_grid
 from repro.core.melt import MeltMatrix, melt, melt_rows_for_slab, scatter_unmelt, unmelt

@@ -1,6 +1,6 @@
 """Paper §2.4 partition conditions — property-based."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, strategies as st
 
 from repro.core.grid import make_quasi_grid
 from repro.core.partition import (

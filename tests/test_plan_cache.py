@@ -1,0 +1,137 @@
+"""StencilPlan cache: interning, per-plan stats, and no-retrace guarantees."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    apply_stencil,
+    clear_plan_cache,
+    gaussian_weights,
+    get_plan,
+    plan_cache_stats,
+)
+from repro.core import plan as plan_mod
+
+
+@pytest.fixture(autouse=True)
+def fresh_cache():
+    clear_plan_cache()
+    yield
+    clear_plan_cache()
+
+
+def _x(shape, seed=0):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape), jnp.float32)
+
+
+def test_same_signature_interns_one_plan():
+    p1 = get_plan((8, 9), jnp.float32, 3, 1, "same", 1, 0.0, "lax", False)
+    p2 = get_plan((8, 9), jnp.float32, (3, 3), (1, 1), "same", 1, 0, "lax",
+                  False)
+    assert p1 is p2  # scalar/tuple geometry and 0 vs 0.0 normalize equal
+    stats = plan_cache_stats()
+    assert stats["size"] == 1 and stats["misses"] == 1 and stats["hits"] == 1
+    assert p1.stats()["hits"] == 1
+
+
+def test_distinct_shapes_and_paths_get_distinct_plans():
+    p1 = get_plan((8, 9), jnp.float32, 3, 1, "same", 1, 0.0, "lax", False)
+    p2 = get_plan((8, 10), jnp.float32, 3, 1, "same", 1, 0.0, "lax", False)
+    p3 = get_plan((8, 9), jnp.float32, 3, 1, "same", 1, 0.0, "materialize",
+                  False)
+    p4 = get_plan((2, 8, 9), jnp.float32, 3, 1, "same", 1, 0.0, "lax", True)
+    assert len({p1, p2, p3, p4}) == 4
+    assert plan_cache_stats()["size"] == 4
+
+
+def test_apply_stencil_routes_through_cache():
+    x = _x((8, 9))
+    w = gaussian_weights((3, 3), 1.0)
+    apply_stencil(x, 3, w, method="lax")
+    apply_stencil(x, 3, w, method="lax")
+    apply_stencil(x, 3, w, method="lax")
+    stats = plan_cache_stats()
+    assert stats["size"] == 1
+    assert stats["misses"] == 1 and stats["hits"] == 2
+
+
+def test_no_retrace_on_repeated_batched_calls():
+    """The executor traces once per plan; repeated (and weight-varying)
+    batched calls reuse the traced computation."""
+    xb = _x((4, 10, 9))
+    w1 = gaussian_weights((3, 3), 1.0)
+    w2 = gaussian_weights((3, 3), 2.0)
+    for w in (w1, w2, w1, w2):
+        apply_stencil(xb, 3, w, method="lax", batched=True)
+    plan = get_plan((4, 10, 9), jnp.float32, 3, 1, "same", 1, 0.0, "lax",
+                    True)
+    s = plan.stats()
+    assert s["calls"] == 4
+    assert s["traces"] == 1  # varying weights never retraces
+    # a different batch size is a different plan → its own single trace
+    xb2 = _x((2, 10, 9))
+    apply_stencil(xb2, 3, w1, method="lax", batched=True)
+    apply_stencil(xb2, 3, w1, method="lax", batched=True)
+    plan2 = get_plan((2, 10, 9), jnp.float32, 3, 1, "same", 1, 0.0, "lax",
+                     True)
+    assert plan2 is not plan
+    assert plan2.stats()["traces"] == 1
+    assert plan.stats()["traces"] == 1  # untouched by the other plan
+
+
+def test_plan_execution_matches_direct():
+    x = _x((9, 8))
+    w = gaussian_weights((3, 3), 1.3)
+    plan = get_plan(x.shape, x.dtype, 3, 1, "same", 1, "edge", "lax", False)
+    got = plan(x, jnp.asarray(w).reshape(-1))
+    want = apply_stencil(x, 3, w, method="materialize", pad_value="edge")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_pad_value_normalized_in_key():
+    p1 = get_plan((8, 9), jnp.float32, 3, 1, "same", 1, 0, "lax", False)
+    p2 = get_plan((8, 9), jnp.float32, 3, 1, "same", 1, 0.0, "lax", False)
+    assert p1 is p2
+    with pytest.raises(ValueError):
+        get_plan((8, 9), jnp.float32, 3, 1, "same", 1, "wrap", "lax", False)
+
+
+def test_clear_resets_everything():
+    get_plan((8, 9), jnp.float32, 3, 1, "same", 1, 0.0, "lax", False)
+    clear_plan_cache()
+    s = plan_cache_stats()
+    assert s == {"size": 0, "hits": 0, "misses": 0, "evictions": 0}
+
+
+def test_lru_eviction_bounds_cache(monkeypatch):
+    """The cache never exceeds capacity; LRU plans (and their executors)
+    are dropped, and a re-request is just one rebuild miss."""
+    monkeypatch.setattr(plan_mod, "PLAN_CACHE_CAPACITY", 3)
+    plans = [get_plan((8, 9 + i), jnp.float32, 3, 1, "same", 1, 0.0, "lax",
+                      False) for i in range(5)]
+    s = plan_cache_stats()
+    assert s["size"] == 3 and s["evictions"] == 2
+    # oldest two evicted: re-requesting rebuilds (new object, a miss)
+    rebuilt = get_plan((8, 9), jnp.float32, 3, 1, "same", 1, 0.0, "lax",
+                       False)
+    assert rebuilt is not plans[0]
+    # newest survivor still interned
+    assert get_plan((8, 13), jnp.float32, 3, 1, "same", 1, 0.0, "lax",
+                    False) is plans[4]
+
+
+def test_traced_inputs_bypass_cache():
+    """apply_stencil inside someone else's jit must not intern tracer plans."""
+    import jax
+
+    x = _x((8, 9))
+    w = gaussian_weights((3, 3), 1.0)
+    clear_plan_cache()
+
+    @jax.jit
+    def f(x):
+        return apply_stencil(x, 3, w, method="lax")
+
+    f(x)
+    assert plan_cache_stats()["size"] == 0
