@@ -1,20 +1,26 @@
 """Benchmark harness: one section per paper table/figure + framework benches.
 
-Prints ``name,us_per_call,derived`` CSV (harness contract).
+Prints ``name,us_per_call,derived`` CSV (harness contract); ``--json PATH``
+additionally writes machine-readable results (name, us_per_call, derived,
+backend, git rev per row) for the BENCH_*.json trajectory.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
+                                           [--sections a,b,...]
 
 Sections:
   fig6/*      — paper Fig 6: melt-matrix row-partition scaling
   fig7/*      — paper Fig 7: ElementWise / VectorWise / MatBroadcast
   stencil/*   — engine path comparison (materialize / lax / pallas-interp)
   filters/*   — bilateral (Eq.3) and curvature (Eq.6-7) end-to-end
+  bank/*      — operator-bank fused execution (DESIGN.md §9)
   model/*     — smoke-config step latencies per architecture family
   serve/*     — prefill + decode latency (smoke config)
 """
 from __future__ import annotations
 
 import argparse
+import json
+import subprocess
 import sys
 import time
 
@@ -110,26 +116,92 @@ def bench_serving(quick=False):
     return rows
 
 
+def bench_bank(quick=False):
+    """Operator-bank rows: the shared ``bank_vs_seq`` pair from
+    benchmarks.bank_stencil (same shapes, pad, interleaved timing — the
+    smoke numbers can't drift from the gated benchmark)."""
+    from benchmarks.bank_stencil import (
+        FULL_SHAPE,
+        QUICK_SHAPE,
+        RANK,
+        bank_vs_seq,
+    )
+    from repro.core import curvature_bank
+
+    rng = np.random.RandomState(0)
+    shape = QUICK_SHAPE if quick else FULL_SHAPE
+    x = jnp.asarray(rng.randn(*shape).astype(np.float32))
+    W = jnp.asarray(curvature_bank(RANK))
+    K = W.shape[1]
+    tag = "x".join(map(str, shape))
+    rows = []
+    for method in ("fused", "lax"):
+        t_bank, t_seq = bank_vs_seq(x, W, method, reps=5)
+        rows.append((f"bank/{method}/{tag}/K{K}", t_bank,
+                     f"seq={t_seq:.0f}us speedup={t_seq / t_bank:.2f}x"))
+    return rows
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            stderr=subprocess.DEVNULL, text=True).strip()
+    except Exception:  # noqa: BLE001 — detached/bare env: rev is best-effort
+        return "unknown"
+
+
+def write_json(path: str, rows) -> None:
+    """BENCH_*.json contract: one record per row + run metadata."""
+    backend = jax.default_backend()
+    rev = _git_rev()
+    payload = {
+        "backend": backend,
+        "git_rev": rev,
+        "rows": [
+            {"name": name, "us_per_call": round(float(us), 1),
+             "derived": str(derived), "backend": backend, "git_rev": rev}
+            for name, us, derived in rows
+        ],
+    }
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write machine-readable results "
+                         "(BENCH_<section>.json trajectory)")
+    ap.add_argument("--sections", default=None,
+                    help="comma-separated subset of "
+                         "fig6,fig7,stencil,filters,bank,model,serve")
     args = ap.parse_args(argv)
 
     from benchmarks import paper_figs
 
     all_rows = []
-    sections = [
-        lambda: paper_figs.fig6_parallel_scaling(
+    sections = {
+        "fig6": lambda: paper_figs.fig6_parallel_scaling(
             shape=(16, 48, 48) if args.quick else (32, 64, 64)),
-        lambda: paper_figs.fig7_abstraction_levels(),
-        lambda: paper_figs.stencil_paths(
+        "fig7": lambda: paper_figs.fig7_abstraction_levels(),
+        "stencil": lambda: paper_figs.stencil_paths(
             shape=(16, 48, 48) if args.quick else (32, 64, 64)),
-        lambda: bench_filters(args.quick),
-        lambda: bench_models(args.quick),
-        lambda: bench_serving(args.quick),
-    ]
+        "filters": lambda: bench_filters(args.quick),
+        "bank": lambda: bench_bank(args.quick),
+        "model": lambda: bench_models(args.quick),
+        "serve": lambda: bench_serving(args.quick),
+    }
+    if args.sections:
+        wanted = [s.strip() for s in args.sections.split(",") if s.strip()]
+        unknown = set(wanted) - set(sections)
+        if unknown:
+            ap.error(f"unknown sections: {sorted(unknown)}")
+        sections = {k: sections[k] for k in wanted}
     print("name,us_per_call,derived")
-    for sec in sections:
+    for sec in sections.values():
         try:
             rows = sec()
         except Exception as e:  # noqa: BLE001
@@ -140,6 +212,8 @@ def main(argv=None):
             print(f"{name},{us:.1f},{derived}")
             sys.stdout.flush()
         all_rows += rows
+    if args.json:
+        write_json(args.json, all_rows)
     return all_rows
 
 

@@ -2,8 +2,14 @@
 
 Decomposition of any-rank tensors into the row-decoupled melt matrix,
 partition planning satisfying the paper's §2.4 conditions, generic
-(Hilbert-complete) filters, and the distributed shard_map engine with halo
+(Hilbert-complete) filters — including the operator-bank derivative family
+(``gradient``/``hessian``/``gaussian_curvature``: K operators over one melt
+pass, DESIGN.md §9) — and the distributed shard_map engine with halo
 exchange.
+
+``apply_stencil`` applies one operator; ``apply_stencil_bank`` applies a
+(numel, K) weight *matrix* in a single pass, with automatic separable
+factorization (k 1-D passes) when every column is a rank-1 outer product.
 """
 from repro.core.grid import (
     QuasiGrid,
@@ -11,11 +17,18 @@ from repro.core.grid import (
     neighborhood_offsets,
     normalize_pad_value,
 )
-from repro.core.melt import MeltMatrix, melt, unmelt
-from repro.core.engine import MeltEngine, apply_stencil
+from repro.core.melt import MeltMatrix, melt, melt_call_count, unmelt
+from repro.core.engine import (
+    MeltEngine,
+    apply_stencil,
+    apply_stencil_bank,
+    separable_factors,
+)
 from repro.core.plan import (
+    BankPlan,
     StencilPlan,
     clear_plan_cache,
+    get_bank_plan,
     get_plan,
     plan_cache_stats,
 )
@@ -26,9 +39,13 @@ from repro.core.partition import (
 )
 from repro.core.filters import (
     bilateral_filter,
+    curvature_bank,
+    difference_stencils,
     gaussian_curvature,
     gaussian_filter,
     gaussian_weights,
+    gradient,
+    hessian,
 )
 
 __all__ = [
@@ -37,19 +54,28 @@ __all__ = [
     "neighborhood_offsets",
     "normalize_pad_value",
     "StencilPlan",
+    "BankPlan",
     "get_plan",
+    "get_bank_plan",
     "plan_cache_stats",
     "clear_plan_cache",
     "MeltMatrix",
     "melt",
     "unmelt",
+    "melt_call_count",
     "MeltEngine",
     "apply_stencil",
+    "apply_stencil_bank",
+    "separable_factors",
     "plan_row_partition",
     "plan_slab_partition",
     "validate_partition",
     "bilateral_filter",
+    "curvature_bank",
+    "difference_stencils",
     "gaussian_curvature",
     "gaussian_filter",
     "gaussian_weights",
+    "gradient",
+    "hessian",
 ]

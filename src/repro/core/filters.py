@@ -1,17 +1,22 @@
 """Generic rank-agnostic filters built on the melt matrix (paper §3.2).
 
-Three applications, all pure array programming over the melt matrix:
+Applications, all pure array programming over the melt decomposition:
 
 - ``gaussian_filter``     — linear stencil, the Fig 6/7 benchmark subject
 - ``bilateral_filter``    — Eq. (3): data-dependent weights, adaptive σ_r
-- ``gaussian_curvature``  — Eq. (6)/(7): Hessian + gradient via difference
-                            stencils, det/trace in a rank-2 container
+- ``gradient``/``hessian`` — Eq. (6): all first/second partials as ONE
+                            operator-bank pass (DESIGN.md §9)
+- ``gaussian_curvature``  — Eq. (6)/(7): the rank + rank² bank, det/trace
+                            in a rank-2 container
 
 Every function takes tensors of *any* rank; rank is data, not code structure
-(the Hilbert-completeness contract of §2.2).
+(the Hilbert-completeness contract of §2.2).  The derivative family runs
+through ``apply_stencil_bank``: one melt pass feeds every operator on all
+three execution paths — the fused path never materializes ``M``.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
@@ -27,6 +32,9 @@ __all__ = [
     "gaussian_filter",
     "bilateral_filter",
     "difference_stencils",
+    "curvature_bank",
+    "gradient",
+    "hessian",
     "gaussian_curvature",
 ]
 
@@ -123,6 +131,7 @@ def bilateral_filter(
     return unmelt(out_rows, M.grid, batched=batched).astype(x.dtype)
 
 
+@functools.lru_cache(maxsize=None)
 def difference_stencils(rank: int) -> tuple[np.ndarray, np.ndarray]:
     """Central-difference weight vectors over a 3^rank footprint.
 
@@ -131,6 +140,9 @@ def difference_stencils(rank: int) -> tuple[np.ndarray, np.ndarray]:
     ``M @ hess_w.reshape(cols, rank*rank)`` all second partials — the paper's
     claim that Hessian computation on any-rank tensors reduces to containers
     of rank ≤ 4 (here: one rank-2 matmul each).
+
+    Cached per rank (the offset/weight tables are pure functions of it) and
+    returned read-only so cache hits can never be corrupted in place.
     """
     op_shape = (3,) * rank
     offs = neighborhood_offsets(op_shape, (1,) * rank)  # (cols, rank)
@@ -160,29 +172,91 @@ def difference_stencils(rank: int) -> tuple[np.ndarray, np.ndarray]:
                     sel = on_plane & (offs[:, i] == si) & (offs[:, j] == sj)
                     hess_w[sel, i, j] += si * sj * 0.25
                     hess_w[sel, j, i] += si * sj * 0.25
+    grad_w.setflags(write=False)
+    hess_w.setflags(write=False)
     return grad_w, hess_w
 
 
+@functools.lru_cache(maxsize=None)
+def curvature_bank(rank: int) -> np.ndarray:
+    """The (3^rank, rank + rank²) derivative bank: [∇ | vec(H)] columns.
+
+    One contraction against this matrix computes every first and second
+    partial — the K = rank + rank² operator bank behind ``gradient``,
+    ``hessian`` and ``gaussian_curvature``.
+    """
+    grad_w, hess_w = difference_stencils(rank)
+    cols = 3 ** rank
+    W = np.concatenate([grad_w, hess_w.reshape(cols, rank * rank)], axis=1)
+    W = W.astype(np.float32)
+    W.setflags(write=False)
+    return W
+
+
+def _derivative_bank_pass(x, rank, method, pad_value, batched):
+    """Run the full derivative bank: (..., *shape, rank + rank²), float32."""
+    from repro.core.engine import apply_stencil_bank  # local, avoids cycle
+
+    return apply_stencil_bank(
+        x.astype(jnp.float32), (3,) * rank,
+        jnp.asarray(curvature_bank(rank)),
+        method=method, pad_value=pad_value, batched=batched,
+    )
+
+
+def gradient(x: jax.Array, *, method: str = "auto", pad_value="edge",
+             batched: bool = False) -> jax.Array:
+    """All first partials in one bank pass: (..., *shape, rank).
+
+    ``out[..., i] = ∂x/∂dᵢ`` by central differences (exact on quadratics).
+    """
+    rank = x.ndim - (1 if batched else 0)
+    grad_w, _ = difference_stencils(rank)
+    from repro.core.engine import apply_stencil_bank  # local, avoids cycle
+
+    D = apply_stencil_bank(
+        x.astype(jnp.float32), (3,) * rank,
+        jnp.asarray(grad_w, dtype=jnp.float32),
+        method=method, pad_value=pad_value, batched=batched,
+    )
+    return D.astype(x.dtype)
+
+
+def hessian(x: jax.Array, *, method: str = "auto", pad_value="edge",
+            batched: bool = False) -> jax.Array:
+    """All second partials in one bank pass: (..., *shape, rank, rank).
+
+    The paper's claim that Hessians of any-rank tensors reduce to a rank-2
+    container per grid point — here literally one (numel, rank²) matmul.
+    """
+    rank = x.ndim - (1 if batched else 0)
+    _, hess_w = difference_stencils(rank)
+    from repro.core.engine import apply_stencil_bank  # local, avoids cycle
+
+    D = apply_stencil_bank(
+        x.astype(jnp.float32), (3,) * rank,
+        jnp.asarray(hess_w.reshape(3 ** rank, rank * rank),
+                    dtype=jnp.float32),
+        method=method, pad_value=pad_value, batched=batched,
+    )
+    return D.reshape(D.shape[:-1] + (rank, rank)).astype(x.dtype)
+
+
 def gaussian_curvature(x: jax.Array, *, pad_value="edge",
+                       method: str = "auto",
                        batched: bool = False) -> jax.Array:
     """Generalized Gaussian curvature, Eq. (6)/(7), for any-rank dense tensors.
 
     K = det(H(I)) / (1 + Σ_i I_{d_i}²)²  with H the melt-derived Hessian.
+    Gradient and Hessian come from ONE rank + rank² operator-bank pass
+    (``curvature_bank``): the slab is loaded once for all K operators, and
+    on the fused path the melt matrix never materializes.
     ``batched=True`` stacks independent tensors along the leading dim.
     """
     rank = x.ndim - (1 if batched else 0)
-    M = melt(x.astype(jnp.float32), (3,) * rank, pad_value=pad_value,
-             batched=batched)
-    grad_w, hess_w = difference_stencils(rank)
-    cols = M.num_cols
-    # single fused contraction: (..., rows, cols) @ (cols, rank + rank²)
-    W = jnp.asarray(
-        np.concatenate([grad_w, hess_w.reshape(cols, rank * rank)], axis=1),
-        dtype=jnp.float32,
-    )
-    D = M.data @ W  # (..., rows, rank + rank²)
+    D = _derivative_bank_pass(x, rank, method, pad_value, batched)
     g = D[..., :rank]
     H = D[..., rank:].reshape(D.shape[:-1] + (rank, rank))
     detH = jnp.linalg.det(H)
     K = detH / (1.0 + jnp.sum(g * g, axis=-1)) ** 2
-    return unmelt(K, M.grid, batched=batched).astype(x.dtype)
+    return K.astype(x.dtype)

@@ -21,7 +21,18 @@ import numpy as np
 
 from repro.core.grid import QuasiGrid, make_quasi_grid, normalize_pad_value
 
-__all__ = ["MeltMatrix", "melt", "unmelt", "melt_rows_for_slab", "pad_array"]
+__all__ = ["MeltMatrix", "melt", "unmelt", "melt_rows_for_slab", "pad_array",
+           "melt_call_count"]
+
+#: trace-time materialization counter — every ``melt`` call increments it,
+#: so tests/benchmarks can assert a path never builds ``M`` (DESIGN.md §9:
+#: the fused bank path must not materialize, even while tracing).
+_MELT_CALLS = 0
+
+
+def melt_call_count() -> int:
+    """How many times ``melt`` has run (Python-level, includes traces)."""
+    return _MELT_CALLS
 
 
 def pad_array(x: jax.Array, pads, pad_value) -> jax.Array:
@@ -108,6 +119,8 @@ def melt(
     dim — every row of every item is still independent (paper §3.1 extends
     trivially to batches).
     """
+    global _MELT_CALLS
+    _MELT_CALLS += 1
     if grid is None:
         spatial = x.shape[1:] if batched else x.shape
         grid = make_quasi_grid(spatial, op_shape, stride, padding, dilation)

@@ -40,7 +40,10 @@ from repro.core.grid import (
 
 __all__ = [
     "StencilPlan",
+    "BankPlan",
     "get_plan",
+    "get_bank_plan",
+    "separable_eligible",
     "plan_cache_stats",
     "clear_plan_cache",
 ]
@@ -59,6 +62,69 @@ def resolve_method(method: str) -> str:
     if method not in ("materialize", "lax", "fused"):
         raise ValueError(f"unknown method {method!r}")
     return method
+
+
+def separable_eligible(rank: int, stride, padding: str,
+                       pad_value=0.0) -> bool:
+    """Whether a bank *may* run as successive 1-D passes (exactness gate).
+
+    Separable execution rewrites one rank-k pass into k 1-D passes; the
+    rewrite is exact for stride-1 'same' grids under zero / edge / reflect
+    padding (those commute with per-dim passes).  A *nonzero* constant
+    fill does not: the dense pass sees the raw constant in every corner
+    neighbourhood, while a second 1-D pass would re-inject it over
+    already-filtered boundary values — so nonzero constants stay dense.
+    Rank-1 banks gain nothing — the dense pass already is 1-D.
+    """
+    pv = normalize_pad_value(pad_value)
+    return (rank >= 2 and padding == "same"
+            and tuple(stride) == (1,) * rank
+            and (isinstance(pv, str) or pv == 0.0))
+
+
+def separable_profitable(op_shape) -> bool:
+    """Whether the 1-D rewrite is expected to *win* (cost gate for 'auto').
+
+    Dense work per grid point is Πkᵢ taps; separable is Σkᵢ taps across
+    ``rank`` extra pass dispatches.  Measured on both the fused and lax
+    paths, the crossover sits near Πkᵢ ≈ 4·Σkᵢ (3³=27 vs 36: dense wins;
+    5³=125 vs 60 and 9²=81 vs 72: separable wins 1.5–50x).  ``auto`` only
+    factors past that ratio; ``separable=True`` forces the rewrite.
+    """
+    op_shape = tuple(int(k) for k in op_shape)
+    numel = 1
+    for k in op_shape:
+        numel *= k
+    return numel >= 4 * sum(op_shape)
+
+
+def _intern(key: tuple, build):
+    """Lock/build/insert dance shared by every plan kind.
+
+    The build runs outside the lock (tracing can be slow); the
+    first-inserted plan is authoritative so counters stay on one object.
+    """
+    with _LOCK:
+        plan = _CACHE.get(key)
+        if plan is not None:
+            _CACHE.move_to_end(key)
+            plan._hits += 1
+            _GLOBAL["hits"] += 1
+            return plan
+    plan = build()
+    with _LOCK:
+        existing = _CACHE.get(key)
+        if existing is not None:
+            _CACHE.move_to_end(key)
+            existing._hits += 1
+            _GLOBAL["hits"] += 1
+            return existing
+        _CACHE[key] = plan
+        _GLOBAL["misses"] += 1
+        while len(_CACHE) > PLAN_CACHE_CAPACITY:
+            _CACHE.popitem(last=False)  # least-recently used
+            _GLOBAL["evictions"] += 1
+    return plan
 
 
 class StencilPlan:
@@ -159,31 +225,97 @@ def get_plan(
     meth = resolve_method(method)
     dt = jnp.dtype(dtype).name
     key = (in_shape, op_t, stride_t, padding, dil_t, pv, meth, dt, batched)
-    with _LOCK:
-        plan = _CACHE.get(key)
-        if plan is not None:
-            _CACHE.move_to_end(key)
-            plan._hits += 1
-            _GLOBAL["hits"] += 1
-            return plan
-    # Build outside the lock (tracing can be slow); insertion below keeps the
-    # first-inserted plan authoritative so counters stay on one object.
-    grid = make_quasi_grid(spatial, op_t, stride_t, padding, dil_t)
-    plan = StencilPlan(key, in_shape, op_t, stride_t, padding, dil_t, pv,
-                       meth, dt, batched, grid)
-    with _LOCK:
-        existing = _CACHE.get(key)
-        if existing is not None:
-            _CACHE.move_to_end(key)
-            existing._hits += 1
-            _GLOBAL["hits"] += 1
-            return existing
-        _CACHE[key] = plan
-        _GLOBAL["misses"] += 1
-        while len(_CACHE) > PLAN_CACHE_CAPACITY:
-            _CACHE.popitem(last=False)  # least-recently used
-            _GLOBAL["evictions"] += 1
-    return plan
+
+    def build():
+        grid = make_quasi_grid(spatial, op_t, stride_t, padding, dil_t)
+        return StencilPlan(key, in_shape, op_t, stride_t, padding, dil_t, pv,
+                           meth, dt, batched, grid)
+
+    return _intern(key, build)
+
+
+class BankPlan(StencilPlan):
+    """A :class:`StencilPlan` for an operator *bank* (DESIGN.md §9).
+
+    The executor takes a (numel, K) weight matrix — or, when ``separable``,
+    the tuple of per-dim (kᵢ, K) factor matrices — as the traced argument;
+    varying weights never retraces.  ``K`` and ``separable`` are part of the
+    plan key: a (shape, op, K) signature interns one jitted executor.
+    """
+
+    __slots__ = ("K", "separable")
+
+    def __init__(self, key, in_shape, op_shape, stride, padding, dilation,
+                 pad_value, method, dtype, batched, grid, K: int,
+                 separable: bool):
+        self.K = K
+        self.separable = separable
+        super().__init__(key, in_shape, op_shape, stride, padding, dilation,
+                         pad_value, method, dtype, batched, grid)
+
+    def __repr__(self):
+        return (f"BankPlan(in_shape={self.in_shape}, op={self.op_shape}, "
+                f"K={self.K}, separable={self.separable}, "
+                f"method={self.method!r}, batched={self.batched})")
+
+    def _build_executor(self):
+        from repro.core import engine  # deferred: engine imports this module
+
+        grid, pad_value = self.grid, self.pad_value
+        method, batched = self.method, self.batched
+        if self.separable:
+            def run(x, factors):
+                self._traces += 1
+                return engine.execute_separable_bank(
+                    x, grid, factors, pad_value, method, batched
+                )
+        else:
+            def run(x, weight_matrix):
+                self._traces += 1
+                return engine.execute_stencil_bank(
+                    x, grid, weight_matrix, pad_value, method, batched
+                )
+
+        return jax.jit(run)
+
+
+def get_bank_plan(
+    in_shape: Tuple[int, ...],
+    dtype,
+    op_shape,
+    stride=1,
+    padding: str = "same",
+    dilation=1,
+    pad_value=0.0,
+    method: str = "auto",
+    batched: bool = False,
+    K: int = 1,
+    separable: bool = False,
+) -> BankPlan:
+    """Interned plan for a K-operator bank signature.
+
+    Same normalization as :func:`get_plan`; the key additionally carries
+    ``K`` and the separable/dense execution choice (the two run different
+    executors over different weight pytrees).
+    """
+    in_shape = tuple(int(s) for s in in_shape)
+    spatial = in_shape[1:] if batched else in_shape
+    rank = len(spatial)
+    op_t = normalize_tuple(op_shape, rank, "op_shape")
+    stride_t = normalize_tuple(stride, rank, "stride")
+    dil_t = normalize_tuple(dilation, rank, "dilation")
+    pv = normalize_pad_value(pad_value)
+    meth = resolve_method(method)
+    dt = jnp.dtype(dtype).name
+    key = ("bank", in_shape, op_t, stride_t, padding, dil_t, pv, meth, dt,
+           batched, int(K), bool(separable))
+
+    def build():
+        grid = make_quasi_grid(spatial, op_t, stride_t, padding, dil_t)
+        return BankPlan(key, in_shape, op_t, stride_t, padding, dil_t, pv,
+                        meth, dt, batched, grid, int(K), bool(separable))
+
+    return _intern(key, build)
 
 
 def plan_cache_stats() -> Dict[str, int]:

@@ -20,16 +20,49 @@ The input arrives as a whole-array ref (HBM); slices are pulled with
 ``pl.ds`` — on real TPUs these lower to DMA copies into VMEM, in interpret
 mode they execute directly.  Validated against ``ref.py`` (materialized
 melt) over shape/dtype sweeps in tests/test_kernels.py.
+
+Operator banks (DESIGN.md §9): the ``*_bank_*`` variants contract each
+melt tile against a (numel, K) weight *matrix* — the (T, numel) × (numel, K)
+MXU contraction — so one slab pass serves K operators; the ``*_depthwise_*``
+variants filter lane k with weight column k (the separable 1-D pass
+primitive).  ``pick_tile_rows`` sizes tiles from a VMEM budget instead of a
+fixed constant.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+
+#: default VMEM working-set target per grid step (well under the ~16 MB/core
+#: budget: the pipeline keeps two steps in flight plus the weight block)
+DEFAULT_VMEM_BUDGET = 2 * 1024 * 1024
+
+#: min sublane count per dtype itemsize (TPU tiling: (sublane, 128) tiles)
+_SUBLANES = {4: 8, 2: 16, 1: 32}
+
+
+def pick_tile_rows(numel: int, c_in: int, c_out: int, dtype,
+                   vmem_budget: Optional[int] = None) -> int:
+    """Choose ``tile_rows`` from a VMEM budget (sublane-aligned).
+
+    Per output row the kernel holds ~``4·(numel + c_out)`` bytes of f32
+    working set (the assembled melt tile / accumulator plus the output tile)
+    and reads ``itemsize·c_in`` bytes of input slab.  ``tile_rows`` is the
+    largest sublane-aligned row count whose working set fits ``vmem_budget``,
+    clamped to [sublane, 1024] so tiny operators never explode the grid and
+    huge banks never starve it.
+    """
+    budget = DEFAULT_VMEM_BUDGET if vmem_budget is None else int(vmem_budget)
+    item = jnp.dtype(dtype).itemsize
+    sub = _SUBLANES.get(item, 8)
+    per_row = 4 * (int(numel) + max(int(c_out), 1)) + item * max(int(c_in), 1)
+    t = (budget // per_row // sub) * sub
+    return int(max(sub, min(t, 1024)))
 
 
 def _stencil_kernel(x_ref, w_ref, o_ref, *, offsets: Tuple[int, ...],
@@ -45,7 +78,8 @@ def _stencil_kernel(x_ref, w_ref, o_ref, *, offsets: Tuple[int, ...],
 
 def fused_stencil_rows(x_halo: jax.Array, weights: jax.Array,
                        row_offsets, out_rows: int, halo_lo: int,
-                       tile_rows: int = 256, interpret: bool = True):
+                       tile_rows: Optional[int] = None,
+                       interpret: bool = True):
     """2-D canonical form.
 
     x_halo: (out_rows + halo_lo + halo_hi, C) — input rows with halo padding.
@@ -53,6 +87,8 @@ def fused_stencil_rows(x_halo: jax.Array, weights: jax.Array,
     Returns (out_rows, C).
     """
     R, C = out_rows, x_halo.shape[1]
+    if tile_rows is None:
+        tile_rows = pick_tile_rows(len(row_offsets), C, C, x_halo.dtype)
     tiles = -(-R // tile_rows)
     pad_r = tiles * tile_rows + (x_halo.shape[0] - R) - x_halo.shape[0]
     if pad_r > 0:
@@ -91,7 +127,8 @@ def _stencil_kernel_batched(x_ref, w_ref, o_ref, *, offsets: Tuple[int, ...],
 
 def fused_stencil_rows_batched(x_halo: jax.Array, weights: jax.Array,
                                row_offsets, out_rows: int, halo_lo: int,
-                               tile_rows: int = 256, interpret: bool = True):
+                               tile_rows: Optional[int] = None,
+                               interpret: bool = True):
     """Batched 2-D canonical form: one grid axis per batch item.
 
     x_halo: (B, out_rows + halo_lo + halo_hi, C) — each item's rows with its
@@ -100,6 +137,8 @@ def fused_stencil_rows_batched(x_halo: jax.Array, weights: jax.Array,
     """
     B, _, C = x_halo.shape
     R = out_rows
+    if tile_rows is None:
+        tile_rows = pick_tile_rows(len(row_offsets), C, C, x_halo.dtype)
     tiles = -(-R // tile_rows)
     pad_r = tiles * tile_rows + (x_halo.shape[1] - R) - x_halo.shape[1]
     if pad_r > 0:
@@ -121,4 +160,247 @@ def fused_stencil_rows_batched(x_halo: jax.Array, weights: jax.Array,
                                        x_halo.dtype),
         interpret=interpret,
     )(x_halo, w2)
+    return out[:, :R]
+
+
+# -- operator banks ---------------------------------------------------------
+#
+# The multi-output form promised by the module docstring: each output tile
+# computes the (tile_rows, numel) × (numel, K) melt-tile contraction, so the
+# halo slab load is amortized across all K operators and ``M`` still never
+# exists in HBM.  Two mathematically identical formulations, chosen by the
+# static ``mxu`` flag:
+#
+# - ``mxu=True``  (TPU): assemble the melt tile in VMEM and issue ONE
+#   ``jnp.dot`` — the MXU-shaped contraction.
+# - ``mxu=False`` (interpret/CPU): the same contraction unrolled over the
+#   numel axis as outer-product accumulates — interpret-mode concatenate is
+#   ~3x the cost of the whole tile otherwise, so the unrolled form is what
+#   makes the CPU proof representative.
+#
+# Default: ``mxu = not interpret``.
+
+
+def _bank_tile(x_ref, w_ref, offsets, base, tile_rows, K, mxu, lead=()):
+    """One (tile_rows, K) output tile of the bank contraction."""
+    if mxu:
+        cols = [
+            pl.load(x_ref,
+                    lead + (pl.ds(base + off, tile_rows), slice(None)))
+            .reshape(tile_rows, -1)
+            for off in offsets
+        ]
+        tile = jnp.concatenate(cols, axis=1).astype(jnp.float32)
+        return jnp.dot(tile, w_ref[...].astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+    acc = jnp.zeros((tile_rows, K), jnp.float32)
+    for c, off in enumerate(offsets):
+        sl = pl.load(x_ref,
+                     lead + (pl.ds(base + off, tile_rows), slice(None)))
+        acc = acc + sl.reshape(tile_rows, -1).astype(jnp.float32) \
+            * w_ref[c, :][None, :].astype(jnp.float32)
+    return acc
+
+
+def _bank_kernel(x_ref, w_ref, o_ref, *, offsets: Tuple[int, ...],
+                 tile_rows: int, mxu: bool):
+    i = pl.program_id(0)
+    acc = _bank_tile(x_ref, w_ref, offsets, i * tile_rows, tile_rows,
+                     o_ref.shape[-1], mxu)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def fused_stencil_bank_rows(x_halo: jax.Array, weight_matrix: jax.Array,
+                            row_offsets, out_rows: int, halo_lo: int,
+                            tile_rows: Optional[int] = None,
+                            interpret: bool = True,
+                            mxu: Optional[bool] = None):
+    """Bank 2-D canonical form: K operators over one slab pass.
+
+    x_halo: (out_rows + halo_lo + halo_hi, 1) — canonical single-lane rows.
+    weight_matrix: (numel, K) — one column per operator.
+    Returns (out_rows, K).
+    """
+    R = out_rows
+    numel, K = weight_matrix.shape
+    if tile_rows is None:
+        tile_rows = pick_tile_rows(numel, x_halo.shape[1], K, x_halo.dtype)
+    if mxu is None:
+        mxu = not interpret
+    tiles = -(-R // tile_rows)
+    pad_r = tiles * tile_rows - R
+    if pad_r > 0:
+        x_halo = jnp.pad(x_halo, ((0, pad_r), (0, 0)))
+    W = weight_matrix.astype(jnp.float32)
+    offs = tuple(int(o) + halo_lo for o in np.asarray(row_offsets))
+
+    kernel = functools.partial(_bank_kernel, offsets=offs,
+                               tile_rows=tile_rows, mxu=mxu)
+    out = pl.pallas_call(
+        kernel,
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec(block_shape=None),          # whole array (HBM ref)
+            pl.BlockSpec((numel, K), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows, K), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tiles * tile_rows, K), x_halo.dtype),
+        interpret=interpret,
+    )(x_halo, W)
+    return out[:R]
+
+
+def _bank_kernel_batched(x_ref, w_ref, o_ref, *, offsets: Tuple[int, ...],
+                         tile_rows: int, mxu: bool):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    acc = _bank_tile(x_ref, w_ref, offsets, i * tile_rows, tile_rows,
+                     o_ref.shape[-1], mxu, lead=(b,))
+    o_ref[...] = acc[None].astype(o_ref.dtype)
+
+
+def fused_stencil_bank_rows_batched(x_halo: jax.Array,
+                                    weight_matrix: jax.Array,
+                                    row_offsets, out_rows: int, halo_lo: int,
+                                    tile_rows: Optional[int] = None,
+                                    interpret: bool = True,
+                                    mxu: Optional[bool] = None):
+    """Batched bank form: grid (B, tiles), each item its own halo rows.
+
+    x_halo: (B, out_rows + halo_lo + halo_hi, 1).  Returns (B, out_rows, K).
+    """
+    B = x_halo.shape[0]
+    R = out_rows
+    numel, K = weight_matrix.shape
+    if tile_rows is None:
+        tile_rows = pick_tile_rows(numel, x_halo.shape[2], K, x_halo.dtype)
+    if mxu is None:
+        mxu = not interpret
+    tiles = -(-R // tile_rows)
+    pad_r = tiles * tile_rows - R
+    if pad_r > 0:
+        x_halo = jnp.pad(x_halo, ((0, 0), (0, pad_r), (0, 0)))
+    W = weight_matrix.astype(jnp.float32)
+    offs = tuple(int(o) + halo_lo for o in np.asarray(row_offsets))
+
+    kernel = functools.partial(_bank_kernel_batched, offsets=offs,
+                               tile_rows=tile_rows, mxu=mxu)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, tiles),
+        in_specs=[
+            pl.BlockSpec(block_shape=None),          # whole array (HBM ref)
+            pl.BlockSpec((numel, K), lambda b, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_rows, K), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, tiles * tile_rows, K),
+                                       x_halo.dtype),
+        interpret=interpret,
+    )(x_halo, W)
+    return out[:, :R]
+
+
+# -- depthwise (per-lane) form ---------------------------------------------
+#
+# Separable factorization executes a bank as successive 1-D passes; after
+# the first pass the K bank outputs live in lanes, and each lane owns its
+# own 1-D factor.  The depthwise kernel is the per-lane weighted melt: a
+# VPU broadcast-multiply per tap, no cross-lane contraction.
+
+
+def _depthwise_kernel(x_ref, w_ref, o_ref, *, offsets: Tuple[int, ...],
+                      tile_rows: int):
+    i = pl.program_id(0)
+    base = i * tile_rows
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for c, off in enumerate(offsets):
+        sl = pl.load(x_ref, (pl.ds(base + off, tile_rows), slice(None)))
+        acc = acc + w_ref[c, :][None, :].astype(jnp.float32) * sl.astype(
+            jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def fused_stencil_rows_depthwise(x_halo: jax.Array, weights: jax.Array,
+                                 row_offsets, out_rows: int, halo_lo: int,
+                                 tile_rows: Optional[int] = None,
+                                 interpret: bool = True):
+    """Per-lane 2-D canonical form.
+
+    x_halo: (out_rows + halo_lo + halo_hi, K) — K independent channels in
+    lanes.  weights: (numel, K) — lane k is filtered by column k.
+    Returns (out_rows, K).
+    """
+    R = out_rows
+    numel, K = weights.shape
+    if tile_rows is None:
+        tile_rows = pick_tile_rows(numel, K, K, x_halo.dtype)
+    tiles = -(-R // tile_rows)
+    pad_r = tiles * tile_rows - R
+    if pad_r > 0:
+        x_halo = jnp.pad(x_halo, ((0, pad_r), (0, 0)))
+    W = weights.astype(jnp.float32)
+    offs = tuple(int(o) + halo_lo for o in np.asarray(row_offsets))
+
+    kernel = functools.partial(_depthwise_kernel, offsets=offs,
+                               tile_rows=tile_rows)
+    out = pl.pallas_call(
+        kernel,
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec(block_shape=None),          # whole array (HBM ref)
+            pl.BlockSpec((numel, K), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows, K), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tiles * tile_rows, K), x_halo.dtype),
+        interpret=interpret,
+    )(x_halo, W)
+    return out[:R]
+
+
+def _depthwise_kernel_batched(x_ref, w_ref, o_ref, *,
+                              offsets: Tuple[int, ...], tile_rows: int):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    base = i * tile_rows
+    acc = jnp.zeros(o_ref.shape[1:], jnp.float32)
+    for c, off in enumerate(offsets):
+        sl = pl.load(x_ref, (b, pl.ds(base + off, tile_rows), slice(None)))
+        acc = acc + w_ref[c, :][None, :].astype(jnp.float32) * sl.astype(
+            jnp.float32)
+    o_ref[...] = acc[None].astype(o_ref.dtype)
+
+
+def fused_stencil_rows_depthwise_batched(x_halo: jax.Array,
+                                         weights: jax.Array,
+                                         row_offsets, out_rows: int,
+                                         halo_lo: int,
+                                         tile_rows: Optional[int] = None,
+                                         interpret: bool = True):
+    """Batched per-lane form: (B, rows+halo, K) → (B, out_rows, K)."""
+    B = x_halo.shape[0]
+    R = out_rows
+    numel, K = weights.shape
+    if tile_rows is None:
+        tile_rows = pick_tile_rows(numel, K, K, x_halo.dtype)
+    tiles = -(-R // tile_rows)
+    pad_r = tiles * tile_rows - R
+    if pad_r > 0:
+        x_halo = jnp.pad(x_halo, ((0, 0), (0, pad_r), (0, 0)))
+    W = weights.astype(jnp.float32)
+    offs = tuple(int(o) + halo_lo for o in np.asarray(row_offsets))
+
+    kernel = functools.partial(_depthwise_kernel_batched, offsets=offs,
+                               tile_rows=tile_rows)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, tiles),
+        in_specs=[
+            pl.BlockSpec(block_shape=None),          # whole array (HBM ref)
+            pl.BlockSpec((numel, K), lambda b, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_rows, K), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, tiles * tile_rows, K),
+                                       x_halo.dtype),
+        interpret=interpret,
+    )(x_halo, W)
     return out[:, :R]

@@ -80,13 +80,16 @@ def _canonical_batched(x, grid: QuasiGrid, pad_value):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("grid", "pad_value", "interpret", "batched"))
+    jax.jit,
+    static_argnames=("grid", "pad_value", "interpret", "batched",
+                     "tile_rows"))
 def fused_stencil(x, grid: QuasiGrid, weights, pad_value=0.0,
-                  interpret=None, batched=False):
+                  interpret=None, batched=False, tile_rows=None):
     """Rank-agnostic fused melt×contract (stride-1 'same' grids).
 
     ``batched=True``: leading dim of ``x`` is a stack of independent tensors;
     the Pallas grid gains a batch axis (one kernel launch for the stack).
+    ``tile_rows=None`` picks a VMEM-budget tile (``pick_tile_rows``).
     """
     if grid.stride != (1,) * grid.rank or grid.padding != "same":
         raise NotImplementedError("fused path covers stride-1 'same' stencils")
@@ -96,13 +99,104 @@ def fused_stencil(x, grid: QuasiGrid, weights, pad_value=0.0,
             x, grid, pad_value)
         rows = _ms.fused_stencil_rows_batched(
             flat, jnp.asarray(weights), offs, total, halo_lo,
-            interpret=interpret)
+            tile_rows=tile_rows, interpret=interpret)
         return crop(rows[:, :, 0]).astype(x.dtype)
     flat, offs, halo_lo, total, crop = _canonical(x, grid, pad_value)
     rows = _ms.fused_stencil_rows(
         flat, jnp.asarray(weights), offs, total, halo_lo,
-        interpret=interpret)
+        tile_rows=tile_rows, interpret=interpret)
     return crop(rows[:, 0]).astype(x.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("grid", "pad_value", "interpret", "batched",
+                     "tile_rows", "mxu"))
+def fused_stencil_bank(x, grid: QuasiGrid, weight_matrix, pad_value=0.0,
+                       interpret=None, batched=False, tile_rows=None,
+                       mxu=None):
+    """K operators over one melt pass: (..., *spatial) → (..., *spatial, K).
+
+    ``weight_matrix`` is (numel(m), K); each output tile computes the
+    (tile_rows, numel) × (numel, K) melt-tile contraction — one MXU matmul
+    on TPU (``mxu=True``), the same contraction unrolled as outer-product
+    accumulates under interpret mode (``mxu=None`` picks per backend) — so
+    the halo slab load is amortized across all K operators and ``M`` never
+    exists in HBM.
+    """
+    if grid.stride != (1,) * grid.rank or grid.padding != "same":
+        raise NotImplementedError("fused path covers stride-1 'same' stencils")
+    interpret = _interpret_default() if interpret is None else interpret
+    W = jnp.asarray(weight_matrix)
+    if batched:
+        flat, offs, halo_lo, total, _ = _canonical_batched(
+            x, grid, pad_value)
+        rows = _ms.fused_stencil_bank_rows_batched(
+            flat, W, offs, total, halo_lo, tile_rows=tile_rows,
+            interpret=interpret, mxu=mxu)  # (B, total, K)
+        return _crop_channels(rows, grid, batched=True).astype(x.dtype)
+    flat, offs, halo_lo, total, _ = _canonical(x, grid, pad_value)
+    rows = _ms.fused_stencil_bank_rows(
+        flat, W, offs, total, halo_lo, tile_rows=tile_rows,
+        interpret=interpret, mxu=mxu)  # (total, K)
+    return _crop_channels(rows, grid, batched=False).astype(x.dtype)
+
+
+def _crop_channels(rows, grid: QuasiGrid, batched: bool):
+    """(…, total_padded_rows, K) → (…, *in_shape, K) valid-region crop."""
+    K = rows.shape[-1]
+    lead = rows.shape[:-2]
+    out = rows.reshape(lead + grid.padded_shape + (K,))
+    slices = tuple(slice(None) for _ in lead) + tuple(
+        slice(lo, lo + n) for lo, n in zip(grid.pad_lo, grid.in_shape)
+    )
+    return out[slices]
+
+
+def _canonical_channels(xc, grid: QuasiGrid, pad_value, batched: bool):
+    """Channel-in-lanes canonical form for depthwise (per-lane) passes.
+
+    xc: (..., *spatial, K).  Spatial dims are halo-padded (the K axis gets
+    zero-width pads, legal under every ``jnp.pad`` mode), then flattened to
+    (…, P, K) rows with the same flat-offset addressing as ``_canonical``.
+    """
+    pads = (([(0, 0)] if batched else [])
+            + list(zip(grid.pad_lo, grid.pad_hi)) + [(0, 0)])
+    xp = pad_array(xc, pads, pad_value)
+    K = xp.shape[-1]
+    flat = (xp.reshape(xp.shape[0], -1, K) if batched
+            else xp.reshape(-1, K))
+    offs, halo_lo, halo_hi = _halo_extents(grid)
+    hpad = ([(0, 0)] if batched else []) + [(halo_lo, halo_hi), (0, 0)]
+    flat = jnp.pad(flat, hpad)
+    total = int(np.prod(grid.padded_shape))
+    return flat, offs, halo_lo, total
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("grid", "pad_value", "interpret", "batched",
+                     "tile_rows"))
+def fused_stencil_depthwise(xc, grid: QuasiGrid, weights, pad_value=0.0,
+                            interpret=None, batched=False, tile_rows=None):
+    """Per-lane stencil: lane k of ``xc`` (..., *spatial, K) is filtered by
+    column k of ``weights`` (numel(m), K) — the separable 1-D pass primitive.
+    """
+    if grid.stride != (1,) * grid.rank or grid.padding != "same":
+        raise NotImplementedError("fused path covers stride-1 'same' stencils")
+    interpret = _interpret_default() if interpret is None else interpret
+    W = jnp.asarray(weights)
+    flat, offs, halo_lo, total = _canonical_channels(
+        xc, grid, pad_value, batched)
+    if batched:
+        rows = _ms.fused_stencil_rows_depthwise_batched(
+            flat, W, offs, total, halo_lo, tile_rows=tile_rows,
+            interpret=interpret)
+    else:
+        rows = _ms.fused_stencil_rows_depthwise(
+            flat, W, offs, total, halo_lo, tile_rows=tile_rows,
+            interpret=interpret)
+    return _crop_channels(rows, grid, batched=batched).astype(xc.dtype)
 
 
 @functools.partial(
