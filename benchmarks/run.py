@@ -142,6 +142,19 @@ def bench_bank(quick=False):
     return rows
 
 
+def bench_stats(quick=False):
+    """Statistics-engine rows: the shared ``var_streaming_pair`` from
+    benchmarks.stats (same shapes, interleaved timing — the smoke numbers
+    can't drift from the gated benchmark) plus subsystem end-to-ends."""
+    from benchmarks.stats import BATCH, FULL_ITEM, QUICK_ITEM, headline_rows
+
+    rng = np.random.RandomState(0)
+    item = QUICK_ITEM if quick else FULL_ITEM
+    xb = jnp.asarray((rng.randn(BATCH, *item) * 2 + 5).astype(np.float32))
+    rows, _ = headline_rows(xb, reps=5 if quick else 10)
+    return rows
+
+
 def _git_rev() -> str:
     try:
         return subprocess.check_output(
@@ -175,9 +188,12 @@ def main(argv=None):
     ap.add_argument("--json", metavar="PATH",
                     help="also write machine-readable results "
                          "(BENCH_<section>.json trajectory)")
+    ap.add_argument("--json-dir", metavar="DIR",
+                    help="also write one BENCH_<section>.json per section "
+                         "run (the CI artifact layout)")
     ap.add_argument("--sections", default=None,
                     help="comma-separated subset of "
-                         "fig6,fig7,stencil,filters,bank,model,serve")
+                         "fig6,fig7,stencil,filters,bank,stats,model,serve")
     args = ap.parse_args(argv)
 
     from benchmarks import paper_figs
@@ -191,6 +207,7 @@ def main(argv=None):
             shape=(16, 48, 48) if args.quick else (32, 64, 64)),
         "filters": lambda: bench_filters(args.quick),
         "bank": lambda: bench_bank(args.quick),
+        "stats": lambda: bench_stats(args.quick),
         "model": lambda: bench_models(args.quick),
         "serve": lambda: bench_serving(args.quick),
     }
@@ -201,7 +218,8 @@ def main(argv=None):
             ap.error(f"unknown sections: {sorted(unknown)}")
         sections = {k: sections[k] for k in wanted}
     print("name,us_per_call,derived")
-    for sec in sections.values():
+    per_section = {}
+    for name_sec, sec in sections.items():
         try:
             rows = sec()
         except Exception as e:  # noqa: BLE001
@@ -212,8 +230,16 @@ def main(argv=None):
             print(f"{name},{us:.1f},{derived}")
             sys.stdout.flush()
         all_rows += rows
+        per_section[name_sec] = rows
     if args.json:
         write_json(args.json, all_rows)
+    if args.json_dir:
+        import os
+
+        os.makedirs(args.json_dir, exist_ok=True)
+        for name_sec, rows in per_section.items():
+            write_json(os.path.join(args.json_dir,
+                                    f"BENCH_{name_sec}.json"), rows)
     return all_rows
 
 

@@ -34,7 +34,14 @@ from repro.core.grid import make_quasi_grid, normalize_pad_value
 from repro.core.engine import apply_stencil
 from repro.core.melt import pad_array
 
-__all__ = ["halo_exchange", "distributed_stencil", "sharded_stencil_fn"]
+__all__ = [
+    "halo_exchange",
+    "distributed_stencil",
+    "sharded_stencil_fn",
+    "tree_merge_moments",
+    "sharded_moments_fn",
+    "sharded_histogram_fn",
+]
 
 
 def _slice_axis(x: jax.Array, lo: int, hi: int, axis: int) -> jax.Array:
@@ -167,6 +174,136 @@ def sharded_stencil_fn(
         local_fn, mesh=mesh, in_specs=(spec,), out_specs=spec,
         check_rep=False,
     )
+
+
+# -- distributed statistics (DESIGN.md §10) ---------------------------------
+#
+# The statistics engine's states are mergeable pytrees, so the cluster
+# combiner is psum-shaped: every device contributes its local sufficient
+# statistics and receives the global ones.  Moments use an explicit
+# all-gather + balanced Chan merge tree (addition is the wrong algebra for
+# central moments); histograms over one static grid psum directly.
+
+
+def tree_merge_moments(state, axis_name: str):
+    """All-reduce a MomentState across ``axis_name`` by a balanced merge tree.
+
+    ``all_gather`` stacks every device's state on a new leading axis, then
+    the pairwise Chan tree (``merge_along_axis``) folds it — log₂(devices)
+    merge depth, identical math to the kernel's tile merge, so device count
+    never changes results beyond float rounding.  Every device returns the
+    full state (psum-style semantics).
+    """
+    from repro.stats.moments import merge_along_axis  # deferred: stats→core
+
+    gathered = jax.lax.all_gather(state, axis_name)
+    return merge_along_axis(gathered, axis=0)
+
+
+def sharded_moments_fn(
+    mesh: Mesh,
+    axis_name: str,
+    in_shape,
+    *,
+    axis=None,
+    batch_axis_name: Optional[str] = None,
+    method: str = "auto",
+    order: int = 4,
+):
+    """Build a jit-able distributed moments reduction for dim-0-sharded input.
+
+    Matches :func:`sharded_stencil_fn`'s data layout: the input is sharded
+    ``P(axis_name, ...)`` — or ``P(batch_axis_name, axis_name, ...)`` with
+    a batch axis — each device reduces its local block to a
+    ``MomentState`` (any local execution path, including the fused
+    no-materialize kernel), and states tree-merge across the slab axis and
+    then the batch axis.  No halo: moments have no neighbourhood, the melt
+    operator is (1,)*rank, so the partition is embarrassingly parallel —
+    the coupling cost is one O(state) collective instead of boundary
+    slices.
+
+    Sharded dims must be *reduced* dims (kept axes live whole on every
+    device); ``axis`` names the reduced axes of the **global** array, all
+    axes by default.  Returns ``f(x) -> MomentState`` with the state
+    replicated on every device.
+    """
+    from repro.core.plan import normalize_axes, resolve_method
+    from repro.stats.moments import execute_moments
+
+    batched = batch_axis_name is not None
+    in_shape = tuple(int(s) for s in in_shape)
+    ndim = len(in_shape)
+    axes = normalize_axes(ndim, axis, False)
+    sharded_dims = (0, 1) if batched else (0,)
+    for d in sharded_dims:
+        if d not in axes:
+            raise ValueError(
+                f"sharded dim {d} must be a reduced axis (got axes={axes}); "
+                f"kept axes cannot be split across devices")
+    if in_shape[sharded_dims[-1]] % mesh.shape[axis_name]:
+        raise ValueError(
+            f"sharded dim extent {in_shape[sharded_dims[-1]]} not divisible "
+            f"by {mesh.shape[axis_name]} shards")
+    if batched and in_shape[0] % mesh.shape[batch_axis_name]:
+        raise ValueError(
+            f"batch dim {in_shape[0]} not divisible by "
+            f"{mesh.shape[batch_axis_name]} batch shards")
+    meth = resolve_method(method)
+
+    def local_fn(x_local):
+        state = execute_moments(x_local, axes, meth, order)
+        state = tree_merge_moments(state, axis_name)
+        if batched:
+            state = tree_merge_moments(state, batch_axis_name)
+        return state
+
+    spec = _stats_in_spec(ndim, axis_name, batch_axis_name)
+    return shard_map(
+        local_fn, mesh=mesh, in_specs=(spec,), out_specs=P(),
+        check_rep=False,
+    )
+
+
+def sharded_histogram_fn(
+    mesh: Mesh,
+    axis_name: str,
+    in_shape,
+    bins: int,
+    range,
+    *,
+    batch_axis_name: Optional[str] = None,
+):
+    """Distributed fixed-bin histogram over a dim-0-sharded array.
+
+    Every device bins its local block against the same static (lo, hi,
+    bins) grid and the counts ``psum`` across the mesh — the histogram
+    pytree's merge *is* addition, so the generic combiner degenerates to
+    one collective.  Returns ``f(x) -> Histogram`` replicated everywhere.
+    """
+    from repro.stats.hist import Histogram, histogram_fixed
+
+    lo, hi = float(range[0]), float(range[1])
+    in_shape = tuple(int(s) for s in in_shape)
+    ndim = len(in_shape)
+    batched = batch_axis_name is not None
+    names = ((axis_name, batch_axis_name) if batched else (axis_name,))
+
+    def local_fn(x_local):
+        h = histogram_fixed(x_local, bins, lo, hi)
+        return Histogram(jax.lax.psum(h.counts, names), lo, hi)
+
+    spec = _stats_in_spec(ndim, axis_name, batch_axis_name)
+    return shard_map(
+        local_fn, mesh=mesh, in_specs=(spec,), out_specs=P(),
+        check_rep=False,
+    )
+
+
+def _stats_in_spec(ndim: int, axis_name: str,
+                   batch_axis_name: Optional[str]) -> P:
+    if batch_axis_name is not None:
+        return P(batch_axis_name, axis_name, *([None] * (ndim - 2)))
+    return P(axis_name, *([None] * (ndim - 1)))
 
 
 def distributed_stencil(

@@ -30,6 +30,7 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.grid import (
     QuasiGrid,
@@ -41,8 +42,11 @@ from repro.core.grid import (
 __all__ = [
     "StencilPlan",
     "BankPlan",
+    "StatsPlan",
     "get_plan",
     "get_bank_plan",
+    "get_stats_plan",
+    "normalize_axes",
     "separable_eligible",
     "plan_cache_stats",
     "clear_plan_cache",
@@ -314,6 +318,122 @@ def get_bank_plan(
         grid = make_quasi_grid(spatial, op_t, stride_t, padding, dil_t)
         return BankPlan(key, in_shape, op_t, stride_t, padding, dil_t, pv,
                         meth, dt, batched, grid, int(K), bool(separable))
+
+    return _intern(key, build)
+
+
+def normalize_axes(ndim: int, axis, batched: bool = False
+                   ) -> Tuple[int, ...]:
+    """Canonicalize a reduce-axes spec to a sorted tuple of positive ints.
+
+    ``axis=None`` means all axes; ``batched=True`` withholds dim 0 from a
+    ``None`` reduction (the leading dim is a stack of independent tensors)
+    and rejects reducing over it explicitly.  Pure shape math, shared by the
+    stats engine and the distributed combiners so axis keys hash one way.
+    """
+    if axis is None:
+        axes = tuple(range(1 if batched else 0, ndim))
+    else:
+        raw = ((int(axis),) if isinstance(axis, (int, np.integer))
+               else tuple(int(a) for a in axis))
+        if any(not -ndim <= a < ndim for a in raw):
+            raise ValueError(f"reduce axes {axis!r} out of range for "
+                             f"ndim={ndim}")
+        axes = tuple(a % ndim for a in raw)
+    if len(axes) != len(set(axes)):
+        raise ValueError(f"duplicate reduce axes in {axis!r}")
+    axes = tuple(sorted(axes))
+    if not axes:
+        raise ValueError("must reduce over at least one axis")
+    if batched and 0 in axes:
+        raise ValueError("batched=True keeps dim 0; it cannot be reduced")
+    return axes
+
+
+class StatsPlan:
+    """Interned executor for one streaming-moments problem (DESIGN.md §10).
+
+    A stats signature is ``(in_shape, dtype, reduce-axes, resolved path)``;
+    the executor maps an array to a
+    :class:`~repro.stats.moments.MomentState` pytree of mergeable
+    sufficient statistics.  Shares the process-wide LRU plan cache (and its
+    hit/trace counters) with stencil and bank plans — streaming stats are
+    served by the same amortization machinery as filtering.
+    """
+
+    __slots__ = ("key", "in_shape", "axes", "dtype", "method", "order",
+                 "_exec", "_hits", "_calls", "_traces")
+
+    def __init__(self, key: tuple, in_shape, axes, dtype, method, order):
+        self.key = key
+        self.in_shape = in_shape
+        self.axes = axes
+        self.dtype = dtype
+        self.method = method
+        self.order = order
+        self._hits = 0
+        self._calls = 0
+        self._traces = 0
+        self._exec = self._build_executor()
+
+    def __hash__(self):
+        return hash(self.key)
+
+    def __eq__(self, other):
+        return isinstance(other, StatsPlan) and self.key == other.key
+
+    def __repr__(self):
+        return (f"StatsPlan(in_shape={self.in_shape}, axes={self.axes}, "
+                f"method={self.method!r}, dtype={self.dtype})")
+
+    def _build_executor(self):
+        # deferred: stats imports us; importlib because the package re-exports
+        # a `moments` *function* that shadows the submodule attribute
+        import importlib
+
+        _moments = importlib.import_module("repro.stats.moments")
+        axes, method, order = self.axes, self.method, self.order
+
+        def run(x):
+            self._traces += 1
+            return _moments.execute_moments(x, axes, method, order)
+
+        return jax.jit(run)
+
+    def __call__(self, x: jax.Array):
+        self._calls += 1
+        return self._exec(x)
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self._hits, "calls": self._calls,
+                "traces": self._traces}
+
+
+def get_stats_plan(
+    in_shape: Tuple[int, ...],
+    dtype,
+    axis=None,
+    method: str = "auto",
+    batched: bool = False,
+    order: int = 4,
+) -> StatsPlan:
+    """Interned plan for a streaming-moments signature.
+
+    ``axis``/``batched`` follow :func:`normalize_axes`; two spellings of the
+    same reduction (``axis=None, batched=True`` vs ``axis=(1, 2)`` on rank
+    3) intern one plan.  ``order`` (2 or 4) is part of the key — the
+    variance fast path traces a different reduction body.
+    """
+    in_shape = tuple(int(s) for s in in_shape)
+    axes = normalize_axes(len(in_shape), axis, batched)
+    meth = resolve_method(method)
+    if order not in (2, 4):
+        raise ValueError(f"order must be 2 or 4, got {order}")
+    dt = jnp.dtype(dtype).name
+    key = ("stats", in_shape, axes, meth, dt, int(order))
+
+    def build():
+        return StatsPlan(key, in_shape, axes, dt, meth, int(order))
 
     return _intern(key, build)
 

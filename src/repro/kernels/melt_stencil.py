@@ -357,6 +357,92 @@ def fused_stencil_rows_depthwise(x_halo: jax.Array, weights: jax.Array,
     return out[:R]
 
 
+# -- tile moment reduction (statistics engine, DESIGN.md §10) ---------------
+#
+# The statistics engine's sufficient statistics are mergeable per-tile
+# reductions over the SAME canonical (rows × lanes) layout the stencil
+# kernels stream — each grid step loads one row tile into VMEM and emits
+# that tile's (Σx, Σ(x−x̄)², Σ(x−x̄)³, Σ(x−x̄)⁴) per lane, so the melt matrix
+# never exists in HBM and the input is read exactly once.  The power sums
+# are *tile-centered* (about the tile's own masked mean): raw Σx²…Σx⁴
+# cancel catastrophically in f32 once |mean| ≫ std, while centered sums
+# bound the cancellation to one tile; the Chan merge tree downstream
+# combines tiles without ever forming a global raw sum (DESIGN.md §10).
+# Rows past ``valid_rows`` (tile padding) are masked out of both the pivot
+# mean and the sums; per-tile counts are static host-side knowledge.
+
+
+def _moment_kernel(x_ref, o_ref, *, tile_rows: int, valid_rows: int,
+                   order: int):
+    i = pl.program_id(0)
+    sl = pl.load(x_ref, (pl.ds(i * tile_rows, tile_rows), slice(None)))
+    sl = sl.astype(jnp.float32)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (tile_rows, 1), 0)
+    mask = (rows < valid_rows - i * tile_rows).astype(jnp.float32)
+    n = jnp.clip(valid_rows - i * tile_rows, 1, tile_rows).astype(jnp.float32)
+    sl = sl * mask
+    s1 = jnp.sum(sl, axis=0)
+    c = (sl - (s1 / n)[None, :]) * mask  # centered about the tile pivot
+    c2 = c * c
+    stats = [s1, jnp.sum(c2, axis=0)]
+    if order == 4:
+        stats += [jnp.sum(c2 * c, axis=0), jnp.sum(c2 * c2, axis=0)]
+    o_ref[...] = jnp.stack(stats)[None]
+
+
+def fused_moment_rows(x2d: jax.Array, valid_rows: int,
+                      tile_rows: Optional[int] = None,
+                      interpret: bool = True, order: int = 4) -> jax.Array:
+    """Per-tile sufficient statistics of a canonical (R, C) block.
+
+    x2d: (R, C) — R reduction rows × C kept lanes (rows ≥ ``valid_rows``
+    are ignored).  Returns (tiles, order, C) float32: per tile and lane,
+    ``[Σx, Σ(x−x̄_t)², Σ(x−x̄_t)³, Σ(x−x̄_t)⁴][:order]`` with ``x̄_t`` the
+    tile's own valid-row mean (``order=2`` drops the cubic/quartic sums —
+    the variance fast path).  Together with the (static) per-tile valid
+    counts these are exact :class:`~repro.stats.moments.MomentState` tiles,
+    merged by the caller's Chan tree (DESIGN.md §10).  The lane dim is
+    deliberately not tiled — kept axes are operator-sized (channels), not
+    volume-sized.
+    """
+    if order not in (2, 4):
+        raise ValueError(f"order must be 2 or 4, got {order}")
+    R, C = x2d.shape
+    if tile_rows is None:
+        tile_rows = pick_tile_rows(4, C, order * C, x2d.dtype)
+    tiles = max(1, -(-R // tile_rows))
+    pad_r = tiles * tile_rows - R
+    if pad_r > 0:
+        x2d = jnp.pad(x2d, ((0, pad_r), (0, 0)))
+
+    kernel = functools.partial(_moment_kernel, tile_rows=tile_rows,
+                               valid_rows=int(valid_rows), order=order)
+    return pl.pallas_call(
+        kernel,
+        grid=(tiles,),
+        in_specs=[pl.BlockSpec(block_shape=None)],     # whole array (HBM ref)
+        out_specs=pl.BlockSpec((1, order, C), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((tiles, order, C), jnp.float32),
+        interpret=interpret,
+    )(x2d)
+
+
+def moment_tile_counts(valid_rows: int, num_rows: int,
+                       tile_rows: Optional[int] = None,
+                       dtype=jnp.float32, lanes: int = 1,
+                       order: int = 4) -> np.ndarray:
+    """Static per-tile valid-row counts matching :func:`fused_moment_rows`.
+
+    Must mirror the kernel's tile sizing exactly — the counts are the
+    ``count`` leaves of the per-tile states the caller builds.
+    """
+    if tile_rows is None:
+        tile_rows = pick_tile_rows(4, lanes, order * lanes, dtype)
+    tiles = max(1, -(-num_rows // tile_rows))
+    edges = np.arange(tiles, dtype=np.int64) * tile_rows
+    return np.clip(valid_rows - edges, 0, tile_rows).astype(np.float32)
+
+
 def _depthwise_kernel_batched(x_ref, w_ref, o_ref, *,
                               offsets: Tuple[int, ...], tile_rows: int):
     b = pl.program_id(0)

@@ -199,6 +199,26 @@ def fused_stencil_depthwise(xc, grid: QuasiGrid, weights, pad_value=0.0,
     return _crop_channels(rows, grid, batched=batched).astype(xc.dtype)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_rows",
+                                             "order"))
+def fused_moment_sums(x2d, interpret=None, tile_rows=None, order=4):
+    """Tile-reduction sufficient statistics of a canonical (R, C) block.
+
+    Returns ``(sums, counts)``: ``sums`` is (tiles, order, C) float32
+    per-tile ``[Σx, Σ(x−x̄_t)², Σ(x−x̄_t)³, Σ(x−x̄_t)⁴][:order]`` per lane
+    from the Pallas kernel (one pass over the input, no melt matrix in HBM
+    — DESIGN.md §10) and ``counts`` the matching (tiles,) static valid-row
+    counts.  ``order=2`` is the variance fast path.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    R, C = x2d.shape
+    sums = _ms.fused_moment_rows(x2d, R, tile_rows=tile_rows,
+                                 interpret=interpret, order=order)
+    counts = jnp.asarray(_ms.moment_tile_counts(
+        R, R, tile_rows=tile_rows, dtype=x2d.dtype, lanes=C, order=order))
+    return sums, counts
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("op_shape", "sigma_d", "sigma_r", "pad_value", "interpret"),

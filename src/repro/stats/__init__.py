@@ -1,0 +1,88 @@
+"""repro.stats — the melt-native statistics engine (DESIGN.md §10).
+
+The paper's promise beyond filtering: "mathematical statistics support for
+advanced analysis" on high-dimensional data.  Everything here reduces to a
+small set of *mergeable sufficient statistics* — pytrees combined by
+associative Chan-style merges — mapped onto the melt execution machinery:
+
+- :mod:`repro.stats.moments` — streaming count/mean/M2–M4 states
+  (mean/var/std/skew/kurtosis), global and per-axis, over arrays too large
+  for one pass; fused Pallas tile reduction that never materializes ``M``.
+- :mod:`repro.stats.local`   — windowed mean/var/std and z-score / local
+  contrast normalization as box/Gaussian operator banks (separable, fused).
+- :mod:`repro.stats.hist`    — fixed-bin sharded histograms with
+  interpolated quantiles / median / IQR.
+- :mod:`repro.stats.cov`     — streaming channel covariance/correlation,
+  ``standardize``, and top-k PCA by subspace iteration on the streamed Σ.
+
+Distributed tree-merging of these pytrees across the batch×slab mesh lives
+in ``repro.core.distributed`` (``sharded_moments_fn`` /
+``sharded_histogram_fn``).
+"""
+from repro.stats.moments import (
+    MomentState,
+    execute_moments,
+    merge_along_axis,
+    merge_moments,
+    moments,
+    stream_moments,
+)
+from repro.stats.local import (
+    local_contrast_normalize,
+    local_mean,
+    local_moments,
+    local_std,
+    window_weights,
+    zscore,
+)
+from repro.stats.hist import (
+    Histogram,
+    histogram,
+    histogram_fixed,
+    iqr,
+    median,
+    merge_histograms,
+    quantile,
+    stream_histogram,
+)
+from repro.stats.cov import (
+    CovState,
+    channel_cov,
+    correlation,
+    covariance,
+    merge_cov,
+    pca,
+    standardize,
+    stream_channel_cov,
+)
+
+__all__ = [
+    "MomentState",
+    "moments",
+    "stream_moments",
+    "merge_moments",
+    "merge_along_axis",
+    "execute_moments",
+    "window_weights",
+    "local_mean",
+    "local_moments",
+    "local_std",
+    "zscore",
+    "local_contrast_normalize",
+    "Histogram",
+    "histogram",
+    "histogram_fixed",
+    "merge_histograms",
+    "stream_histogram",
+    "quantile",
+    "median",
+    "iqr",
+    "CovState",
+    "channel_cov",
+    "stream_channel_cov",
+    "merge_cov",
+    "covariance",
+    "correlation",
+    "standardize",
+    "pca",
+]

@@ -1,0 +1,174 @@
+"""Streaming channel covariance, standardization and top-k PCA.
+
+:class:`CovState` extends the moments algebra (DESIGN.md §10) to second
+*cross* moments: count, per-channel mean, and the centered comoment matrix
+``Σᵢ (xᵢ−μ)(xᵢ−μ)ᵀ``, merged across disjoint chunks with the same Chan
+update the scalar moments use (the rank-1 correction ``δδᵀ·n_a n_b / n``).
+
+The resulting (C, C) covariance follows the repo's Σ convention
+(``hilbert.as_covariance``): it can be passed straight back into
+``gaussian_weights(op_shape, sigma=cov)`` as a full covariance — measured
+statistics feeding anisotropic filtering is the intended loop.
+
+Top-k PCA runs subspace (orthogonal) iteration on the *streamed*
+covariance — no pass over the raw data, so it composes with sharded /
+too-big-for-one-pass inputs by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "CovState",
+    "channel_cov",
+    "stream_channel_cov",
+    "merge_cov",
+    "covariance",
+    "correlation",
+    "standardize",
+    "pca",
+]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CovState:
+    """Mergeable channel covariance sufficient statistics.
+
+    ``count`` scalar, ``mean`` (C,), ``comoment`` (C, C) — the centered
+    second cross-moment sum.  The all-zeros state is the merge identity.
+    """
+
+    count: jax.Array
+    mean: jax.Array
+    comoment: jax.Array
+
+    def tree_flatten(self):
+        return (self.count, self.mean, self.comoment), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @classmethod
+    def zero(cls, channels: int, dtype=jnp.float32) -> "CovState":
+        return cls(jnp.zeros((), dtype), jnp.zeros((channels,), dtype),
+                   jnp.zeros((channels, channels), dtype))
+
+    @property
+    def channels(self) -> int:
+        return self.mean.shape[-1]
+
+    def merge(self, other: "CovState") -> "CovState":
+        return merge_cov(self, other)
+
+
+def merge_cov(a: CovState, b: CovState) -> CovState:
+    """Chan merge with the rank-1 cross-moment correction δδᵀ·n_a n_b/n."""
+    n = a.count + b.count
+    ns = jnp.where(n == 0, 1.0, n)
+    delta = b.mean - a.mean
+    mean = a.mean + delta * b.count / ns
+    comoment = (a.comoment + b.comoment
+                + jnp.outer(delta, delta) * a.count * b.count / ns)
+    return CovState(n, mean, comoment)
+
+
+def _to_samples(x: jax.Array, channel_axis: int) -> jax.Array:
+    """(..., C, ...) → (N, C): channels last, everything else flattened."""
+    xm = jnp.moveaxis(x, channel_axis, -1)
+    return xm.reshape(-1, xm.shape[-1]).astype(jnp.float32)
+
+
+def channel_cov(x: jax.Array, *, channel_axis: int = -1) -> CovState:
+    """Covariance state of one chunk: all non-channel axes are samples."""
+    s = _to_samples(x, channel_axis)
+    n = s.shape[0]
+    mean = jnp.mean(s, axis=0)
+    c = s - mean[None, :]
+    return CovState(jnp.asarray(float(n), jnp.float32), mean, c.T @ c)
+
+
+def stream_channel_cov(chunks: Iterable[jax.Array], *,
+                       channel_axis: int = -1) -> CovState:
+    """Fold chunks into one covariance state — O(C²) memory."""
+    state: Optional[CovState] = None
+    for chunk in chunks:
+        s = channel_cov(jnp.asarray(chunk), channel_axis=channel_axis)
+        state = s if state is None else merge_cov(state, s)
+    if state is None:
+        raise ValueError("stream_channel_cov needs at least one chunk")
+    return state
+
+
+def covariance(state: CovState, ddof: int = 0) -> jax.Array:
+    """(C, C) covariance matrix — a valid Σ for ``hilbert.as_covariance``
+    / ``gaussian_weights(sigma=...)``."""
+    denom = state.count - float(ddof)
+    return state.comoment / jnp.where(denom <= 0, 1.0, denom)
+
+
+def correlation(state: CovState, eps: float = 1e-12) -> jax.Array:
+    """Correlation matrix: Σ normalized by per-channel std (unit diagonal)."""
+    cov = covariance(state)
+    d = jnp.sqrt(jnp.clip(jnp.diag(cov), eps, None))
+    return cov / jnp.outer(d, d)
+
+
+def standardize(
+    x: jax.Array,
+    state: Optional[CovState] = None,
+    *,
+    channel_axis: int = -1,
+    eps: float = 1e-6,
+) -> jax.Array:
+    """Per-channel (x − μ)/σ using streamed (or on-the-fly) statistics.
+
+    Passing a pre-streamed ``state`` standardizes new data against global
+    statistics — the serving-time use; with ``state=None`` the chunk
+    standardizes against itself.
+    """
+    if state is None:
+        state = channel_cov(x, channel_axis=channel_axis)
+    var = jnp.diag(covariance(state))
+    shape = [1] * x.ndim
+    shape[channel_axis % x.ndim] = state.channels
+    mu = state.mean.reshape(shape)
+    sd = jnp.sqrt(var + eps).reshape(shape)
+    return ((x.astype(jnp.float32) - mu) / sd).astype(x.dtype)
+
+
+def pca(
+    obj: Union[CovState, jax.Array],
+    k: int = 3,
+    *,
+    iters: int = 64,
+    seed: int = 0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Top-k eigenpairs of a covariance via subspace (power) iteration.
+
+    ``obj`` is a :class:`CovState` or a symmetric (C, C) matrix.  Returns
+    ``(eigvalues (k,), components (C, k))`` sorted descending; component
+    signs are arbitrary (an eigenvector convention, not a defect).  Power
+    iteration on the streamed covariance keeps PCA a pure function of the
+    sufficient statistics — no second pass over data.
+    """
+    A = covariance(obj) if isinstance(obj, CovState) else jnp.asarray(obj)
+    C = A.shape[-1]
+    if not (1 <= k <= C):
+        raise ValueError(f"k must be in [1, {C}], got {k}")
+    Q = jax.random.normal(jax.random.PRNGKey(seed), (C, k), A.dtype)
+    Q, _ = jnp.linalg.qr(Q)
+
+    def body(_, Q):
+        Q, _ = jnp.linalg.qr(A @ Q)
+        return Q
+
+    Q = jax.lax.fori_loop(0, iters, body, Q)
+    evals = jnp.einsum("ck,cd,dk->k", Q, A, Q)
+    order = jnp.argsort(-evals)
+    return evals[order], Q[:, order]

@@ -1,0 +1,158 @@
+"""Fixed-bin sharded histograms with interpolated quantiles (DESIGN.md §10).
+
+A fixed-edge histogram is the order-statistics face of the mergeable
+sufficient-statistics idea: per-shard counts over one static bin grid are
+combined by plain addition (psum-shaped — the distributed combiner in
+``repro.core.distributed`` literally psums them), and quantiles/median/IQR
+are read off the merged CDF with within-bin linear interpolation.
+
+Edges are *static* pytree metadata (lo, hi, bins) — two histograms merge
+iff their grids are identical, enforced at merge time; counts are float32
+so the pytree stays psum/donation-friendly and exact to 2²⁴ counts/bin.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Histogram",
+    "histogram",
+    "histogram_fixed",
+    "merge_histograms",
+    "stream_histogram",
+    "quantile",
+    "median",
+    "iqr",
+]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Histogram:
+    """Counts over a static uniform bin grid on [lo, hi].
+
+    ``counts[i]`` covers ``[lo + i·w, lo + (i+1)·w)`` with
+    ``w = (hi − lo)/bins``; values outside the range clamp into the edge
+    bins (a fixed grid must put mass *somewhere* — document-don't-drop).
+    """
+
+    counts: jax.Array  # (bins,) float32
+    lo: float
+    hi: float
+
+    def tree_flatten(self):
+        return (self.counts,), (self.lo, self.hi)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+    @property
+    def bins(self) -> int:
+        return self.counts.shape[-1]
+
+    @property
+    def bin_width(self) -> float:
+        return (self.hi - self.lo) / self.bins
+
+    @property
+    def total(self) -> jax.Array:
+        return jnp.sum(self.counts)
+
+    def merge(self, other: "Histogram") -> "Histogram":
+        return merge_histograms(self, other)
+
+
+def histogram_fixed(x: jax.Array, bins: int, lo: float, hi: float
+                    ) -> Histogram:
+    """Histogram over a *static* grid — trace-safe (shard_map/jit body).
+
+    This is the sharded building block: every shard bins against the same
+    (lo, hi, bins) and the combiner is count addition.
+    """
+    lo, hi = float(lo), float(hi)
+    if not hi > lo:
+        raise ValueError(f"need hi > lo, got [{lo}, {hi}]")
+    bins = int(bins)
+    scale = bins / (hi - lo)
+    idx = jnp.clip(jnp.floor((x.reshape(-1).astype(jnp.float32) - lo)
+                             * scale).astype(jnp.int32), 0, bins - 1)
+    counts = jnp.zeros((bins,), jnp.float32).at[idx].add(1.0)
+    return Histogram(counts, lo, hi)
+
+
+def histogram(x: jax.Array, bins: int = 64,
+              range: Optional[Tuple[float, float]] = None) -> Histogram:
+    """Histogram of all elements of ``x``; grid from data when ``range=None``.
+
+    Deriving the grid reads min/max off the concrete array (one extra
+    pass); under tracing pass an explicit ``range`` — the grid is static
+    metadata and cannot depend on traced values.
+    """
+    if range is None:
+        if isinstance(x, jax.core.Tracer):
+            raise ValueError(
+                "histogram(range=None) needs a concrete array — under jit "
+                "pass an explicit (lo, hi) range (the bin grid is static)")
+        lo = float(jnp.min(x))
+        hi = float(jnp.max(x))
+        if hi <= lo:  # constant data: give the single value a real bin
+            lo, hi = lo - 0.5, hi + 0.5
+    else:
+        lo, hi = float(range[0]), float(range[1])
+    return histogram_fixed(x, bins, lo, hi)
+
+
+def merge_histograms(a: Histogram, b: Histogram) -> Histogram:
+    """Combine two histograms over the *same* grid (count addition)."""
+    if (a.lo, a.hi, a.bins) != (b.lo, b.hi, b.bins):
+        raise ValueError(
+            f"histogram grids differ: [{a.lo}, {a.hi}]x{a.bins} vs "
+            f"[{b.lo}, {b.hi}]x{b.bins} — fixed-bin merging needs one grid")
+    return Histogram(a.counts + b.counts, a.lo, a.hi)
+
+
+def stream_histogram(chunks: Iterable[jax.Array], bins: int,
+                     range: Tuple[float, float]) -> Histogram:
+    """Fold chunks into one histogram (the streaming/sharded fold)."""
+    h: Optional[Histogram] = None
+    for chunk in chunks:
+        hc = histogram_fixed(jnp.asarray(chunk), bins, range[0], range[1])
+        h = hc if h is None else merge_histograms(h, hc)
+    if h is None:
+        raise ValueError("stream_histogram needs at least one chunk")
+    return h
+
+
+def quantile(h: Histogram, q) -> jax.Array:
+    """Interpolated quantile(s) from the histogram CDF.
+
+    Within the crossing bin, mass is assumed uniform (the standard
+    fixed-bin estimator): resolution is one bin width, which is the
+    accuracy contract of a sharded histogram.  ``q`` may be a scalar or an
+    array of probabilities in [0, 1].
+    """
+    qarr = jnp.atleast_1d(jnp.asarray(q, jnp.float32))
+    c = jnp.cumsum(h.counts)
+    total = c[-1]
+    t = jnp.clip(qarr, 0.0, 1.0) * total
+    idx = jnp.clip(jnp.searchsorted(c, t, side="left"), 0, h.bins - 1)
+    prev = jnp.where(idx > 0, c[jnp.maximum(idx - 1, 0)], 0.0)
+    cnt = h.counts[idx]
+    frac = jnp.clip((t - prev) / jnp.where(cnt == 0, 1.0, cnt), 0.0, 1.0)
+    out = h.lo + (idx.astype(jnp.float32) + frac) * h.bin_width
+    return out[0] if jnp.ndim(q) == 0 else out
+
+
+def median(h: Histogram) -> jax.Array:
+    return quantile(h, 0.5)
+
+
+def iqr(h: Histogram) -> jax.Array:
+    """Interquartile range q75 − q25."""
+    qs = quantile(h, jnp.asarray([0.25, 0.75]))
+    return qs[1] - qs[0]

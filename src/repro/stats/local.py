@@ -1,0 +1,160 @@
+"""Local-window statistics as operator banks (DESIGN.md §10).
+
+Windowed mean/variance/std and z-score (local contrast) normalization are
+*linear stencils over moment inputs*: the window mean of ``x`` and of
+``x²`` under one normalized footprint give every second-order local
+statistic.  Both are expressed through ``apply_stencil_bank`` with a box or
+Gaussian weight column, so they ride the existing execution machinery for
+free — the fused no-materialize kernel, the separable O(Σkᵢ) rewrite (box
+and diagonal-Gaussian windows are exactly rank-1 outer products), the
+BankPlan cache, and batching.
+
+The ``[x, x²]`` pair rides the *batch* axis of one bank dispatch: a stack
+of 2 (or 2·B) independent tensors is one kernel launch (DESIGN.md §3), so
+local variance costs one pass, not two.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.grid import normalize_tuple
+from repro.core.filters import gaussian_weights
+
+__all__ = [
+    "window_weights",
+    "local_mean",
+    "local_moments",
+    "local_std",
+    "zscore",
+    "local_contrast_normalize",
+]
+
+
+def window_weights(op_shape, kind: str = "box", sigma=None) -> jnp.ndarray:
+    """Normalized window column (numel,): uniform box or Gaussian.
+
+    Both factor into per-dim rank-1 vectors, so banks built from them pass
+    ``separable_factors`` and take the O(Σkᵢ) path past the profitability
+    crossover.  ``sigma`` (Gaussian only) follows
+    ``hilbert.as_covariance``: scalar / per-dim vector / full covariance.
+    """
+    op_shape = tuple(int(k) for k in op_shape)
+    if kind == "box":
+        numel = int(np.prod(op_shape))
+        return jnp.full((numel,), 1.0 / numel, jnp.float32)
+    if kind == "gaussian":
+        if sigma is None:
+            sigma = max(k / 4.0 for k in op_shape)
+        return gaussian_weights(op_shape, sigma)
+    raise ValueError(f"unknown window kind {kind!r}; expected box/gaussian")
+
+
+def _window_op(x, window, batched) -> Tuple[int, ...]:
+    rank = x.ndim - (1 if batched else 0)
+    return normalize_tuple(window, rank, "window")
+
+
+def local_mean(
+    x: jax.Array,
+    window,
+    *,
+    weights: str = "box",
+    sigma=None,
+    pad_value="edge",
+    method: str = "auto",
+    batched: bool = False,
+) -> jax.Array:
+    """Windowed (weighted) mean — one K=1 bank pass."""
+    from repro.core.engine import apply_stencil_bank  # local, avoids cycle
+
+    op = _window_op(x, window, batched)
+    w = window_weights(op, weights, sigma)
+    out = apply_stencil_bank(x.astype(jnp.float32), op, w[:, None],
+                             pad_value=pad_value, method=method,
+                             batched=batched)
+    return out[..., 0].astype(x.dtype)
+
+
+def local_moments(
+    x: jax.Array,
+    window,
+    *,
+    weights: str = "box",
+    sigma=None,
+    pad_value="edge",
+    method: str = "auto",
+    batched: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Windowed (mean, variance), float32, in ONE batched bank dispatch.
+
+    ``var = E_w[x²] − E_w[x]²`` under the normalized window — exact for any
+    normalized weighting, clamped at 0 against float cancellation.  ``x``
+    and ``x²`` are stacked on the batch axis so the window pass runs once.
+    """
+    from repro.core.engine import apply_stencil_bank  # local, avoids cycle
+
+    op = _window_op(x, window, batched)
+    w = window_weights(op, weights, sigma)
+    xf = x.astype(jnp.float32)
+    stacked = (jnp.concatenate([xf, xf * xf], axis=0) if batched
+               else jnp.stack([xf, xf * xf]))
+    out = apply_stencil_bank(stacked, op, w[:, None], pad_value=pad_value,
+                             method=method, batched=True)[..., 0]
+    b = x.shape[0] if batched else 1
+    mean, ex2 = (out[:b], out[b:]) if batched else (out[0], out[1])
+    var = jnp.maximum(ex2 - mean * mean, 0.0)
+    return mean, var
+
+
+def local_std(x, window, **kw) -> jax.Array:
+    """Windowed standard deviation (float32)."""
+    _, var = local_moments(x, window, **kw)
+    return jnp.sqrt(var)
+
+
+def zscore(
+    x: jax.Array,
+    window,
+    *,
+    eps: float = 1e-5,
+    weights: str = "box",
+    sigma=None,
+    pad_value="edge",
+    method: str = "auto",
+    batched: bool = False,
+) -> jax.Array:
+    """Local z-score: (x − μ_w(x)) / √(σ²_w(x) + eps), any rank.
+
+    The window statistics come from :func:`local_moments` (one bank
+    dispatch); ``eps`` regularizes flat regions.  Output keeps ``x``'s
+    dtype.
+    """
+    mean, var = local_moments(x, window, weights=weights, sigma=sigma,
+                              pad_value=pad_value, method=method,
+                              batched=batched)
+    z = (x.astype(jnp.float32) - mean) / jnp.sqrt(var + eps)
+    return z.astype(x.dtype)
+
+
+def local_contrast_normalize(
+    x: jax.Array,
+    window,
+    *,
+    sigma=None,
+    eps: float = 1e-5,
+    pad_value="edge",
+    method: str = "auto",
+    batched: bool = False,
+) -> jax.Array:
+    """Gaussian-weighted local contrast normalization (LCN).
+
+    :func:`zscore` under a Gaussian window — the classic vision frontend
+    normalization, here rank-agnostic and riding the separable bank path
+    (a diagonal-Gaussian window is a rank-1 outer product).
+    """
+    return zscore(x, window, eps=eps, weights="gaussian", sigma=sigma,
+                  pad_value=pad_value, method=method, batched=batched)

@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _env import requires_axis_type
 from repro.optim import adamw
 from repro.optim.compression import dequantize_int8, quantize_int8
 from repro.optim.schedule import warmup_cosine
@@ -65,6 +66,7 @@ def test_int8_quant_roundtrip_bound():
     assert float(err.max()) <= float(s) * 0.5 + 1e-7
 
 
+@requires_axis_type
 def test_compressed_psum_error_feedback_converges():
     """Mean of per-shard gradients via int8 EF-psum drives SGD to the same
     optimum as exact averaging (4 fake devices, shard_map)."""

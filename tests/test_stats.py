@@ -1,0 +1,568 @@
+"""Statistics engine (DESIGN.md §10) — acceptance + merge-algebra property
+tests.
+
+Oracle: one-shot float64 numpy.  The acceptance matrix: stats fused path ≡
+materialize path ≡ numpy oracle for ranks 1–4, batched and unbatched, and
+``melt_call_count`` proves the tile-reduction kernel never materializes
+``M``.  The merge algebra (associativity, chunking/permutation invariance,
+float32 stability at N≈1e6) runs under the ``tests/_prop.py`` shim — real
+hypothesis when installed, seeded examples otherwise.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _prop import given, settings, strategies as st
+from conftest import run_with_devices
+
+from repro.core import (
+    apply_stencil,
+    clear_plan_cache,
+    gaussian_filter,
+    melt_call_count,
+    plan_cache_stats,
+)
+from repro.core.plan import get_stats_plan, normalize_axes
+from repro.stats import (
+    MomentState,
+    channel_cov,
+    correlation,
+    covariance,
+    histogram,
+    histogram_fixed,
+    iqr,
+    local_contrast_normalize,
+    local_mean,
+    local_moments,
+    median,
+    merge_histograms,
+    merge_moments,
+    moments,
+    pca,
+    quantile,
+    standardize,
+    stream_channel_cov,
+    stream_moments,
+    zscore,
+)
+
+METHODS = ("materialize", "lax", "fused")
+BATCH = 3
+
+
+def np_oracle(x, axis=None):
+    """One-shot float64 reference: (n, mean, var, skew, excess kurtosis)."""
+    x = np.asarray(x, np.float64)
+    if axis is None:
+        x = x.ravel()
+        axis = 0
+    n = x.shape[axis] if isinstance(axis, int) else \
+        int(np.prod([x.shape[a] for a in axis]))
+    mean = x.mean(axis=axis)
+    c = x - np.expand_dims(mean, axis) if isinstance(axis, int) else \
+        x - np.mean(x, axis=axis, keepdims=True)
+    m2 = (c**2).sum(axis=axis)
+    m3 = (c**3).sum(axis=axis)
+    m4 = (c**4).sum(axis=axis)
+    return (n, mean, m2 / n, np.sqrt(n) * m3 / m2**1.5,
+            n * m4 / m2**2 - 3.0)
+
+
+def assert_state_close(state, want, rtol=1e-4, atol=1e-5):
+    n, mean, var, skew, kurt = want
+    np.testing.assert_allclose(np.asarray(state.count), n, rtol=0)
+    np.testing.assert_allclose(np.asarray(state.mean), mean,
+                               rtol=rtol, atol=atol)
+    np.testing.assert_allclose(np.asarray(state.variance), var,
+                               rtol=rtol, atol=atol)
+    np.testing.assert_allclose(np.asarray(state.skewness), skew,
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(state.kurtosis), kurt,
+                               rtol=1e-3, atol=1e-3)
+
+
+# -- cross-path oracle (acceptance) -----------------------------------------
+
+
+SHAPES = [(37,), (11, 9), (7, 6, 5), (4, 4, 3, 3)]
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=lambda s: f"r{len(s)}")
+def test_moments_cross_path_global(shape):
+    """fused ≡ materialize ≡ lax ≡ numpy, global reduction, ranks 1–4."""
+    rng = np.random.RandomState(len(shape))
+    x = jnp.asarray((rng.randn(*shape) * 2.5 + 7).astype(np.float32))
+    want = np_oracle(x)
+    for method in METHODS:
+        assert_state_close(moments(x, method=method), want)
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=lambda s: f"r{len(s)}")
+def test_moments_cross_path_batched(shape):
+    """batched=True ≡ per-item loop on every path, ranks 1–4."""
+    rng = np.random.RandomState(10 + len(shape))
+    xb = jnp.asarray(rng.randn(BATCH, *shape).astype(np.float32))
+    for method in METHODS:
+        stb = moments(xb, batched=True, method=method)
+        assert stb.mean.shape == (BATCH,)
+        for i in range(BATCH):
+            assert_state_close(
+                jax.tree.map(lambda l: l[i], stb), np_oracle(xb[i]))
+
+
+def test_moments_order2_variance_fast_path():
+    """order=2 (the gated streaming-variance path): exact count/mean/var
+    on every path, M3/M4 pinned to zero, own plan-cache key."""
+    rng = np.random.RandomState(42)
+    x = jnp.asarray((rng.randn(8, 40, 30) * 2 + 9).astype(np.float32))
+    want = np.var(np.asarray(x, np.float64))
+    for method in METHODS:
+        st = moments(x, method=method, order=2)
+        np.testing.assert_allclose(float(st.variance), want, rtol=1e-5)
+        assert float(st.m3) == 0.0 and float(st.m4) == 0.0
+    stb = moments(x, batched=True, order=2)
+    np.testing.assert_allclose(
+        np.asarray(stb.variance),
+        np.var(np.asarray(x, np.float64), axis=(1, 2)), rtol=1e-5)
+    clear_plan_cache()
+    moments(x, order=2)
+    moments(x, order=4)
+    assert plan_cache_stats()["size"] == 2  # order is part of the key
+    with pytest.raises(ValueError):
+        moments(x, order=3)
+
+
+def test_order2_zeros_survive_merging():
+    """Regression: Chan cross-terms must not repopulate M3/M4 of order-2
+    states through stream/merge — the static ``order`` metadata pins them
+    (skew/kurt of an order-2 state read 0/−3, never silent junk)."""
+    rng = np.random.RandomState(43)
+    a = jnp.asarray((rng.randn(1000) + 5).astype(np.float32))
+    b = jnp.asarray((rng.randn(1000) - 5).astype(np.float32))
+    st = stream_moments([a, b], order=2)
+    assert st.order == 2
+    assert float(st.m3) == 0.0 and float(st.m4) == 0.0
+    assert float(st.skewness) == 0.0
+    merged = merge_moments(moments(a, order=2), moments(b, order=4))
+    assert merged.order == 2  # mixed-order merges keep the weaker order
+    assert float(merged.m4) == 0.0
+    # variance is still exact through the merge
+    np.testing.assert_allclose(
+        float(st.variance),
+        float(np.var(np.concatenate([np.asarray(a), np.asarray(b)]))),
+        rtol=1e-5)
+
+
+def test_moments_per_axis_keeps_channels():
+    rng = np.random.RandomState(2)
+    x = jnp.asarray(rng.randn(6, 5, 4).astype(np.float32))
+    want_var = np.var(np.asarray(x, np.float64), axis=(0, 1))
+    for method in METHODS:
+        state = moments(x, axis=(0, 1), method=method)
+        assert state.variance.shape == (4,)
+        np.testing.assert_allclose(np.asarray(state.variance), want_var,
+                                   rtol=1e-4, atol=1e-5)
+    # negative axes normalize like numpy
+    s2 = moments(x, axis=(-3, -2), method="lax")
+    np.testing.assert_allclose(np.asarray(s2.variance), want_var,
+                               rtol=1e-5)
+
+
+def test_fused_moments_never_materialize():
+    """Acceptance: the tile-reduction kernel must not call melt, even
+    while tracing — the materialize oracle must."""
+    clear_plan_cache()
+    rng = np.random.RandomState(3)
+    x = jnp.asarray(rng.randn(23, 17).astype(np.float32))
+    before = melt_call_count()
+    jax.block_until_ready(moments(x, method="fused").mean)
+    assert melt_call_count() == before  # fresh shape → fresh trace, 0 melts
+    jax.block_until_ready(moments(x, axis=(0,), method="fused").mean)
+    assert melt_call_count() == before
+    jax.block_until_ready(moments(x, method="materialize").mean)
+    assert melt_call_count() > before
+
+
+def test_moments_traced_inputs_execute_inline():
+    clear_plan_cache()
+    x = jnp.asarray(np.random.RandomState(4).randn(40), jnp.float32)
+
+    @jax.jit
+    def f(x):
+        return moments(x, method="lax").variance
+
+    np.testing.assert_allclose(float(f(x)), float(np.var(np.asarray(x))),
+                               rtol=1e-5)
+    assert plan_cache_stats()["size"] == 0  # tracer never interned
+
+
+# -- merge algebra (property tests) -----------------------------------------
+
+
+def _state_of(seed, n, offset=0.0):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray((rng.randn(n) + offset).astype(np.float32))
+    return moments(x, method="lax"), np.asarray(x, np.float64)
+
+
+@settings(max_examples=20, deadline=None)
+@given(na=st.integers(1, 400), nb=st.integers(1, 400),
+       nc=st.integers(1, 400), seed=st.integers(0, 99),
+       offset=st.floats(-20.0, 20.0))
+def test_merge_associative(na, nb, nc, seed, offset):
+    """(a ⊕ b) ⊕ c ≈ a ⊕ (b ⊕ c) — the tree-merge correctness core."""
+    a, xa = _state_of(seed, na, offset)
+    b, xb = _state_of(seed + 100, nb, offset)
+    c, xc = _state_of(seed + 200, nc, offset)
+    left = merge_moments(merge_moments(a, b), c)
+    right = merge_moments(a, merge_moments(b, c))
+    for la, lb in zip(jax.tree.leaves(left), jax.tree.leaves(right)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   rtol=1e-4, atol=1e-3)
+    # and both equal the one-shot oracle over the concatenation
+    assert_state_close(left, np_oracle(np.concatenate([xa, xb, xc])),
+                       rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(10, 2000), k=st.integers(1, 6), seed=st.integers(0, 99))
+def test_merge_chunking_invariant(n, k, seed):
+    """Any chunking of the data folds to the one-shot oracle state."""
+    rng = np.random.RandomState(seed)
+    x = (rng.randn(n) * 3 + rng.uniform(-50, 50)).astype(np.float32)
+    cuts = sorted(rng.randint(0, n + 1, size=k))
+    bounds = [0] + list(cuts) + [n]
+    chunks = [jnp.asarray(x[lo:hi]) for lo, hi in zip(bounds, bounds[1:])
+              if hi > lo]
+    state = stream_moments(chunks, method="lax")
+    assert_state_close(state, np_oracle(x), rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(16, 1024), seed=st.integers(0, 99))
+def test_merge_permutation_invariant(n, seed):
+    """Shuffling the data (≡ shuffling the merge order) fixes the state."""
+    rng = np.random.RandomState(seed)
+    x = (rng.randn(n) * 2 + 5).astype(np.float32)
+    perm = rng.permutation(n)
+    a = moments(jnp.asarray(x), method="lax")
+    b = moments(jnp.asarray(x[perm]), method="lax")
+    np.testing.assert_allclose(float(a.variance), float(b.variance),
+                               rtol=1e-4)
+    np.testing.assert_allclose(float(a.skewness), float(b.skewness),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(float(a.kurtosis), float(b.kurtosis),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_merge_zero_state_is_identity():
+    x = jnp.asarray(np.random.RandomState(5).randn(50), jnp.float32)
+    s = moments(x, method="lax")
+    z = MomentState.zero()
+    for merged in (merge_moments(s, z), merge_moments(z, s)):
+        for la, lb in zip(jax.tree.leaves(merged), jax.tree.leaves(s)):
+            np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                       rtol=1e-6)
+
+
+@pytest.mark.parametrize("method", ("lax", "fused"))
+def test_float32_stability_at_1e6(method):
+    """f32 streaming moments at N≈1e6 with |mean| ≫ std — the per-tile
+    centered sums + Chan tree must hold ~1e-5 relative variance error
+    (raw f32 power sums would lose every digit here)."""
+    N = 1_000_003
+    rng = np.random.RandomState(6)
+    x = jnp.asarray((rng.randn(N) * 3 + 100).astype(np.float32))
+    n, mean, var, skew, kurt = np_oracle(x)
+    state = moments(x, method=method)
+    assert float(state.count) == N
+    np.testing.assert_allclose(float(state.mean), mean, rtol=1e-6)
+    np.testing.assert_allclose(float(state.variance), var, rtol=1e-4)
+    np.testing.assert_allclose(float(state.kurtosis), kurt, atol=1e-3)
+    # streamed in chunks ≡ one pass at the same scale
+    chunked = stream_moments(
+        [x[:300_000], x[300_000:700_001], x[700_001:]], method=method)
+    np.testing.assert_allclose(float(chunked.variance),
+                               float(state.variance), rtol=1e-5)
+
+
+# -- StatsPlan interning -----------------------------------------------------
+
+
+@pytest.fixture
+def fresh_cache():
+    clear_plan_cache()
+    yield
+    clear_plan_cache()
+
+
+def test_stats_plans_intern_and_hit(fresh_cache):
+    x = jnp.asarray(np.random.RandomState(7).randn(30, 20), jnp.float32)
+    for _ in range(3):
+        moments(x, method="lax")
+    stats = plan_cache_stats()
+    assert stats["size"] == 1
+    assert stats["misses"] == 1 and stats["hits"] == 2
+    plan = get_stats_plan((30, 20), jnp.float32, None, "lax")
+    assert plan.stats()["calls"] == 3
+    assert plan.stats()["traces"] == 1
+    # different axes / spellings of the same reduction
+    p2 = get_stats_plan((30, 20), jnp.float32, (0,), "lax")
+    assert p2 is not plan
+    p3 = get_stats_plan((3, 30, 20), jnp.float32, None, "lax", batched=True)
+    p4 = get_stats_plan((3, 30, 20), jnp.float32, (1, 2), "lax")
+    assert p3 is p4  # batched=True ≡ axis=(1, 2) on rank 3
+
+
+def test_normalize_axes_validation():
+    assert normalize_axes(3, None) == (0, 1, 2)
+    assert normalize_axes(3, None, batched=True) == (1, 2)
+    assert normalize_axes(3, -1) == (2,)
+    with pytest.raises(ValueError):
+        normalize_axes(3, (0, 0))
+    with pytest.raises(ValueError):
+        normalize_axes(3, 5)
+    with pytest.raises(ValueError):
+        normalize_axes(2, (0, 1), batched=True)
+
+
+# -- local-window statistics -------------------------------------------------
+
+
+def test_local_mean_is_box_stencil():
+    rng = np.random.RandomState(8)
+    x = jnp.asarray(rng.randn(19, 17).astype(np.float32))
+    w = jnp.full((25,), 1 / 25, jnp.float32)
+    want = np.asarray(apply_stencil(x, 5, w, method="materialize",
+                                    pad_value="edge"))
+    for method in METHODS:
+        got = local_mean(x, 5, method=method)
+        np.testing.assert_allclose(np.asarray(got), want,
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_local_mean_gaussian_matches_gaussian_filter():
+    rng = np.random.RandomState(9)
+    x = jnp.asarray(rng.randn(16, 15).astype(np.float32))
+    want = np.asarray(gaussian_filter(x, 5, 1.5, method="materialize",
+                                      pad_value="edge"))
+    got = local_mean(x, 5, weights="gaussian", sigma=1.5,
+                     method="materialize")
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-6)
+
+
+def test_local_moments_interior_oracle():
+    """Window mean/var at interior points equal the patch statistics."""
+    rng = np.random.RandomState(10)
+    x = jnp.asarray(rng.randn(12, 11).astype(np.float32))
+    mean, var = local_moments(x, 3, method="materialize")
+    xi = np.asarray(x, np.float64)
+    for (i, j) in [(3, 4), (5, 5), (8, 7)]:
+        patch = xi[i - 1:i + 2, j - 1:j + 2]
+        np.testing.assert_allclose(float(mean[i, j]), patch.mean(),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(float(var[i, j]), patch.var(),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_zscore_batched_equals_per_item():
+    rng = np.random.RandomState(11)
+    xb = jnp.asarray(rng.randn(BATCH, 14, 13).astype(np.float32))
+    zb = zscore(xb, 5, batched=True)
+    assert zb.shape == xb.shape
+    for i in range(BATCH):
+        np.testing.assert_allclose(np.asarray(zb[i]),
+                                   np.asarray(zscore(xb[i], 5)),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_zscore_normalizes_locally():
+    """On smoothly-varying data the z-score kills the local mean."""
+    ii, jj = np.meshgrid(np.arange(32.0), np.arange(30.0), indexing="ij")
+    base = 100 + 5 * ii + 3 * jj
+    rng = np.random.RandomState(12)
+    x = jnp.asarray((base + rng.randn(32, 30)).astype(np.float32))
+    z = np.asarray(zscore(x, 7))
+    interior = z[5:-5, 5:-5]
+    assert abs(interior.mean()) < 0.2
+    assert np.isfinite(z).all()
+    lcn = local_contrast_normalize(x, 7, sigma=1.5)
+    assert np.isfinite(np.asarray(lcn)).all()
+
+
+def test_local_paths_agree_rank3():
+    rng = np.random.RandomState(13)
+    x = jnp.asarray(rng.randn(9, 8, 7).astype(np.float32))
+    ref_mean, ref_var = local_moments(x, 3, method="materialize")
+    for method in ("lax", "fused"):
+        m, v = local_moments(x, 3, method=method)
+        np.testing.assert_allclose(np.asarray(m), np.asarray(ref_mean),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(v), np.asarray(ref_var),
+                                   rtol=1e-3, atol=1e-4)
+
+
+# -- histograms / quantiles --------------------------------------------------
+
+
+def test_histogram_counts_match_numpy():
+    rng = np.random.RandomState(14)
+    x = rng.randn(5000).astype(np.float32)
+    h = histogram(jnp.asarray(x), bins=32, range=(-4.0, 4.0))
+    want, _ = np.histogram(np.clip(x, -4.0, np.nextafter(4.0, 0)),
+                           bins=32, range=(-4.0, 4.0))
+    np.testing.assert_array_equal(np.asarray(h.counts), want)
+    assert float(h.total) == 5000
+
+
+def test_histogram_merge_equals_concat():
+    rng = np.random.RandomState(15)
+    a, b = rng.randn(700).astype(np.float32), rng.randn(300).astype(np.float32)
+    ha = histogram_fixed(jnp.asarray(a), 24, -4.0, 4.0)
+    hb = histogram_fixed(jnp.asarray(b), 24, -4.0, 4.0)
+    hc = histogram_fixed(jnp.asarray(np.concatenate([a, b])), 24, -4.0, 4.0)
+    np.testing.assert_array_equal(np.asarray(merge_histograms(ha, hb).counts),
+                                  np.asarray(hc.counts))
+    with pytest.raises(ValueError):
+        merge_histograms(ha, histogram_fixed(jnp.asarray(b), 24, -3.0, 4.0))
+
+
+def test_quantiles_interpolated():
+    rng = np.random.RandomState(16)
+    x = rng.uniform(0.0, 10.0, size=20000).astype(np.float32)
+    h = histogram(jnp.asarray(x), bins=128, range=(0.0, 10.0))
+    binw = 10.0 / 128
+    for q in (0.1, 0.25, 0.5, 0.75, 0.9):
+        want = np.quantile(x, q)
+        got = float(quantile(h, q))
+        assert abs(got - want) < 2 * binw, (q, got, want)
+    np.testing.assert_allclose(float(median(h)), np.quantile(x, 0.5),
+                               atol=2 * binw)
+    np.testing.assert_allclose(
+        float(iqr(h)), np.quantile(x, 0.75) - np.quantile(x, 0.25),
+        atol=4 * binw)
+
+
+def test_histogram_range_edge_cases():
+    h = histogram(jnp.asarray([3.0, 3.0, 3.0]), bins=8)  # constant data
+    assert float(h.total) == 3
+    with pytest.raises(ValueError):
+        histogram_fixed(jnp.zeros(4), 8, 1.0, 1.0)  # degenerate grid
+
+    @jax.jit
+    def f(x):
+        return histogram(x, bins=8)  # range=None needs concrete data
+
+    with pytest.raises(ValueError):
+        f(jnp.zeros(4))
+
+
+# -- channel covariance / PCA ------------------------------------------------
+
+
+def _correlated_samples(rng, n=2000):
+    X = rng.randn(n, 4).astype(np.float32) @ np.diag([1.0, 2.0, 3.0, 0.5])
+    X[:, 1] += 0.8 * X[:, 0]
+    return X.astype(np.float32)
+
+
+def test_channel_cov_matches_numpy_and_streams():
+    rng = np.random.RandomState(17)
+    X = _correlated_samples(rng)
+    want = np.cov(X.T, bias=True)
+    st_one = channel_cov(jnp.asarray(X))
+    np.testing.assert_allclose(np.asarray(covariance(st_one)), want,
+                               rtol=1e-3, atol=1e-4)
+    st_stream = stream_channel_cov(
+        [jnp.asarray(X[:123]), jnp.asarray(X[123:1500]),
+         jnp.asarray(X[1500:])])
+    np.testing.assert_allclose(np.asarray(covariance(st_stream)), want,
+                               rtol=1e-3, atol=1e-4)
+    corr = np.asarray(correlation(st_one))
+    np.testing.assert_allclose(np.diag(corr), np.ones(4), atol=1e-5)
+    assert np.all(np.abs(corr) <= 1.0 + 1e-5)
+
+
+def test_standardize_whitens_channels():
+    rng = np.random.RandomState(18)
+    X = jnp.asarray(_correlated_samples(rng))
+    xs = np.asarray(standardize(X))
+    np.testing.assert_allclose(xs.mean(axis=0), 0.0, atol=1e-4)
+    np.testing.assert_allclose(xs.std(axis=0), 1.0, atol=1e-2)
+    # channel_axis in the middle of a volume
+    V = jnp.asarray(rng.randn(6, 3, 5).astype(np.float32) * 4 + 2)
+    vs = np.asarray(standardize(V, channel_axis=1))
+    np.testing.assert_allclose(vs.mean(axis=(0, 2)), 0.0, atol=1e-4)
+
+
+def test_pca_recovers_eigenpairs():
+    rng = np.random.RandomState(19)
+    X = _correlated_samples(rng, n=4000)
+    state = channel_cov(jnp.asarray(X))
+    evals, comps = pca(state, k=3, iters=100)
+    w_np, v_np = np.linalg.eigh(np.asarray(covariance(state)))
+    w_np, v_np = w_np[::-1], v_np[:, ::-1]
+    np.testing.assert_allclose(np.asarray(evals), w_np[:3], rtol=1e-3)
+    for i in range(3):
+        cos = abs(float(np.dot(np.asarray(comps)[:, i], v_np[:, i])))
+        assert cos > 0.99, (i, cos)
+    with pytest.raises(ValueError):
+        pca(state, k=9)
+
+
+# -- distributed merge tree --------------------------------------------------
+
+
+def test_distributed_moments_and_histogram_match_single():
+    """Batch × slab tree merge ≡ single-device state (4 fake devices).
+
+    Built on Mesh/shard_map only — runs on every supported jax, unlike the
+    AxisType-gated distributed suite."""
+    out = run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.core.distributed import sharded_moments_fn, sharded_histogram_fn
+from repro.stats import histogram, moments, quantile
+
+rng = np.random.RandomState(0)
+x = jnp.asarray(rng.randn(16, 9, 5).astype(np.float32) * 2 + 3)
+mesh = Mesh(np.array(jax.devices()).reshape(4), ("data",))
+st = jax.jit(sharded_moments_fn(mesh, "data", x.shape, method="lax"))(x)
+ref = moments(x, method="lax")
+np.testing.assert_allclose(float(st.variance), float(ref.variance), rtol=1e-5)
+np.testing.assert_allclose(float(st.kurtosis), float(ref.kurtosis), rtol=1e-4)
+
+# kept channel axis + batch x slab mesh
+st2 = jax.jit(sharded_moments_fn(mesh, "data", x.shape, axis=(0, 1),
+                                 method="lax"))(x)
+ref2 = moments(x, axis=(0, 1), method="lax")
+np.testing.assert_allclose(np.asarray(st2.variance),
+                           np.asarray(ref2.variance), rtol=1e-5)
+mesh2 = Mesh(np.array(jax.devices()).reshape(2, 2), ("batch", "slab"))
+xb = jnp.asarray(rng.randn(4, 8, 6).astype(np.float32))
+st3 = jax.jit(sharded_moments_fn(mesh2, "slab", xb.shape,
+                                 batch_axis_name="batch", method="lax"))(xb)
+ref3 = moments(xb, method="lax")
+np.testing.assert_allclose(float(st3.variance), float(ref3.variance),
+                           rtol=1e-5)
+
+h = jax.jit(sharded_histogram_fn(mesh, "data", x.shape, 32,
+                                 (-5.0, 11.0)))(x)
+href = histogram(x, 32, range=(-5.0, 11.0))
+np.testing.assert_allclose(np.asarray(h.counts), np.asarray(href.counts))
+print("dist-stats OK")
+""", 4)
+    assert "dist-stats OK" in out
+
+
+def test_sharded_moments_validation():
+    from jax.sharding import Mesh
+    from repro.core.distributed import sharded_moments_fn
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    with pytest.raises(ValueError):  # the sharded dim must be reduced
+        sharded_moments_fn(mesh, "data", (8, 4), axis=(1,))
+    with pytest.raises(ValueError):  # batch dim (0) must also be reduced
+        sharded_moments_fn(mesh, "data", (8, 4, 3), axis=(1, 2),
+                           batch_axis_name="data")
