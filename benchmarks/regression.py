@@ -1,0 +1,128 @@
+"""Bench-regression gate: diff fresh BENCH_*.json against baselines.
+
+CI produces fresh ``BENCH_<section>.json`` files (``benchmarks.run
+--quick --json-dir``) and this script diffs them against the committed
+baselines in ``benchmarks/baselines/`` (generated the same way).  For
+every **gated** row — the headline speedup rows of the bank / stats /
+pipe benchmarks — it compares the *speedup factor* parsed from the
+``derived`` string rather than raw wall-clock: speedups are ratios of two
+measurements on the same machine, so they transfer across runner
+generations where absolute µs never would.
+
+Failure conditions (exit 1):
+
+- a gated row's speedup dropped more than ``--tolerance`` (default 25%)
+  below its baseline;
+- a gated baseline row has no fresh counterpart (row names embed shapes —
+  silently changing a benchmark shape must force a baseline refresh, not
+  skip the gate).
+
+Absolute µs drift is printed for context but never gates.
+
+    PYTHONPATH=src python -m benchmarks.regression \
+        [--baseline-dir benchmarks/baselines] [--fresh-dir .] \
+        [--tolerance 0.25]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+#: row-name prefixes whose speedup factors are gated
+GATED_PREFIXES = (
+    "bank/fused",          # fused operator bank vs K sequential calls
+    "stats/var-streaming",  # streaming variance vs per-item two-pass loop
+    "pipe/fused-chain",    # fused pipeline vs eager 3-call chain
+)
+
+_SPEEDUP = re.compile(r"speedup=([0-9.]+)x")
+
+
+def _load_rows(path):
+    with open(path) as fh:
+        payload = json.load(fh)
+    return {r["name"]: r for r in payload.get("rows", [])}
+
+
+def _gated(name: str) -> bool:
+    return any(name.startswith(p) for p in GATED_PREFIXES)
+
+
+def _speedup(row) -> float | None:
+    m = _SPEEDUP.search(row.get("derived", ""))
+    return float(m.group(1)) if m else None
+
+
+def compare(baseline_dir: str, fresh_dir: str, tolerance: float):
+    """Returns (failures, report_lines)."""
+    failures, report = [], []
+    for bpath in sorted(glob.glob(os.path.join(baseline_dir,
+                                               "BENCH_*.json"))):
+        fname = os.path.basename(bpath)
+        fpath = os.path.join(fresh_dir, fname)
+        if not os.path.exists(fpath):
+            report.append(f"SKIP {fname}: no fresh results (section not run)")
+            continue
+        base = _load_rows(bpath)
+        fresh = _load_rows(fpath)
+        for name, brow in sorted(base.items()):
+            if not _gated(name):
+                continue
+            b_sp = _speedup(brow)
+            if b_sp is None:
+                report.append(f"SKIP {name}: baseline has no speedup")
+                continue
+            frow = fresh.get(name)
+            if frow is None:
+                failures.append(
+                    f"{name}: gated baseline row missing from fresh "
+                    f"{fname} — a benchmark shape/name change must refresh "
+                    f"benchmarks/baselines/")
+                continue
+            f_sp = _speedup(frow)
+            if f_sp is None:
+                failures.append(f"{name}: fresh row lost its speedup field")
+                continue
+            floor = b_sp * (1.0 - tolerance)
+            verdict = "FAIL" if f_sp < floor else "ok"
+            du = (float(frow["us_per_call"]) /
+                  max(float(brow["us_per_call"]), 1e-9))
+            report.append(
+                f"{verdict:4s} {name}: speedup {b_sp:.2f}x -> {f_sp:.2f}x "
+                f"(floor {floor:.2f}x); us x{du:.2f}")
+            if f_sp < floor:
+                failures.append(
+                    f"{name}: speedup regressed {b_sp:.2f}x -> {f_sp:.2f}x "
+                    f"(> {tolerance:.0%} drop)")
+    return failures, report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", default="benchmarks/baselines")
+    ap.add_argument("--fresh-dir", default=".")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional speedup drop (default 0.25)")
+    args = ap.parse_args(argv)
+
+    failures, report = compare(args.baseline_dir, args.fresh_dir,
+                               args.tolerance)
+    for line in report:
+        print(line)
+    if not report:
+        print(f"WARN: no baselines found under {args.baseline_dir}")
+    if failures:
+        print("\nbench regression FAILURES:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("\nbench regression: all gated rows within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

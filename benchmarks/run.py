@@ -13,6 +13,8 @@ Sections:
   stencil/*   — engine path comparison (materialize / lax / pallas-interp)
   filters/*   — bilateral (Eq.3) and curvature (Eq.6-7) end-to-end
   bank/*      — operator-bank fused execution (DESIGN.md §9)
+  stats/*     — streaming statistics engine (DESIGN.md §10)
+  pipe/*      — lazy pipeline fusion (DESIGN.md §11)
   model/*     — smoke-config step latencies per architecture family
   serve/*     — prefill + decode latency (smoke config)
 """
@@ -155,6 +157,19 @@ def bench_stats(quick=False):
     return rows
 
 
+def bench_pipe(quick=False):
+    """Pipeline-fusion rows: the shared ``headline_rows`` from
+    benchmarks.pipe (same shapes, interleaved timing — the smoke numbers
+    can't drift from the gated benchmark)."""
+    from benchmarks.pipe import FULL_SHAPE, QUICK_SHAPE, headline_rows
+
+    rng = np.random.RandomState(0)
+    shape = QUICK_SHAPE if quick else FULL_SHAPE
+    x = jnp.asarray(rng.randn(*shape).astype(np.float32))
+    rows, _ = headline_rows(x, reps=3 if quick else 7)
+    return rows
+
+
 def _git_rev() -> str:
     try:
         return subprocess.check_output(
@@ -193,7 +208,8 @@ def main(argv=None):
                          "run (the CI artifact layout)")
     ap.add_argument("--sections", default=None,
                     help="comma-separated subset of "
-                         "fig6,fig7,stencil,filters,bank,stats,model,serve")
+                         "fig6,fig7,stencil,filters,bank,stats,pipe,"
+                         "model,serve")
     args = ap.parse_args(argv)
 
     from benchmarks import paper_figs
@@ -208,6 +224,7 @@ def main(argv=None):
         "filters": lambda: bench_filters(args.quick),
         "bank": lambda: bench_bank(args.quick),
         "stats": lambda: bench_stats(args.quick),
+        "pipe": lambda: bench_pipe(args.quick),
         "model": lambda: bench_models(args.quick),
         "serve": lambda: bench_serving(args.quick),
     }

@@ -1,0 +1,87 @@
+"""One pipe graph, three execution paths, and the fusion win in numbers.
+
+Builds the headline pipeline ``gaussian → gradient → variance`` over a
+synthetic 3-D volume and runs the SAME graph on every path:
+
+- ``materialize`` — the paper-faithful oracle (the melt matrix really
+  exists), where the melt-call counter makes the fusion win *visible*:
+  the lazy pipeline pays 2 melt passes where the eager 3-call chain pays
+  3 — and only 1 pass under 'valid' padding, where the planner composes
+  the gaussian and gradient weights into one separable bank.
+- ``lax`` / ``fused`` — the production paths (0 melt calls by
+  construction; the win is one compiled executor and no intermediate
+  derivative field).
+
+    PYTHONPATH=src python -m examples.pipeline_demo
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import clear_plan_cache, melt_call_count
+from repro.pipe import pipe
+
+
+def synthetic_volume(shape=(32, 48, 48), seed=0):
+    """A smooth blob field plus noise — something with real gradients."""
+    rng = np.random.RandomState(seed)
+    zz, yy, xx = np.meshgrid(*[np.linspace(-1, 1, s) for s in shape],
+                             indexing="ij")
+    blobs = (np.exp(-8 * ((xx - 0.3) ** 2 + yy ** 2 + zz ** 2))
+             + 0.7 * np.exp(-12 * ((xx + 0.4) ** 2 + (yy - 0.2) ** 2
+                                   + (zz + 0.1) ** 2)))
+    return jnp.asarray((blobs + 0.05 * rng.randn(*shape))
+                       .astype(np.float32))
+
+
+def run_and_count(P, method, pad_value="edge"):
+    clear_plan_cache()  # fresh plans so tracing (and its melts) happen now
+    before = melt_call_count()
+    st = P.run(method=method, pad_value=pad_value)
+    jax.block_until_ready(st.mean)
+    return st, melt_call_count() - before
+
+
+def main():
+    x = synthetic_volume()
+    print(f"volume {tuple(x.shape)}, pipeline: "
+          f"gaussian(1.5) -> gradient -> moments(order=2)\n")
+
+    P = pipe(x).gaussian(1.5, op_shape=5).gradient().moments(order=2)
+    print("planned ('same' padding):", P.plan(pad_value='edge').describe())
+    Pv = (pipe(x).gaussian(1.5, op_shape=5, padding="valid")
+          .gradient(padding="valid").moments(order=2))
+    print("planned ('valid' padding):", Pv.plan().describe())
+    print()
+
+    header = f"{'path':<12} {'melt passes':>11}   per-channel grad variance"
+    print(header)
+    print("-" * len(header))
+    for method in ("materialize", "lax", "fused"):
+        st, melts = run_and_count(P, method)
+        var = ", ".join(f"{v:.6f}" for v in np.asarray(st.variance))
+        print(f"{method:<12} {melts:>11d}   [{var}]")
+    print()
+
+    # the eager 3-call chain for comparison (materialize path)
+    from repro.core import gaussian_filter, gradient
+    from repro.stats import moments
+
+    clear_plan_cache()
+    before = melt_call_count()
+    y = gaussian_filter(x, 5, 1.5, method="materialize", pad_value="edge")
+    D = gradient(y, method="materialize", pad_value="edge")
+    st = moments(D, axis=(0, 1, 2), method="materialize", order=2)
+    jax.block_until_ready(st.mean)
+    print(f"eager 3-call chain (materialize): "
+          f"{melt_call_count() - before} melt passes — the lazy graph "
+          f"saved one full traversal,")
+
+    _, melts_v = run_and_count(Pv, "materialize", pad_value=0.0)
+    print(f"and the 'valid' composed plan runs the whole chain as ONE "
+          f"fused pass ({melts_v} cheap 1-D melts on the oracle path).")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,8 @@ from repro.core.engine import (
 )
 from repro.core.plan import (
     BankPlan,
+    ExecOptions,
+    PipePlan,
     StencilPlan,
     clear_plan_cache,
     get_bank_plan,
@@ -53,8 +55,10 @@ __all__ = [
     "make_quasi_grid",
     "neighborhood_offsets",
     "normalize_pad_value",
+    "ExecOptions",
     "StencilPlan",
     "BankPlan",
+    "PipePlan",
     "get_plan",
     "get_bank_plan",
     "plan_cache_stats",

@@ -38,6 +38,7 @@ __all__ = [
     "halo_exchange",
     "distributed_stencil",
     "sharded_stencil_fn",
+    "sharded_pipe_fn",
     "tree_merge_moments",
     "sharded_moments_fn",
     "sharded_histogram_fn",
@@ -172,6 +173,145 @@ def sharded_stencil_fn(
         spec = P(axis_name, *([None] * (rank - 1)))
     return shard_map(
         local_fn, mesh=mesh, in_specs=(spec,), out_specs=spec,
+        check_rep=False,
+    )
+
+
+# -- distributed pipelines (DESIGN.md §11) ----------------------------------
+
+
+def sharded_pipe_fn(
+    mesh: Mesh,
+    axis_name: str,
+    graph,
+    *,
+    method: str = "auto",
+    pad_value="edge",
+    batch_axis_name: Optional[str] = None,
+):
+    """Build a jit-able distributed executor for a pipe graph.
+
+    ``graph`` is an un-run :class:`repro.pipe.Pipe` — build it on a
+    ``jax.ShapeDtypeStruct`` template (or any array of the global shape).
+    The input is sharded ``P(axis_name, ...)`` on the leading *spatial*
+    dim (``P(batch_axis_name, axis_name, ...)`` with a batch axis — the
+    batch is embarrassingly parallel), and the fused step program runs
+    shard-locally with exactly **one halo exchange per fused group**:
+    pointwise stages and the terminal reduction ride their group's
+    exchange for free.  A terminal ``moments`` tree-merges across the
+    slab axis (per batch item — per-item states stay batch-sharded); a
+    terminal ``hist`` psums its counts.
+
+    Restrictions (actionable errors): linear groups must be stride-1
+    'same' — slab boundaries must align with grid slices — which also
+    means weight-COMPOSED groups (a 'valid'-padding construct) are not
+    routeable here: 'valid' slabs are ragged across shards (edge shards
+    shrink, interior ones don't), so under shard_map each 'same' group is
+    one linear op and composition happens on-device only.  ``zscore`` /
+    ``cov`` stages are not yet routed either.
+    """
+    from repro.pipe.compile import _apply_reduce
+    from repro.pipe.fuse import (
+        LinearStep, PointwiseStep, ReduceStep, ZscoreStep, build_program,
+    )
+    from repro.core.plan import ExecOptions
+    from repro.core import engine
+
+    batched = batch_axis_name is not None
+    if bool(graph.batched) != batched:
+        raise ValueError(
+            f"pipe graph batched={graph.batched} but batch_axis_name="
+            f"{batch_axis_name!r}; build the graph with pipe.batched(...) "
+            f"iff a batch mesh axis is given")
+    opts = ExecOptions.make(method, pad_value, batched)
+    program = build_program(graph, opts)
+    rank = graph.rank
+    sdim = 1 if batched else 0  # sharded spatial dim in the local block
+    for s in program.steps:
+        if isinstance(s, LinearStep):
+            if s.grid.padding != "same" or s.grid.stride != (1,) * rank:
+                raise ValueError(
+                    "sharded pipelines need stride-1 'same' linear groups "
+                    "(slab boundaries must align with grid slices); got "
+                    f"padding={s.grid.padding!r} stride={s.grid.stride}")
+        elif isinstance(s, ZscoreStep):
+            raise NotImplementedError(
+                "zscore stages are not routed through shard_map yet; "
+                "run them locally or use stats.zscore per shard")
+        elif isinstance(s, ReduceStep) and s.kind == "cov":
+            raise NotImplementedError(
+                "cov reductions are not routed through shard_map yet")
+    n_shards = mesh.shape[axis_name]
+    if graph.spatial_shape[0] % n_shards:
+        raise ValueError(
+            f"leading spatial dim {graph.spatial_shape[0]} not divisible "
+            f"by {n_shards} shards")
+    if batched and graph.x.shape[0] % mesh.shape[batch_axis_name]:
+        raise ValueError(
+            f"batch dim {graph.x.shape[0]} not divisible by "
+            f"{mesh.shape[batch_axis_name]} batch shards")
+    meth = opts.resolved_method
+
+    def _local_linear(h, step: LinearStep):
+        """One halo exchange for the whole fused group, then a local
+        'valid' pass over the halo-extended slab."""
+        grid = step.grid
+        halo_lo, halo_hi = grid.halo()[0]
+        hh = halo_exchange(h, halo_lo, halo_hi, axis_name, opts.pad_value,
+                           axis=sdim)
+        pads = (([(0, 0)] if batched else []) + [(0, 0)]
+                + [(lo, hi) for lo, hi in zip(grid.pad_lo[1:],
+                                              grid.pad_hi[1:])])
+        if any(p != (0, 0) for p in pads):
+            hh = pad_array(hh, pads, opts.pad_value)
+        lshape = hh.shape[1:] if batched else hh.shape
+        lgrid = make_quasi_grid(lshape, grid.op_shape, 1, "valid",
+                                grid.dilation)
+        if step.kind == "stencil":
+            return engine.execute_stencil(
+                hh, lgrid, jnp.asarray(step.weights[:, 0]), 0.0, meth,
+                batched)
+        return engine.execute_stencil_bank(
+            hh, lgrid, jnp.asarray(step.weights), 0.0, meth, batched)
+
+    out_is_state = program.out_kind != "array"
+
+    def local_fn(x_local):
+        h = x_local
+        for step in program.steps:
+            if isinstance(step, LinearStep):
+                h = _local_linear(h, step)
+            elif isinstance(step, PointwiseStep):
+                h = step.fn(h)
+            elif isinstance(step, ReduceStep):
+                if step.kind == "moments":
+                    h = _apply_reduce(h, step, opts, batched,
+                                      program.channels)
+                    h = tree_merge_moments(h, axis_name)
+                else:  # hist: counts psum across every mesh axis
+                    h = _apply_reduce(h, step, opts, batched,
+                                      program.channels)
+                    names = ((axis_name, batch_axis_name) if batched
+                             else (axis_name,))
+                    h = type(h)(jax.lax.psum(h.counts, names), h.lo, h.hi)
+        return h
+
+    if batched:
+        in_spec = P(batch_axis_name, axis_name, *([None] * (rank - 1)))
+    else:
+        in_spec = P(axis_name, *([None] * (rank - 1)))
+    if out_is_state:
+        if program.out_kind == "moments" and batched:
+            # per-item states keep the (local) batch dim sharded
+            out_spec = P(batch_axis_name)
+        else:
+            out_spec = P()
+    elif program.channels:
+        out_spec = P(*(tuple(in_spec) + (None,)))
+    else:
+        out_spec = in_spec
+    return shard_map(
+        local_fn, mesh=mesh, in_specs=(in_spec,), out_specs=out_spec,
         check_rep=False,
     )
 

@@ -48,12 +48,13 @@ from repro.core.grid import (
 )
 from repro.core.melt import melt, pad_array, unmelt
 from repro.core.plan import (
+    ExecOptions,
     get_bank_plan,
     get_plan,
-    resolve_method,
     separable_eligible,
     separable_profitable,
 )
+
 
 __all__ = [
     "apply_stencil",
@@ -64,6 +65,11 @@ __all__ = [
     "separable_factors",
     "MeltEngine",
 ]
+
+
+def _cast_out(out, opts: ExecOptions):
+    """Apply the validated ``out_dtype`` option (no-op when ``None``)."""
+    return out if opts.out_dtype is None else out.astype(opts.out_dtype)
 
 
 def _stencil_materialize(x, grid: QuasiGrid, weights, pad_value, batched):
@@ -228,18 +234,22 @@ def execute_separable_bank(x, grid: QuasiGrid, factors, pad_value,
     input channel fans out to K lanes); passes 1..rank-1 are depthwise (each
     lane carries its own factor).  Exact for stride-1 'same' grids under
     zero / edge / reflect padding (``separable_eligible`` refuses nonzero
-    constants — they don't commute with per-dim passes).
+    constants — they don't commute with per-dim passes), and exact for
+    stride-1 'valid' grids unconditionally (no fill is ever read): each
+    1-D pass shrinks only its own dim, so the intermediate shapes walk
+    from ``in_shape`` down to ``out_shape``.
     """
     rank = grid.rank
 
-    def grid1(i):
+    def grid1(i, cur_shape):
         op1 = tuple(grid.op_shape[j] if j == i else 1 for j in range(rank))
-        return make_quasi_grid(grid.in_shape, op1, 1, "same", grid.dilation)
+        return make_quasi_grid(cur_shape, op1, 1, grid.padding, grid.dilation)
 
-    out = execute_stencil_bank(x, grid1(0), factors[0], pad_value, method,
-                               batched)
+    g = grid1(0, grid.in_shape)
+    out = execute_stencil_bank(x, g, factors[0], pad_value, method, batched)
     for i in range(1, rank):
-        out = execute_stencil_depthwise(out, grid1(i), factors[i], pad_value,
+        g = grid1(i, g.out_shape)
+        out = execute_stencil_depthwise(out, g, factors[i], pad_value,
                                         method, batched)
     return out
 
@@ -329,6 +339,7 @@ def apply_stencil(
     method: str = "auto",
     grid: Optional[QuasiGrid] = None,
     batched: bool = False,
+    out_dtype=None,
 ) -> jax.Array:
     """Apply a linear stencil (operator ravel-vector ``weights``) to ``x``.
 
@@ -336,22 +347,27 @@ def apply_stencil(
 
     With ``batched=True`` the leading dim of ``x`` is a stack of independent
     tensors and ``op_shape``/``stride``/... describe the trailing dims; the
-    result keeps the batch dim.  Concrete inputs dispatch through the
-    process-wide :class:`~repro.core.plan.StencilPlan` cache; traced inputs
-    (already inside someone's jit/shard_map) execute inline.
+    result keeps the batch dim.  ``method``/``pad_value``/``batched``/
+    ``out_dtype`` are validated up front through
+    :class:`~repro.core.plan.ExecOptions` (bad spellings raise with the
+    valid choices).  Concrete inputs dispatch through the process-wide
+    :class:`~repro.core.plan.StencilPlan` cache; traced inputs (already
+    inside someone's jit/shard_map) execute inline.
     """
+    opts = ExecOptions.make(method, pad_value, batched, out_dtype)
     weights = jnp.asarray(weights).reshape(-1)
     if grid is None:
         if not isinstance(x, jax.core.Tracer):
             plan = get_plan(x.shape, x.dtype, op_shape, stride, padding,
-                            dilation, pad_value, method, batched)
+                            dilation, opts.pad_value, method, batched)
             _check_weights(weights, plan.grid)
-            return plan(x, weights)
+            return _cast_out(plan(x, weights), opts)
         spatial = x.shape[1:] if batched else x.shape
         grid = make_quasi_grid(spatial, op_shape, stride, padding, dilation)
     _check_weights(weights, grid)
-    return execute_stencil(x, grid, weights, pad_value,
-                           resolve_method(method), batched)
+    return _cast_out(
+        execute_stencil(x, grid, weights, opts.pad_value,
+                        opts.resolved_method, batched), opts)
 
 
 def apply_stencil_bank(
@@ -367,6 +383,7 @@ def apply_stencil_bank(
     separable="auto",
     grid: Optional[QuasiGrid] = None,
     batched: bool = False,
+    out_dtype=None,
 ) -> jax.Array:
     """Apply K linear operators over one melt pass (DESIGN.md §9).
 
@@ -388,6 +405,7 @@ def apply_stencil_bank(
     Concrete inputs dispatch through the :class:`~repro.core.plan.BankPlan`
     cache; traced inputs execute inline.
     """
+    opts = ExecOptions.make(method, pad_value, batched, out_dtype)
     W = jnp.asarray(weight_matrix)
     if W.ndim == 1:
         W = W[:, None]
@@ -428,16 +446,18 @@ def apply_stencil_bank(
     wargs = tuple(factors) if factors is not None else W
     if grid is None and not isinstance(x, jax.core.Tracer):
         plan = get_bank_plan(x.shape, x.dtype, op_t, stride_t, padding,
-                             dilation, pad_value, method, batched, K,
+                             dilation, opts.pad_value, method, batched, K,
                              separable=factors is not None)
-        return plan(x, wargs)
+        return _cast_out(plan(x, wargs), opts)
     if grid is None:
         grid = make_quasi_grid(spatial, op_t, stride_t, padding, dilation)
-    meth = resolve_method(method)
-    pv = normalize_pad_value(pad_value)
+    meth = opts.resolved_method
+    pv = opts.pad_value
     if factors is not None:
-        return execute_separable_bank(x, grid, wargs, pv, meth, batched)
-    return execute_stencil_bank(x, grid, W, pv, meth, batched)
+        return _cast_out(
+            execute_separable_bank(x, grid, wargs, pv, meth, batched), opts)
+    return _cast_out(execute_stencil_bank(x, grid, W, pv, meth, batched),
+                     opts)
 
 
 def _check_weights(weights, grid: QuasiGrid):
@@ -460,17 +480,21 @@ class MeltEngine:
     """Explicit decouple→compute→couple driver (paper Fig. 2).
 
     Mostly useful for inspection/benchmarks; production code calls
-    ``apply_stencil`` / the distributed engine directly.  ``batched=True``
-    treats the leading dim of every input as a stack of independent tensors.
+    ``apply_stencil`` / the ``repro.pipe`` graph API directly.
+    ``batched=True`` treats the leading dim of every input as a stack of
+    independent tensors.  ``__call__`` is a thin wrapper over a
+    single-stage pipe graph (which lowers right back to the
+    :class:`~repro.core.plan.StencilPlan` cache).
     """
 
     def __init__(self, op_shape, stride=1, padding="same", dilation=1,
                  pad_value=0.0, method="auto", batched=False):
+        opts = ExecOptions.make(method, pad_value, batched)
         self.op_shape = op_shape
         self.stride = stride
         self.padding = padding
         self.dilation = dilation
-        self.pad_value = normalize_pad_value(pad_value)
+        self.pad_value = opts.pad_value
         self.method = method
         self.batched = batched
 
@@ -492,9 +516,20 @@ class MeltEngine:
         return unmelt(rows, grid, batched=self.batched)
 
     def __call__(self, x, weights):
-        return apply_stencil(
-            x, self.op_shape, weights,
-            stride=self.stride, padding=self.padding, dilation=self.dilation,
-            pad_value=self.pad_value, method=self.method,
-            batched=self.batched,
-        )
+        if isinstance(weights, jax.core.Tracer):
+            # traced weights can't become a graph record (ops carry a
+            # concrete weight digest); the plan executor takes weights as
+            # a jitted argument, so delegate straight to it
+            return apply_stencil(
+                x, self.op_shape, weights,
+                stride=self.stride, padding=self.padding,
+                dilation=self.dilation, pad_value=self.pad_value,
+                method=self.method, batched=self.batched,
+            )
+        from repro.pipe import pipe  # deferred: pipe builds on this module
+
+        P = pipe.batched(x) if self.batched else pipe(x)
+        return P.stencil(
+            self.op_shape, weights, stride=self.stride, padding=self.padding,
+            dilation=self.dilation,
+        ).run(method=self.method, pad_value=self.pad_value)

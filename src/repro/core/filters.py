@@ -29,6 +29,7 @@ from repro.core.melt import MeltMatrix, melt, unmelt
 
 __all__ = [
     "gaussian_weights",
+    "gaussian_weights_np",
     "gaussian_filter",
     "bilateral_filter",
     "difference_stencils",
@@ -39,12 +40,9 @@ __all__ = [
 ]
 
 
-def gaussian_weights(op_shape, sigma, dilation=1, mask=None) -> jnp.ndarray:
-    """Spatial Gaussian kernel over the operator footprint, raveled: (cols,).
-
-    ``sigma`` may be scalar / per-dim vector / full covariance (anisotropy
-    support for e.g. medical voxels — paper Eq. 3's Σ_d).
-    """
+def gaussian_weights_np(op_shape, sigma, dilation=1, mask=None) -> np.ndarray:
+    """Pure-numpy :func:`gaussian_weights` — safe to call at plan-build
+    time *inside* someone's trace (no jnp op ever stages)."""
     op_shape = tuple(int(k) for k in op_shape)
     rank = len(op_shape)
     dil = (dilation,) * rank if isinstance(dilation, int) else tuple(dilation)
@@ -56,7 +54,22 @@ def gaussian_weights(op_shape, sigma, dilation=1, mask=None) -> jnp.ndarray:
     if mask is not None:
         w = w * np.asarray(mask, dtype=np.float64).ravel()
     w = w / w.sum()
-    return jnp.asarray(w, dtype=jnp.float32)
+    return w.astype(np.float32)
+
+
+def gaussian_weights(op_shape, sigma, dilation=1, mask=None) -> jnp.ndarray:
+    """Spatial Gaussian kernel over the operator footprint, raveled: (cols,).
+
+    ``sigma`` may be scalar / per-dim vector / full covariance (anisotropy
+    support for e.g. medical voxels — paper Eq. 3's Σ_d).
+    """
+    return jnp.asarray(gaussian_weights_np(op_shape, sigma, dilation, mask))
+
+
+def _pipe_for(x, batched: bool):
+    from repro.pipe import pipe  # local import, avoids cycle
+
+    return pipe.batched(x) if batched else pipe(x)
 
 
 def gaussian_filter(
@@ -67,19 +80,20 @@ def gaussian_filter(
     method: str = "auto",
     pad_value=0.0,
     batched: bool = False,
+    out_dtype=None,
 ) -> jax.Array:
     """Rank-agnostic Gaussian smoothing: melt → broadcast → couple.
 
-    ``batched=True``: the leading dim of ``x`` is a stack of independent
-    tensors, filtered in one batched stencil dispatch (DESIGN.md §3).
+    Thin wrapper over a single-stage pipe graph (DESIGN.md §11), which
+    lowers back onto the ``StencilPlan`` cache — chain further stages with
+    ``pipe(x).gaussian(...)`` directly.  ``batched=True``: the leading dim
+    of ``x`` is a stack of independent tensors, filtered in one batched
+    stencil dispatch (DESIGN.md §3).
     """
     rank = x.ndim - (1 if batched else 0)
     op = (op_shape,) * rank if isinstance(op_shape, int) else tuple(op_shape)
-    w = gaussian_weights(op, sigma).astype(x.dtype)
-    from repro.core.engine import apply_stencil  # local import, avoids cycle
-
-    return apply_stencil(x, op, w, method=method, pad_value=pad_value,
-                         batched=batched)
+    return _pipe_for(x, batched).gaussian(sigma, op_shape=op).run(
+        method=method, pad_value=pad_value, out_dtype=out_dtype)
 
 
 def _spatial_log_weights(grid: QuasiGrid, sigma_d) -> jnp.ndarray:
@@ -193,33 +207,17 @@ def curvature_bank(rank: int) -> np.ndarray:
     return W
 
 
-def _derivative_bank_pass(x, rank, method, pad_value, batched):
-    """Run the full derivative bank: (..., *shape, rank + rank²), float32."""
-    from repro.core.engine import apply_stencil_bank  # local, avoids cycle
-
-    return apply_stencil_bank(
-        x.astype(jnp.float32), (3,) * rank,
-        jnp.asarray(curvature_bank(rank)),
-        method=method, pad_value=pad_value, batched=batched,
-    )
-
-
 def gradient(x: jax.Array, *, method: str = "auto", pad_value="edge",
              batched: bool = False) -> jax.Array:
     """All first partials in one bank pass: (..., *shape, rank).
 
     ``out[..., i] = ∂x/∂dᵢ`` by central differences (exact on quadratics).
+    Thin wrapper over a single-stage pipe graph — chain a fused reduction
+    with ``pipe(x).gradient().moments(...)`` to keep the derivative field
+    out of HBM entirely.
     """
-    rank = x.ndim - (1 if batched else 0)
-    grad_w, _ = difference_stencils(rank)
-    from repro.core.engine import apply_stencil_bank  # local, avoids cycle
-
-    D = apply_stencil_bank(
-        x.astype(jnp.float32), (3,) * rank,
-        jnp.asarray(grad_w, dtype=jnp.float32),
-        method=method, pad_value=pad_value, batched=batched,
-    )
-    return D.astype(x.dtype)
+    return _pipe_for(x.astype(jnp.float32), batched).gradient().run(
+        method=method, pad_value=pad_value, out_dtype=x.dtype)
 
 
 def hessian(x: jax.Array, *, method: str = "auto", pad_value="edge",
@@ -227,19 +225,24 @@ def hessian(x: jax.Array, *, method: str = "auto", pad_value="edge",
     """All second partials in one bank pass: (..., *shape, rank, rank).
 
     The paper's claim that Hessians of any-rank tensors reduce to a rank-2
-    container per grid point — here literally one (numel, rank²) matmul.
+    container per grid point — here literally one (numel, rank²) matmul
+    (a single-stage pipe graph riding the ``BankPlan`` cache).
     """
     rank = x.ndim - (1 if batched else 0)
-    _, hess_w = difference_stencils(rank)
-    from repro.core.engine import apply_stencil_bank  # local, avoids cycle
+    D = _pipe_for(x.astype(jnp.float32), batched).hessian().run(
+        method=method, pad_value=pad_value, out_dtype=x.dtype)
+    return D.reshape(D.shape[:-1] + (rank, rank))
 
-    D = apply_stencil_bank(
-        x.astype(jnp.float32), (3,) * rank,
-        jnp.asarray(hess_w.reshape(3 ** rank, rank * rank),
-                    dtype=jnp.float32),
-        method=method, pad_value=pad_value, batched=batched,
-    )
-    return D.reshape(D.shape[:-1] + (rank, rank)).astype(x.dtype)
+
+def _curvature_combine(rank: int):
+    """det(H) / (1 + |∇|²)² over the [∇ | vec(H)] channel axis."""
+
+    def fn(D):
+        g = D[..., :rank]
+        H = D[..., rank:].reshape(D.shape[:-1] + (rank, rank))
+        return jnp.linalg.det(H) / (1.0 + jnp.sum(g * g, axis=-1)) ** 2
+
+    return fn
 
 
 def gaussian_curvature(x: jax.Array, *, pad_value="edge",
@@ -248,15 +251,15 @@ def gaussian_curvature(x: jax.Array, *, pad_value="edge",
     """Generalized Gaussian curvature, Eq. (6)/(7), for any-rank dense tensors.
 
     K = det(H(I)) / (1 + Σ_i I_{d_i}²)²  with H the melt-derived Hessian.
-    Gradient and Hessian come from ONE rank + rank² operator-bank pass
-    (``curvature_bank``): the slab is loaded once for all K operators, and
-    on the fused path the melt matrix never materializes.
-    ``batched=True`` stacks independent tensors along the leading dim.
+    A two-stage pipe graph: ONE rank + rank² operator-bank pass
+    (``curvature_bank``) plus the pointwise det/trace combine, compiled
+    into a single executor — the slab is loaded once for all K operators,
+    the derivative field never leaves the computation, and on the fused
+    path the melt matrix never materializes.  ``batched=True`` stacks
+    independent tensors along the leading dim.
     """
     rank = x.ndim - (1 if batched else 0)
-    D = _derivative_bank_pass(x, rank, method, pad_value, batched)
-    g = D[..., :rank]
-    H = D[..., rank:].reshape(D.shape[:-1] + (rank, rank))
-    detH = jnp.linalg.det(H)
-    K = detH / (1.0 + jnp.sum(g * g, axis=-1)) ** 2
-    return K.astype(x.dtype)
+    P = (_pipe_for(x.astype(jnp.float32), batched)
+         .bank((3,) * rank, curvature_bank(rank))
+         .pointwise(_curvature_combine(rank), key=f"gauss-curv-{rank}"))
+    return P.run(method=method, pad_value=pad_value, out_dtype=x.dtype)

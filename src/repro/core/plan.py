@@ -24,6 +24,7 @@ possibly-string value against floats.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 from collections import OrderedDict
 from typing import Dict, Tuple
@@ -40,17 +41,24 @@ from repro.core.grid import (
 )
 
 __all__ = [
+    "ExecOptions",
     "StencilPlan",
     "BankPlan",
     "StatsPlan",
+    "PipePlan",
     "get_plan",
     "get_bank_plan",
     "get_stats_plan",
+    "get_pipe_plan",
     "normalize_axes",
     "separable_eligible",
     "plan_cache_stats",
     "clear_plan_cache",
+    "METHODS",
 ]
+
+#: every accepted ``method=`` spelling, in the order shown in errors
+METHODS = ("auto", "materialize", "lax", "fused")
 
 #: max resident plans; each pins one jitted executor (compiled computation)
 PLAN_CACHE_CAPACITY = 256
@@ -64,8 +72,63 @@ def resolve_method(method: str) -> str:
     if method == "auto":
         return "fused" if jax.default_backend() == "tpu" else "lax"
     if method not in ("materialize", "lax", "fused"):
-        raise ValueError(f"unknown method {method!r}")
+        raise ValueError(
+            f"unknown method {method!r}; valid choices: "
+            f"{', '.join(METHODS)}")
     return method
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecOptions:
+    """The one validated bundle of execution kwargs every entry point shares.
+
+    Construction (via :meth:`make`) *rejects* bad values with actionable
+    messages instead of letting them fall through to a backend default:
+
+    - ``method``     — one of :data:`METHODS`; misspellings raise with the
+      full list of valid choices.
+    - ``pad_value``  — normalized through
+      :func:`repro.core.grid.normalize_pad_value` (``0`` ≡ ``0.0``; strings
+      must be known ``jnp.pad`` modes).
+    - ``batched``    — coerced to bool.
+    - ``out_dtype``  — ``None`` (keep the path's native dtype) or any
+      ``jnp.dtype`` spelling, canonicalized to the dtype *name* so options
+      hash into plan keys.
+
+    Instances are frozen and hashable — a plan key can embed one directly.
+    """
+
+    method: str = "auto"
+    pad_value: object = 0.0
+    batched: bool = False
+    out_dtype: object = None
+
+    @classmethod
+    def make(cls, method: str = "auto", pad_value=0.0, batched: bool = False,
+             out_dtype=None) -> "ExecOptions":
+        if not isinstance(method, str) or method not in METHODS:
+            raise ValueError(
+                f"unknown method {method!r}; valid choices: "
+                f"{', '.join(METHODS)}")
+        pv = normalize_pad_value(pad_value)
+        if out_dtype is not None:
+            try:
+                out_dtype = jnp.dtype(out_dtype).name
+            except TypeError as e:
+                raise ValueError(
+                    f"out_dtype {out_dtype!r} is not a dtype: {e}") from None
+        return cls(method=method, pad_value=pv, batched=bool(batched),
+                   out_dtype=out_dtype)
+
+    @property
+    def resolved_method(self) -> str:
+        """The backend-resolved execution path (``auto`` → lax/fused)."""
+        return resolve_method(self.method)
+
+    def key(self) -> tuple:
+        """Hashable signature fragment (method pre-resolved)."""
+        return (self.resolved_method, self.pad_value, self.batched,
+                self.out_dtype)
 
 
 def separable_eligible(rank: int, stride, padding: str,
@@ -436,6 +499,78 @@ def get_stats_plan(
         return StatsPlan(key, in_shape, axes, dt, meth, int(order))
 
     return _intern(key, build)
+
+
+class PipePlan:
+    """Interned executor for one fused *pipeline* (DESIGN.md §11).
+
+    A pipe signature is ``(in_shape, dtype, ExecOptions, op-chain)``; the
+    planner (``repro.pipe.fuse``) has already merged composable linear
+    stages and fused trailing reductions by the time a :class:`PipePlan` is
+    built, so the executor runs the minimum number of melt passes.  The
+    plan records that structure for inspection/tests:
+
+    - ``passes``      — logical data traversals (fused groups; a reduction
+      fused into its producer costs 0 extra).
+    - ``melt_calls``  — the exact ``melt()`` count the *materialize* path
+      pays (separable groups pay one 1-D melt per dim); lax/fused pay 0.
+
+    Shares the process-wide LRU plan cache and its counters with every
+    other plan kind — a pipeline is served by the same amortization
+    machinery as a single stencil.
+    """
+
+    __slots__ = ("key", "in_shape", "dtype", "opts", "steps", "passes",
+                 "melt_calls", "_exec", "_hits", "_calls", "_traces")
+
+    def __init__(self, key: tuple, in_shape, dtype, opts: ExecOptions,
+                 steps, passes: int, melt_calls: int, run_fn):
+        self.key = key
+        self.in_shape = in_shape
+        self.dtype = dtype
+        self.opts = opts
+        self.steps = steps
+        self.passes = passes
+        self.melt_calls = melt_calls
+        self._hits = 0
+        self._calls = 0
+        self._traces = 0
+
+        def run(x):
+            self._traces += 1  # fires only while tracing (retrace counter)
+            return run_fn(x)
+
+        self._exec = jax.jit(run)
+
+    def __hash__(self):
+        return hash(self.key)
+
+    def __eq__(self, other):
+        return isinstance(other, PipePlan) and self.key == other.key
+
+    def __repr__(self):
+        return (f"PipePlan(in_shape={self.in_shape}, steps={len(self.steps)},"
+                f" passes={self.passes}, method={self.opts.method!r}, "
+                f"batched={self.opts.batched})")
+
+    def __call__(self, x: jax.Array):
+        self._calls += 1
+        return self._exec(x)
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self._hits, "calls": self._calls,
+                "traces": self._traces}
+
+
+def get_pipe_plan(key: tuple, build) -> PipePlan:
+    """Intern a pipeline plan under ``("pipe", *key)`` in the shared cache.
+
+    The graph front end (``repro.pipe.compile``) supplies both the
+    signature and the builder; this indirection keeps ``core.plan`` free of
+    a ``repro.pipe`` import while pipelines still share the one LRU cache
+    (and its hit/miss/eviction counters) with stencil/bank/stats plans.
+    """
+    return _intern(("pipe",) + tuple(key), build)
 
 
 def plan_cache_stats() -> Dict[str, int]:

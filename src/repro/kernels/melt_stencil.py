@@ -7,11 +7,12 @@ that inflates HBM traffic by ``numel(m)``; this kernel instead builds each
 slab and contracts with the operator ravel vector on the fly — ``M`` never
 exists in HBM.
 
-Canonicalization: any rank-k stride-1 'same' stencil flattens to a 2-D
-problem (R, C): R = prod(leading grid dims), C = trailing (lane) dim, and a
-static per-operator-element *row offset* table derived from
-``QuasiGrid.flat_offsets`` — the offset table carries all the geometry, so
-one kernel serves every rank.  Each output tile i reads input rows
+Canonicalization: any rank-k stride-1 stencil — 'same' or 'valid', the
+wrapper's output crop is the only difference (``ops._valid_slices``) —
+flattens to a 2-D problem (R, C): R = prod(leading grid dims), C =
+trailing (lane) dim, and a static per-operator-element *row offset* table
+derived from ``QuasiGrid.flat_offsets`` — the offset table carries all
+the geometry, so one kernel serves every rank.  Each output tile i reads input rows
 ``[i·T, i·T + T + halo_lo + halo_hi)`` (the §2.4 slab + halo) and computes
 ``Σ_c w_c · slab[c_off : c_off + T]`` on the VPU; multi-channel variants
 feed the MXU via an (T, numel) × (numel, C) contraction.

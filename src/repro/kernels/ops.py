@@ -1,10 +1,12 @@
 """jit'd wrappers: rank-agnostic canonicalization → Pallas kernels.
 
-The canonical trick (melt_stencil.py docstring): a stride-1 'same' stencil
-on any rank is computed at EVERY position of the halo-padded flattened
+The canonical trick (melt_stencil.py docstring): a stride-1 stencil on
+any rank is computed at EVERY position of the halo-padded flattened
 tensor (output row r ↔ padded flat row r, offsets = QuasiGrid.flat_offsets)
-and the valid grid region is cropped afterwards — pad positions cost
-(P−N)/N extra compute (a few %) and buy exact flat-offset addressing.
+and the true output region is cropped afterwards ('same' recovers
+in_shape, 'valid' shrinks to out_shape — one rule, `_valid_slices`).
+Extra positions cost (P−N)/N compute (a few %) and buy exact flat-offset
+addressing.
 
 ``interpret`` defaults to True off-TPU (this container); on TPU backends
 the same code emits real Pallas kernels.
@@ -40,6 +42,27 @@ def _halo_extents(grid: QuasiGrid):
     return offs, halo_lo, halo_hi
 
 
+def _valid_slices(grid: QuasiGrid):
+    """Per-dim output crop of the all-positions canonical result.
+
+    Stride-1 grids compute a value at EVERY (padded) flat position; the
+    true outputs sit at the operator-*center* positions.  For 'same' the
+    center offset equals ``pad_lo`` and the crop recovers ``in_shape``; for
+    'valid' there is no padding and the crop shrinks to ``out_shape`` —
+    one rule covers both.
+    """
+    starts = tuple((k - 1) // 2 * d
+                   for k, d in zip(grid.op_shape, grid.dilation))
+    return tuple(slice(s, s + n) for s, n in zip(starts, grid.out_shape))
+
+
+def _check_fused_grid(grid: QuasiGrid):
+    if grid.stride != (1,) * grid.rank or grid.padding not in ("same",
+                                                               "valid"):
+        raise NotImplementedError(
+            "fused path covers stride-1 'same'/'valid' stencils")
+
+
 def _canonical(x, grid: QuasiGrid, pad_value):
     """(x_flat (P,1), offsets, halo_lo, total_rows, crop_fn)."""
     xp = _pad_for(x, grid, pad_value)
@@ -48,12 +71,10 @@ def _canonical(x, grid: QuasiGrid, pad_value):
     # extend with halo rows so every padded position can be computed
     flat = jnp.pad(flat, ((halo_lo, halo_hi), (0, 0)))
     pshape = grid.padded_shape
+    slices = _valid_slices(grid)
 
     def crop(rows):
-        out = rows.reshape(pshape)
-        slices = tuple(slice(lo, lo + n)
-                       for lo, n in zip(grid.pad_lo, grid.in_shape))
-        return out[slices]
+        return rows.reshape(pshape)[slices]
 
     return flat, offs, halo_lo, int(np.prod(pshape)), crop
 
@@ -69,12 +90,10 @@ def _canonical_batched(x, grid: QuasiGrid, pad_value):
     offs, halo_lo, halo_hi = _halo_extents(grid)
     flat = jnp.pad(flat, ((0, 0), (halo_lo, halo_hi), (0, 0)))
     pshape = grid.padded_shape
+    slices = (slice(None),) + _valid_slices(grid)
 
     def crop(rows):
-        out = rows.reshape((rows.shape[0],) + pshape)
-        slices = (slice(None),) + tuple(
-            slice(lo, lo + n) for lo, n in zip(grid.pad_lo, grid.in_shape))
-        return out[slices]
+        return rows.reshape((rows.shape[0],) + pshape)[slices]
 
     return flat, offs, halo_lo, int(np.prod(pshape)), crop
 
@@ -85,14 +104,13 @@ def _canonical_batched(x, grid: QuasiGrid, pad_value):
                      "tile_rows"))
 def fused_stencil(x, grid: QuasiGrid, weights, pad_value=0.0,
                   interpret=None, batched=False, tile_rows=None):
-    """Rank-agnostic fused melt×contract (stride-1 'same' grids).
+    """Rank-agnostic fused melt×contract (stride-1 'same'/'valid' grids).
 
     ``batched=True``: leading dim of ``x`` is a stack of independent tensors;
     the Pallas grid gains a batch axis (one kernel launch for the stack).
     ``tile_rows=None`` picks a VMEM-budget tile (``pick_tile_rows``).
     """
-    if grid.stride != (1,) * grid.rank or grid.padding != "same":
-        raise NotImplementedError("fused path covers stride-1 'same' stencils")
+    _check_fused_grid(grid)
     interpret = _interpret_default() if interpret is None else interpret
     if batched:
         flat, offs, halo_lo, total, crop = _canonical_batched(
@@ -124,8 +142,7 @@ def fused_stencil_bank(x, grid: QuasiGrid, weight_matrix, pad_value=0.0,
     the halo slab load is amortized across all K operators and ``M`` never
     exists in HBM.
     """
-    if grid.stride != (1,) * grid.rank or grid.padding != "same":
-        raise NotImplementedError("fused path covers stride-1 'same' stencils")
+    _check_fused_grid(grid)
     interpret = _interpret_default() if interpret is None else interpret
     W = jnp.asarray(weight_matrix)
     if batched:
@@ -143,13 +160,11 @@ def fused_stencil_bank(x, grid: QuasiGrid, weight_matrix, pad_value=0.0,
 
 
 def _crop_channels(rows, grid: QuasiGrid, batched: bool):
-    """(…, total_padded_rows, K) → (…, *in_shape, K) valid-region crop."""
+    """(…, total_padded_rows, K) → (…, *out_shape, K) valid-region crop."""
     K = rows.shape[-1]
     lead = rows.shape[:-2]
     out = rows.reshape(lead + grid.padded_shape + (K,))
-    slices = tuple(slice(None) for _ in lead) + tuple(
-        slice(lo, lo + n) for lo, n in zip(grid.pad_lo, grid.in_shape)
-    )
+    slices = tuple(slice(None) for _ in lead) + _valid_slices(grid)
     return out[slices]
 
 
@@ -182,8 +197,7 @@ def fused_stencil_depthwise(xc, grid: QuasiGrid, weights, pad_value=0.0,
     """Per-lane stencil: lane k of ``xc`` (..., *spatial, K) is filtered by
     column k of ``weights`` (numel(m), K) — the separable 1-D pass primitive.
     """
-    if grid.stride != (1,) * grid.rank or grid.padding != "same":
-        raise NotImplementedError("fused path covers stride-1 'same' stencils")
+    _check_fused_grid(grid)
     interpret = _interpret_default() if interpret is None else interpret
     W = jnp.asarray(weights)
     flat, offs, halo_lo, total = _canonical_channels(

@@ -1,0 +1,35 @@
+"""repro.pipe — the unified lazy pipeline API (DESIGN.md §11).
+
+One consistent entry point over the whole melt engine::
+
+    from repro.pipe import pipe
+
+    st = (pipe(x)                      # or pipe.batched(xs)
+          .gaussian(1.5)               # linear stages record, don't run
+          .gradient()
+          .moments(order=2)            # terminal reduction
+          .run(method="auto", pad_value="edge"))
+    st.variance                        # per-channel gradient variance
+
+``pipe(x)`` records a graph of ops; ``.run()`` compiles it through the
+melt-fusing planner: adjacent 'valid' linear stages merge into one
+operator-bank pass by weight composition, a trailing reduction fuses into
+its producing pass (the intermediate never re-melts), and single-op
+graphs lower straight onto the legacy ``StencilPlan``/``BankPlan``/
+``StatsPlan`` caches — the eager entry points (``apply_stencil``,
+``filters.*``, ``stats.*``) are thin wrappers over these graphs.
+"""
+from repro.core.plan import ExecOptions, PipePlan
+from repro.pipe.compile import build_program_for
+from repro.pipe.fuse import PipelineProgram, compose_weights
+from repro.pipe.graph import Pipe, pipe
+
+__all__ = [
+    "pipe",
+    "Pipe",
+    "PipePlan",
+    "PipelineProgram",
+    "ExecOptions",
+    "compose_weights",
+    "build_program_for",
+]

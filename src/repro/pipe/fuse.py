@@ -1,0 +1,273 @@
+"""The melt-fusing planner: op chain → minimum-pass step program.
+
+Three fusion rules (DESIGN.md §11):
+
+1. **Weight composition** — adjacent linear stages merge into ONE
+   operator-bank column when the rewrite is *exact*: both stages stride-1,
+   dilation-1, ``padding='valid'``, and the earlier stage single-column
+   (K=1).  In the melt's absolute-index form the composite weights are the
+   full N-D convolution of the two operator tensors
+   (``comp[a] = Σ_{a1+a2=a} w1[a1]·w2[a2]``), footprint ``k1+k2−1`` per
+   dim.  Fusion is *declined* — stages stay separate passes — for 'same'
+   padding (any fill: boundary semantics do not compose), strided or
+   dilated stages, and K>1 predecessors.
+
+2. **Trailing-reduction fusion** — a terminal ``moments``/``hist``/``cov``
+   consumes the producing group's value inside the same executor: the
+   intermediate is never re-melted (0 extra melt passes on the
+   materialize path; never leaves the compiled computation on lax/fused).
+
+3. **Separable rewrite** — each planned group's final weight matrix is
+   re-examined with ``separable_factors``: bank-kind and composed groups
+   whose columns are rank-1 outer products run as per-dim 1-D passes past
+   the ``separable_profitable`` crossover ('same' needs a zero/mode fill;
+   'valid' is unconditionally exact).  Plain ``.stencil``/``.gaussian``
+   stages stay dense for parity with ``apply_stencil``.
+
+The program records ``passes`` (logical fused traversals) and
+``melt_calls`` (the exact ``melt()`` count the materialize path pays:
+separable groups pay one 1-D melt per dim) — the numbers the no-extra-melt
+tests assert against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.grid import QuasiGrid, make_quasi_grid
+from repro.core.plan import ExecOptions, separable_profitable
+from repro.pipe.graph import (
+    CovOp,
+    HistOp,
+    LinearOp,
+    MomentsOp,
+    Pipe,
+    PointwiseOp,
+    ZscoreOp,
+)
+
+__all__ = [
+    "LinearStep",
+    "PointwiseStep",
+    "ZscoreStep",
+    "ReduceStep",
+    "PipelineProgram",
+    "compose_weights",
+    "composable",
+    "build_program",
+]
+
+
+def compose_weights(W1: np.ndarray, op1, W2: np.ndarray, op2) -> np.ndarray:
+    """Exact weights of ``stage2 ∘ stage1`` (both 'valid', stride-1).
+
+    ``W1`` is (numel(op1), 1), ``W2`` (numel(op2), K); returns
+    (numel(op1 ⊕ op2 − 1), K).  In absolute melt indices a valid row ``g``
+    of stage 1 reads ``x[g + a1]``, so the chain reads
+    ``x[g + a1 + a2]`` — the composite is the full N-D convolution of the
+    operator tensors, and the ravel order matches the melt column order by
+    construction.
+    """
+    op1 = tuple(int(k) for k in op1)
+    op2 = tuple(int(k) for k in op2)
+    K = W2.shape[1]
+    k_out = tuple(a + b - 1 for a, b in zip(op1, op2))
+    T1 = np.asarray(W1, np.float64).reshape(op1)
+    T2 = np.asarray(W2, np.float64).reshape(op2 + (K,))
+    out = np.zeros(k_out + (K,))
+    for idx in np.ndindex(*op1):
+        sl = tuple(slice(i, i + k) for i, k in zip(idx, op2))
+        out[sl + (slice(None),)] += T1[idx] * T2
+    return out.reshape(-1, K).astype(np.float32)
+
+
+def composable(a: LinearOp, b: LinearOp) -> bool:
+    """Whether stage ``b`` may merge into stage ``a``'s melt pass exactly."""
+    unit = (1,) * len(a.op_shape)
+    return (a.K == 1
+            and a.padding == "valid" and b.padding == "valid"
+            and a.stride == unit and b.stride == unit
+            and a.dilation == unit and b.dilation == unit)
+
+
+@dataclasses.dataclass
+class LinearStep:
+    """One fused linear group: a (possibly composed) bank over one grid."""
+
+    grid: QuasiGrid
+    weights: np.ndarray            # (numel, K) float32
+    kind: str                      # 'stencil' (squeeze K) | 'bank' (keep K)
+    factors: Optional[tuple]       # separable per-dim factors, or None
+    fused_from: int                # how many graph ops merged into this pass
+
+    @property
+    def melt_calls(self) -> int:
+        return self.grid.rank if self.factors is not None else 1
+
+
+@dataclasses.dataclass
+class PointwiseStep:
+    fn: object
+
+
+@dataclasses.dataclass
+class ZscoreStep:
+    grid: QuasiGrid
+    window_col: np.ndarray         # normalized (numel,) window weights
+    eps: float
+
+    melt_calls = 1
+
+
+@dataclasses.dataclass
+class ReduceStep:
+    kind: str                      # 'moments' | 'hist' | 'cov'
+    order: int = 4
+    bins: int = 0
+    lo: float = 0.0
+    hi: float = 0.0
+    axis: object = None            # explicit spec (reduction-only graphs)
+
+
+@dataclasses.dataclass
+class PipelineProgram:
+    """The planner's output: executable steps + the pass/melt accounting."""
+
+    steps: Tuple
+    passes: int                    # logical fused data traversals
+    melt_calls: int                # exact melt() count on the materialize path
+    out_shape: Tuple[int, ...]     # spatial shape after the last linear step
+    channels: int                  # trailing channel extent (0 = none)
+    out_kind: str                  # 'array' | 'moments' | 'hist' | 'cov'
+
+    def describe(self) -> str:
+        names = []
+        for s in self.steps:
+            if isinstance(s, LinearStep):
+                tag = "x".join(map(str, s.grid.op_shape))
+                sep = "sep" if s.factors is not None else "dense"
+                names.append(f"linear[{tag},K={s.weights.shape[1]},{sep},"
+                             f"fused={s.fused_from}]")
+            elif isinstance(s, ZscoreStep):
+                names.append("zscore")
+            elif isinstance(s, PointwiseStep):
+                names.append("pointwise")
+            else:
+                names.append(f"reduce[{s.kind}]")
+        return (f"{' -> '.join(names)} | passes={self.passes} "
+                f"melt_calls(materialize)={self.melt_calls}")
+
+
+def _separable_ok(padding: str, pad_value, rank: int) -> bool:
+    """Exactness gate for the per-dim rewrite inside a pipeline group."""
+    if rank < 2:
+        return False
+    if padding == "valid":
+        return True  # no fill is ever read
+    return isinstance(pad_value, str) or pad_value == 0.0
+
+
+def _plan_linear(op_shape, W, kind, cur_shape, stride, padding, dilation,
+                 pad_value, fused_from, try_separable) -> LinearStep:
+    from repro.core.engine import separable_factors  # deferred: cycle
+
+    grid = make_quasi_grid(cur_shape, op_shape, stride, padding, dilation)
+    factors = None
+    unit = (1,) * grid.rank
+    if (try_separable and stride == unit and dilation == unit
+            and separable_profitable(op_shape)
+            and _separable_ok(padding, pad_value, grid.rank)):
+        factors = separable_factors(W, op_shape)
+        if factors is not None:
+            factors = tuple(factors)
+    return LinearStep(grid=grid, weights=np.asarray(W, np.float32),
+                      kind=kind, factors=factors, fused_from=fused_from)
+
+
+def build_program(P: Pipe, opts: ExecOptions) -> PipelineProgram:
+    """Fuse a pipe graph into the minimum-pass step program."""
+    from repro.stats.local import window_weights_np  # deferred cycle
+
+    steps = []
+    cur_shape = P.spatial_shape
+    channels = 0
+    out_kind = "array"
+
+    # gather ops; compose adjacent linear stages greedily left-to-right
+    pending: Optional[LinearOp] = None
+    pending_fused = 0
+
+    def flush():
+        nonlocal pending, pending_fused, cur_shape, channels
+        if pending is None:
+            return
+        step = _plan_linear(
+            pending.op_shape, pending.weights, pending.kind, cur_shape,
+            pending.stride, pending.padding, pending.dilation,
+            opts.pad_value, pending_fused,
+            try_separable=(pending.kind == "bank" or pending_fused > 1))
+        steps.append(step)
+        cur_shape = step.grid.out_shape
+        if pending.kind == "bank":
+            channels = pending.K
+        pending = None
+        pending_fused = 0
+
+    for op in P.ops:
+        if isinstance(op, LinearOp):
+            if pending is not None and composable(pending, op):
+                comp = compose_weights(pending.weights, pending.op_shape,
+                                       op.weights, op.op_shape)
+                kind = "bank" if "bank" in (pending.kind, op.kind) \
+                    else "stencil"
+                merged = LinearOp(kind,
+                                  tuple(a + b - 1 for a, b in
+                                        zip(pending.op_shape, op.op_shape)),
+                                  comp, 1, "valid", 1)
+                pending_fused += 1
+                pending = merged
+            else:
+                flush()
+                pending = op
+                pending_fused = 1
+        elif isinstance(op, PointwiseOp):
+            flush()
+            steps.append(PointwiseStep(op.fn))
+        elif isinstance(op, ZscoreOp):
+            flush()
+            grid = make_quasi_grid(cur_shape, op.window, 1, "same", 1)
+            col = window_weights_np(op.window, op.wkind, op.sigma)
+            steps.append(ZscoreStep(grid=grid, window_col=col, eps=op.eps))
+        elif isinstance(op, MomentsOp):
+            flush()
+            if op.axis is not None and len(P.ops) > 1:
+                raise ValueError(
+                    "moments(axis=...) is only valid as a standalone "
+                    "reduction (pipe(x).moments(axis=...)); multi-stage "
+                    "pipelines reduce the spatial axes, keeping batch and "
+                    "channel dims")
+            steps.append(ReduceStep("moments", order=op.order,
+                                    axis=op.axis))
+            out_kind = "moments"
+        elif isinstance(op, HistOp):
+            flush()
+            steps.append(ReduceStep("hist", bins=op.bins, lo=op.lo,
+                                    hi=op.hi))
+            out_kind = "hist"
+        elif isinstance(op, CovOp):
+            flush()
+            steps.append(ReduceStep("cov"))
+            out_kind = "cov"
+        else:  # pragma: no cover — builder only produces the types above
+            raise TypeError(f"unknown pipe op {op!r}")
+    flush()
+
+    traversals = sum(1 for s in steps
+                     if isinstance(s, (LinearStep, ZscoreStep)))
+    passes = max(traversals, 1 if steps else 0)
+    melt_calls = sum(getattr(s, "melt_calls", 0) for s in steps)
+    return PipelineProgram(
+        steps=tuple(steps), passes=passes, melt_calls=melt_calls,
+        out_shape=tuple(cur_shape), channels=channels, out_kind=out_kind)

@@ -13,6 +13,11 @@ statistics feeding anisotropic filtering is the intended loop.
 Top-k PCA runs subspace (orthogonal) iteration on the *streamed*
 covariance — no pass over the raw data, so it composes with sharded /
 too-big-for-one-pass inputs by construction.
+
+Pipeline integration (DESIGN.md §11): ``pipe(x).gradient().cov()`` is the
+melt-native structure tensor — :func:`channel_cov` fused as a terminal
+reduction over the bank's channel axis, so the derivative field never
+exists as a standalone array.
 """
 from __future__ import annotations
 

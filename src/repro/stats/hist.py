@@ -9,6 +9,11 @@ are read off the merged CDF with within-bin linear interpolation.
 Edges are *static* pytree metadata (lo, hi, bins) — two histograms merge
 iff their grids are identical, enforced at merge time; counts are float32
 so the pytree stays psum/donation-friendly and exact to 2²⁴ counts/bin.
+
+Pipeline integration (DESIGN.md §11): ``pipe(x)....hist(bins, range=...)``
+fuses :func:`histogram_fixed` into the producing melt pass as a terminal
+reduction — the filtered intermediate never exists as a standalone array —
+and ``sharded_pipe_fn`` psums the counts across the mesh.
 """
 from __future__ import annotations
 

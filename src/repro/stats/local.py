@@ -22,16 +22,31 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.grid import normalize_tuple
-from repro.core.filters import gaussian_weights
 
 __all__ = [
     "window_weights",
+    "window_weights_np",
     "local_mean",
     "local_moments",
     "local_std",
     "zscore",
     "local_contrast_normalize",
 ]
+
+
+def window_weights_np(op_shape, kind: str = "box", sigma=None) -> np.ndarray:
+    """Pure-numpy :func:`window_weights` — plan-build safe under tracing."""
+    op_shape = tuple(int(k) for k in op_shape)
+    if kind == "box":
+        numel = int(np.prod(op_shape))
+        return np.full((numel,), 1.0 / numel, np.float32)
+    if kind == "gaussian":
+        if sigma is None:
+            sigma = max(k / 4.0 for k in op_shape)
+        from repro.core.filters import gaussian_weights_np
+
+        return gaussian_weights_np(op_shape, sigma)
+    raise ValueError(f"unknown window kind {kind!r}; expected box/gaussian")
 
 
 def window_weights(op_shape, kind: str = "box", sigma=None) -> jnp.ndarray:
@@ -42,15 +57,7 @@ def window_weights(op_shape, kind: str = "box", sigma=None) -> jnp.ndarray:
     crossover.  ``sigma`` (Gaussian only) follows
     ``hilbert.as_covariance``: scalar / per-dim vector / full covariance.
     """
-    op_shape = tuple(int(k) for k in op_shape)
-    if kind == "box":
-        numel = int(np.prod(op_shape))
-        return jnp.full((numel,), 1.0 / numel, jnp.float32)
-    if kind == "gaussian":
-        if sigma is None:
-            sigma = max(k / 4.0 for k in op_shape)
-        return gaussian_weights(op_shape, sigma)
-    raise ValueError(f"unknown window kind {kind!r}; expected box/gaussian")
+    return jnp.asarray(window_weights_np(op_shape, kind, sigma))
 
 
 def _window_op(x, window, batched) -> Tuple[int, ...]:
@@ -68,14 +75,18 @@ def local_mean(
     method: str = "auto",
     batched: bool = False,
 ) -> jax.Array:
-    """Windowed (weighted) mean — one K=1 bank pass."""
-    from repro.core.engine import apply_stencil_bank  # local, avoids cycle
+    """Windowed (weighted) mean — one K=1 bank pass.
+
+    Thin wrapper over a single-stage pipe graph (lowers back onto the
+    ``BankPlan`` cache, separable rewrite included).
+    """
+    from repro.pipe import pipe  # local, avoids cycle
 
     op = _window_op(x, window, batched)
     w = window_weights(op, weights, sigma)
-    out = apply_stencil_bank(x.astype(jnp.float32), op, w[:, None],
-                             pad_value=pad_value, method=method,
-                             batched=batched)
+    P = pipe.batched if batched else pipe
+    out = P(x.astype(jnp.float32)).bank(op, w[:, None]).run(
+        method=method, pad_value=pad_value)
     return out[..., 0].astype(x.dtype)
 
 
@@ -93,17 +104,18 @@ def local_moments(
 
     ``var = E_w[x²] − E_w[x]²`` under the normalized window — exact for any
     normalized weighting, clamped at 0 against float cancellation.  ``x``
-    and ``x²`` are stacked on the batch axis so the window pass runs once.
+    and ``x²`` are stacked on the batch axis so the window pass runs once
+    (a single-stage batched pipe graph riding the ``BankPlan`` cache).
     """
-    from repro.core.engine import apply_stencil_bank  # local, avoids cycle
+    from repro.pipe import pipe  # local, avoids cycle
 
     op = _window_op(x, window, batched)
     w = window_weights(op, weights, sigma)
     xf = x.astype(jnp.float32)
     stacked = (jnp.concatenate([xf, xf * xf], axis=0) if batched
                else jnp.stack([xf, xf * xf]))
-    out = apply_stencil_bank(stacked, op, w[:, None], pad_value=pad_value,
-                             method=method, batched=True)[..., 0]
+    out = pipe.batched(stacked).bank(op, w[:, None]).run(
+        method=method, pad_value=pad_value)[..., 0]
     b = x.shape[0] if batched else 1
     mean, ex2 = (out[:b], out[b:]) if batched else (out[0], out[1])
     var = jnp.maximum(ex2 - mean * mean, 0.0)

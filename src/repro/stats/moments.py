@@ -34,8 +34,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.plan import get_stats_plan, normalize_axes, resolve_method
-
 __all__ = [
     "MomentState",
     "merge_moments",
@@ -43,6 +41,7 @@ __all__ = [
     "moments",
     "stream_moments",
     "execute_moments",
+    "reduce_direct",
 ]
 
 #: lane width for packing a fully-global reduction into the kernel's
@@ -336,6 +335,30 @@ def _materialize_state(x, axes, kept, order: int = 4) -> MomentState:
     return jax.tree.map(lambda l: jnp.squeeze(l, axis=0), st)
 
 
+def reduce_direct(x, axes: Tuple[int, ...], order: int = 4) -> MomentState:
+    """The materialize oracle's reduction WITHOUT the trivial-op melt.
+
+    Used by fused pipelines (``repro.pipe``): a reduction fused into its
+    producing melt pass consumes the producer's value directly — the
+    trivial (1,)*rank melt of :func:`_materialize_state` is an identity
+    gather, so skipping it is numerically exact while the melt-call
+    counter stays put (the no-extra-melt contract of DESIGN.md §11).
+    """
+    axes, kept = _split_axes(x.ndim, tuple(axes))
+    kept_shape = tuple(x.shape[k] for k in kept)
+    if kept:
+        C = int(np.prod(kept_shape))
+        xcr = jnp.transpose(x, kept + axes).reshape(C, -1)
+        state = _direct_state(xcr, order)
+    else:
+        st = _direct_state(x.reshape(1, -1), order)
+        state = jax.tree.map(lambda l: jnp.squeeze(l, axis=0), st)
+    if order == 2:
+        z = jnp.zeros_like(state.m2)
+        state = MomentState(state.count, state.mean, state.m2, z, z, order=2)
+    return jax.tree.map(lambda l: l.reshape(kept_shape), state)
+
+
 def execute_moments(x, axes: Tuple[int, ...], method: str,
                     order: int = 4) -> MomentState:
     """Run one resolved moments problem — shared by plans and direct calls.
@@ -391,18 +414,18 @@ def moments(
     ``batched=True`` keeps dim 0 (a stack of independent tensors — one
     state per item, one dispatch).  ``order=2`` computes count/mean/M2
     only (M3/M4 stay zero; skewness/kurtosis are undefined) — the
-    streaming-variance fast path, roughly half the flops.  Concrete inputs
-    dispatch through the process-wide
-    :class:`~repro.core.plan.StatsPlan` cache; traced inputs execute
-    inline.
+    streaming-variance fast path, roughly half the flops.
+
+    Thin wrapper over a reduction-only pipe graph (DESIGN.md §11), which
+    lowers straight back onto the process-wide
+    :class:`~repro.core.plan.StatsPlan` cache for concrete inputs and
+    executes inline for traced ones — identical dispatch to the pre-pipe
+    implementation.
     """
-    if order not in (2, 4):
-        raise ValueError(f"order must be 2 or 4, got {order}")
-    if not isinstance(x, jax.core.Tracer):
-        plan = get_stats_plan(x.shape, x.dtype, axis, method, batched, order)
-        return plan(x)
-    axes = normalize_axes(x.ndim, axis, batched)
-    return execute_moments(x, axes, resolve_method(method), order)
+    from repro.pipe import pipe  # deferred: pipe builds on this module
+
+    P = pipe.batched(x) if batched else pipe(x)
+    return P.moments(order=order, axis=axis).run(method=method)
 
 
 def stream_moments(
