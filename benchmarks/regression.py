@@ -15,7 +15,15 @@ Failure conditions (exit 1):
   below its baseline;
 - a gated baseline row has no fresh counterpart (row names embed shapes —
   silently changing a benchmark shape must force a baseline refresh, not
-  skip the gate).
+  skip the gate);
+- a committed baseline file is unreadable (baselines are repo state the
+  gate exists to protect — corruption must not silently un-gate a
+  section).
+
+A baseline *section* that is absent from the fresh run — missing file,
+unreadable/truncated JSON, or an errored section (single ERROR row) — is
+a skip-with-warning: the section was not measured, so it neither gates
+nor crashes the rest of the comparison.
 
 Absolute µs drift is printed for context but never gates.
 
@@ -37,15 +45,41 @@ GATED_PREFIXES = (
     "bank/fused",          # fused operator bank vs K sequential calls
     "stats/var-streaming",  # streaming variance vs per-item two-pass loop
     "pipe/fused-chain",    # fused pipeline vs eager 3-call chain
+    "tiled/stream-var",    # out-of-core stream vs naive per-tile eager loop
 )
 
 _SPEEDUP = re.compile(r"speedup=([0-9.]+)x")
 
 
 def _load_rows(path):
-    with open(path) as fh:
-        payload = json.load(fh)
-    return {r["name"]: r for r in payload.get("rows", [])}
+    """``(rows_by_name, dropped)`` of one BENCH_*.json, or ``None`` when
+    the whole file is unusable.
+
+    A fresh run that crashed mid-section can leave a truncated/invalid
+    JSON or a schema-less payload behind; that means the section is
+    *absent from the fresh run* and must be reported as a skip-with-
+    warning, not crash the whole gate (every other section still gets
+    checked).  ``dropped`` counts nameless/malformed row entries — the
+    caller decides their severity (fresh side: warn; baseline side:
+    fail, since a silently-dropped baseline row would un-gate it).
+    """
+    try:
+        with open(path) as fh:
+            payload = json.load(fh)
+    except (OSError, json.JSONDecodeError):
+        return None
+    if not isinstance(payload, dict):
+        return None
+    rows = payload.get("rows", [])
+    good = {r["name"]: r for r in rows
+            if isinstance(r, dict) and "name" in r}
+    return good, len(rows) - len(good)
+
+
+def _section_errored(rows: dict) -> bool:
+    """A section that raised writes a single ERROR row (benchmarks.run):
+    its real rows are absent from the fresh run."""
+    return set(rows) == {"ERROR"}
 
 
 def _gated(name: str) -> bool:
@@ -67,8 +101,30 @@ def compare(baseline_dir: str, fresh_dir: str, tolerance: float):
         if not os.path.exists(fpath):
             report.append(f"SKIP {fname}: no fresh results (section not run)")
             continue
-        base = _load_rows(bpath)
-        fresh = _load_rows(fpath)
+        loaded = _load_rows(bpath)
+        if loaded is None or loaded[1]:
+            # the baseline is repo state the gate exists to protect —
+            # file- OR row-level corruption must fail loudly, never
+            # silently un-gate a section
+            what = ("unreadable" if loaded is None
+                    else f"has {loaded[1]} malformed row(s)")
+            failures.append(f"{fname}: baseline {what} — refresh "
+                            f"benchmarks/baselines/")
+            continue
+        base = loaded[0]
+        loaded = _load_rows(fpath)
+        if loaded is None:
+            report.append(f"SKIP {fname}: fresh results unreadable "
+                          f"(section absent from the fresh run)")
+            continue
+        fresh, dropped = loaded
+        if dropped:
+            report.append(f"WARN {fname}: {dropped} malformed fresh "
+                          f"row(s) ignored")
+        if _section_errored(fresh):
+            report.append(f"SKIP {fname}: section errored in the fresh run "
+                          f"({fresh['ERROR'].get('derived', '?')})")
+            continue
         for name, brow in sorted(base.items()):
             if not _gated(name):
                 continue
@@ -89,11 +145,15 @@ def compare(baseline_dir: str, fresh_dir: str, tolerance: float):
                 continue
             floor = b_sp * (1.0 - tolerance)
             verdict = "FAIL" if f_sp < floor else "ok"
-            du = (float(frow["us_per_call"]) /
-                  max(float(brow["us_per_call"]), 1e-9))
+            try:  # absolute-us drift is context only — never crash on it
+                du = (float(frow["us_per_call"]) /
+                      max(float(brow["us_per_call"]), 1e-9))
+                us_note = f"us x{du:.2f}"
+            except (KeyError, TypeError, ValueError):
+                us_note = "us n/a"
             report.append(
                 f"{verdict:4s} {name}: speedup {b_sp:.2f}x -> {f_sp:.2f}x "
-                f"(floor {floor:.2f}x); us x{du:.2f}")
+                f"(floor {floor:.2f}x); {us_note}")
             if f_sp < floor:
                 failures.append(
                     f"{name}: speedup regressed {b_sp:.2f}x -> {f_sp:.2f}x "

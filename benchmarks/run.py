@@ -15,6 +15,7 @@ Sections:
   bank/*      — operator-bank fused execution (DESIGN.md §9)
   stats/*     — streaming statistics engine (DESIGN.md §10)
   pipe/*      — lazy pipeline fusion (DESIGN.md §11)
+  tiled/*     — out-of-core tiled streaming (DESIGN.md §12)
   model/*     — smoke-config step latencies per architecture family
   serve/*     — prefill + decode latency (smoke config)
 """
@@ -170,6 +171,19 @@ def bench_pipe(quick=False):
     return rows
 
 
+def bench_tiled(quick=False):
+    """Out-of-core tiled-streaming rows: the shared ``headline_rows`` from
+    benchmarks.tiled (same shapes, interleaved timing — the smoke numbers
+    can't drift from the gated benchmark)."""
+    from benchmarks.tiled import FULL_SHAPE, QUICK_SHAPE, headline_rows
+
+    rng = np.random.RandomState(0)
+    shape = QUICK_SHAPE if quick else FULL_SHAPE
+    x = jnp.asarray(rng.randn(*shape).astype(np.float32))
+    rows, _ = headline_rows(x, reps=3 if quick else 5)
+    return rows
+
+
 def _git_rev() -> str:
     try:
         return subprocess.check_output(
@@ -209,7 +223,7 @@ def main(argv=None):
     ap.add_argument("--sections", default=None,
                     help="comma-separated subset of "
                          "fig6,fig7,stencil,filters,bank,stats,pipe,"
-                         "model,serve")
+                         "tiled,model,serve")
     args = ap.parse_args(argv)
 
     from benchmarks import paper_figs
@@ -225,6 +239,7 @@ def main(argv=None):
         "bank": lambda: bench_bank(args.quick),
         "stats": lambda: bench_stats(args.quick),
         "pipe": lambda: bench_pipe(args.quick),
+        "tiled": lambda: bench_tiled(args.quick),
         "model": lambda: bench_models(args.quick),
         "serve": lambda: bench_serving(args.quick),
     }

@@ -1,0 +1,179 @@
+"""Out-of-core tiled streaming: fused tile program vs naive per-tile loop.
+
+The tentpole claim (DESIGN.md §12): a reduction-terminated pipe graph
+streams a volume through halo-padded tiles — the full intermediate never
+exists — and still beats the obvious alternative, a **naive per-tile
+eager loop** that runs the 3-call chain (``apply_stencil`` →
+``apply_stencil_bank`` → ``moments``) on every tile and merges states.
+Both sides see identical tile geometry, so the gated ratio isolates what
+tiling *keeps* from PR 4's fusion work: one composed separable pass per
+tile instead of three dispatches and two tile-sized intermediates.
+
+- ``tiled/stream-var``  — streaming variance of ``gaussian('valid') →
+  gradient('valid') → moments(order=2)`` over a Hilbert-ordered tile
+  stream.  **Gated ≥2x** vs the naive per-tile eager loop.
+- ``tiled/assemble``    — array-valued tiled run (host-side assembly) vs
+  the in-memory run; context row, parity-not-speedup (the tiled side
+  pays H2D/D2H per tile — that is the price of not fitting in memory).
+
+It also *asserts* (always, not just ``--strict``):
+
+- the tiled stream never materializes ``M`` off the materialize oracle
+  (``melt_call_count`` must not move on lax/fused);
+- the plan cache traces once per tile-shape *class*, not per tile;
+- the streamed volume is ≥4x the per-tile patch working set (the run is
+  genuinely out-of-core-shaped, not one big tile);
+- streamed variance is allclose to the untiled run.
+
+    PYTHONPATH=src python -m benchmarks.tiled [--quick] [--strict]
+
+Prints ``name,us_per_call,derived`` CSV (harness contract).  ``--strict``
+exits nonzero when the stream misses the 2x target at the largest shape.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bank_stencil import _time_pair
+from repro.core import (
+    apply_stencil,
+    apply_stencil_bank,
+    clear_plan_cache,
+    melt_call_count,
+)
+from repro.core.filters import difference_stencils, gaussian_weights
+from repro.pipe import pipe
+from repro.stats import moments
+from repro.stats.moments import merge_moments
+
+TARGET_SPEEDUP = 2.0
+SIGMA = 1.5
+GAUSS_OP = 5
+QUICK_SHAPE = (32, 48, 48)
+FULL_SHAPE = (64, 96, 96)
+TILES = (4, 2, 2)
+
+
+def _naive_tile_loop(x, tp, w1, gw):
+    """The pre-tiled spelling: per tile, three eager dispatches and two
+    tile-sized intermediates, states merged across tiles."""
+    state = None
+    for spec in tp.specs:
+        sl = tuple(slice(l, h) for l, h in zip(spec.read_lo, spec.read_hi))
+        patch = x[sl]
+        y = apply_stencil(patch, GAUSS_OP, w1, padding="valid",
+                          method="auto")
+        D = apply_stencil_bank(y, 3, gw, padding="valid", method="auto")
+        crop = tuple(slice(a, b) for a, b in spec.crop)
+        st = moments(D[crop + (slice(None),)], axis=(0, 1, 2),
+                     method="auto", order=2)
+        state = st if state is None else merge_moments(state, st)
+    return state.variance
+
+
+def stream_pair(x, reps):
+    """Interleaved (t_tiled, t_naive) for the gated stream — shared with
+    ``benchmarks.run``'s tiled section so the two never drift."""
+    w1 = jnp.asarray(gaussian_weights((GAUSS_OP,) * 3, SIGMA))
+    gw = jnp.asarray(difference_stencils(3)[0], jnp.float32)
+    P = (pipe(x).gaussian(SIGMA, op_shape=GAUSS_OP, padding="valid")
+         .gradient(padding="valid").moments(order=2))
+    tp = P.plan_tiled(tiles=TILES, method="auto")
+    return _time_pair(
+        lambda: tp.run().variance,
+        lambda: _naive_tile_loop(x, tp, w1, gw),
+        reps=reps), tp
+
+
+def assemble_pair(x, reps):
+    """(t_tiled, t_inmemory) for an array-valued program — the price of
+    host-side assembly, context only."""
+    P = pipe(x).gaussian(SIGMA, op_shape=GAUSS_OP).gradient()
+    return _time_pair(
+        lambda: P.run(method="auto", pad_value="edge", tiles=TILES),
+        lambda: np.asarray(P.run(method="auto", pad_value="edge")),
+        reps=reps)
+
+
+def headline_rows(x, reps):
+    """ONE assembly shared by this CLI and ``benchmarks.run``'s tiled
+    section (names/derived strings and the BENCH_tiled.json trajectory
+    keyed on them can never drift).  Returns ``(rows, stream_speedup)``.
+    """
+    tag = "x".join(map(str, x.shape))
+    (t_tiled, t_naive), tp = stream_pair(x, reps)
+    speedup = t_naive / t_tiled
+    rows = [(f"tiled/stream-var/{tag}/t{tp.num_tiles}", t_tiled,
+             f"naive-loop={t_naive:.0f}us speedup={speedup:.2f}x")]
+    t_asm, t_mem = assemble_pair(x, reps)
+    rows.append((f"tiled/assemble/{tag}/t{np.prod(TILES)}", t_asm,
+                 f"in-memory={t_mem:.0f}us parity={t_mem / t_asm:.2f}x"))
+    return rows, speedup
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller tensor, fewer reps")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit nonzero when the tiled stream misses the "
+                         "2x target vs the naive per-tile eager loop (off "
+                         "by default: wall-clock gates flake on shared "
+                         "runners; the contract assertions always exit "
+                         "nonzero)")
+    args = ap.parse_args(argv)
+
+    shape = QUICK_SHAPE if args.quick else FULL_SHAPE
+    reps = 3 if args.quick else 5
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(*shape).astype(np.float32))
+
+    # -- contract assertions (DESIGN.md §12), always on --------------------
+    clear_plan_cache()
+    P = (pipe(x).gaussian(SIGMA, op_shape=GAUSS_OP, padding="valid")
+         .gradient(padding="valid").moments(order=2))
+    tp = P.plan_tiled(tiles=TILES, method="auto")
+    patch_elems = max(int(np.prod(s.patch_shape)) for s in tp.specs)
+    if x.size < 4 * patch_elems:
+        print(f"FATAL,volume {x.size} not >=4x the tile working set "
+              f"{patch_elems} — the benchmark is not out-of-core-shaped")
+        return 2
+    before = melt_call_count()
+    st = tp.run()
+    if melt_call_count() != before:
+        print(f"FATAL,tiled stream materialized M "
+              f"({melt_call_count() - before} melt calls)")
+        return 2
+    traces = sum(tp._plan_for(s).stats()["traces"]
+                 for s in {s.class_key(): s for s in tp.specs}.values())
+    if traces != tp.num_classes:
+        print(f"FATAL,{traces} traces for {tp.num_classes} tile classes "
+              f"({tp.num_tiles} tiles) — per-tile retracing")
+        return 2
+    ref = P.run(method="auto")
+    if not np.allclose(np.asarray(st.variance), np.asarray(ref.variance),
+                       rtol=1e-5, atol=1e-7):
+        print("FATAL,tiled streamed variance diverged from the untiled run")
+        return 2
+
+    rows, speedup = headline_rows(x, reps)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    print(f"tile_classes,{tp.num_classes},{tp.num_tiles} tiles "
+          f"{'x'.join(map(str, tp.tile_counts))}")
+    print("melt_free,tiled stream,PASS 0 melt calls")
+
+    ok = speedup >= TARGET_SPEEDUP
+    print(f"headline,tiled-stream-vs-naive-loop,"
+          f"{'PASS' if ok else 'WARN'} {speedup:.2f}x "
+          f"(target {TARGET_SPEEDUP:.1f}x)")
+    return 0 if (ok or not args.strict) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

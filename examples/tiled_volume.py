@@ -1,0 +1,81 @@
+"""Out-of-core tiled execution end-to-end (DESIGN.md §12).
+
+A synthetic "whole-slide" volume lives in *host* memory as a plain numpy
+array — the device never holds more than one halo-padded tile — and one
+pipe graph runs over it three ways:
+
+1. a reduction-terminated program under a **memory budget**: the
+   scheduler picks tile counts so a tile's working set fits, streams
+   tiles in Hilbert order with double-buffered prefetch, and folds
+   per-tile ``MomentState``s through the merge algebra — the filtered
+   intermediate never exists anywhere;
+2. the same program with an explicit ``tiles=`` grid, showing the
+   tile-shape *classes*: many tiles, a handful of traced executors;
+3. an array-valued program whose tiles assemble into a host-side output
+   buffer, bit-identical to the in-memory run under 'reflect' padding.
+
+    PYTHONPATH=src python examples/tiled_volume.py
+"""
+import numpy as np
+
+from repro.core import melt_call_count
+from repro.pipe import pipe
+
+
+def synthetic_slide(rng, shape=(96, 128, 128)):
+    """Smooth tissue background + speckle + a few bright nuclei."""
+    z, y, x = np.meshgrid(*(np.linspace(-1, 1, s) for s in shape),
+                          indexing="ij")
+    tissue = 90.0 + 35.0 * np.exp(-(x**2 + 0.5 * y**2 + z**2) / 0.4)
+    speckle = 1.0 + 0.06 * rng.randn(*shape)
+    nuclei = sum(
+        50.0 * np.exp(-((x - cx)**2 + (y - cy)**2 + (z - cz)**2) / 0.004)
+        for cx, cy, cz in [(0.3, -0.2, 0.1), (-0.4, 0.4, -0.3),
+                           (0.1, 0.6, 0.5)])
+    return (tissue * speckle + nuclei).astype(np.float32)  # HOST memory
+
+
+def main():
+    rng = np.random.RandomState(0)
+    vol = synthetic_slide(rng)
+    vol_mb = vol.nbytes / 2**20
+    print(f"volume: {vol.shape} float32, {vol_mb:.0f} MiB, host-resident")
+
+    # --- 1. memory-budget streaming: gradient-energy statistics ----------
+    # pretend the accelerator only has ~1/8 of the volume to spare
+    budget = vol.nbytes // 8
+    P = (pipe(vol).gaussian(1.5, op_shape=5, padding="valid")
+         .gradient(padding="valid").moments(order=2))
+    tp = P.plan_tiled(memory_budget=budget, method="auto")
+    print(f"\nbudget {budget / 2**20:.0f} MiB -> "
+          f"{tp.num_tiles} tiles ({'x'.join(map(str, tp.tile_counts))}), "
+          f"{tp.num_classes} shape classes")
+    print(f"schedule: {tp.describe()}")
+    before = melt_call_count()
+    st = tp.run()
+    print(f"streamed gradient stats over {int(np.sum(np.asarray(st.count))):,} "
+          f"samples: per-channel std {np.asarray(st.std).round(3)}")
+    print(f"melt calls during the stream: {melt_call_count() - before} "
+          f"(the intermediate never materialized)")
+
+    # --- 2. explicit tiles: many tiles, few traces ------------------------
+    tp2 = P.plan_tiled(tiles=(6, 2, 2), method="auto")
+    st2 = tp2.run()
+    drift = float(np.max(np.abs(np.asarray(st2.variance)
+                                - np.asarray(st.variance))))
+    print(f"\nexplicit 6x2x2 tiling: {tp2.num_tiles} tiles stream through "
+          f"{tp2.num_classes} traced executors")
+    print(f"tiling-invariance: max |var drift| vs budget run = {drift:.2e}")
+
+    # --- 3. array output: host-side assembly, bit-identical --------------
+    crop = vol[:24, :48, :48]
+    Pa = pipe(crop).zscore(5).gaussian(1.0, op_shape=3)
+    tiled_out = Pa.run(method="auto", pad_value="reflect", tiles=(3, 2, 2))
+    ref = np.asarray(Pa.run(method="auto", pad_value="reflect"))
+    print(f"\narray-valued program on a {crop.shape} crop: "
+          f"assembled == in-memory: {np.array_equal(tiled_out, ref)} "
+          f"(reflect padding, host-side {type(tiled_out).__name__} out)")
+
+
+if __name__ == "__main__":
+    main()

@@ -42,6 +42,8 @@ __all__ = [
     "tree_merge_moments",
     "sharded_moments_fn",
     "sharded_histogram_fn",
+    "tile_batch_sharding",
+    "put_tile_batch",
 ]
 
 
@@ -314,6 +316,41 @@ def sharded_pipe_fn(
         local_fn, mesh=mesh, in_specs=(in_spec,), out_specs=out_spec,
         check_rep=False,
     )
+
+
+# -- out-of-core tile streams (DESIGN.md §12) --------------------------------
+#
+# Tiled execution bakes every halo into the tile's own read region, so a
+# stacked group of same-class tiles is *embarrassingly parallel*: sharding
+# the stack axis over the mesh needs no exchange at all — the one coupling
+# cost left is the O(state) reduction merge, which the stats combiners
+# above already provide.  ``repro.pipe.tiled`` stacks same-class tiles and
+# places them here; XLA partitions the jitted per-class executor along the
+# stack axis (batch×slab: a batched graph would additionally shard its own
+# batch dim — the tile stream claims the slab-like axis).
+
+
+def tile_batch_sharding(mesh: Mesh, axis_name: str, ndim: int
+                        ) -> NamedSharding:
+    """Sharding for a stacked tile batch: dim 0 = tile-stack axis over
+    ``axis_name``, everything else replicated per shard."""
+    return NamedSharding(mesh, P(axis_name, *([None] * (ndim - 1))))
+
+
+def put_tile_batch(batch, mesh: Mesh, axis_name: str):
+    """Place a host-side stacked tile batch onto the mesh, stack-sharded.
+
+    The stack extent must divide the mesh axis (the tiled scheduler groups
+    tiles in multiples of the axis size; ragged remainders run unsharded).
+    """
+    n = batch.shape[0]
+    ways = mesh.shape[axis_name]
+    if n % ways:
+        raise ValueError(
+            f"tile-batch extent {n} not divisible by mesh axis "
+            f"{axis_name!r} of size {ways}")
+    return jax.device_put(batch, tile_batch_sharding(mesh, axis_name,
+                                                     batch.ndim))
 
 
 # -- distributed statistics (DESIGN.md §10) ---------------------------------

@@ -30,6 +30,9 @@ __all__ = [
     "grid_shape",
     "neighborhood_offsets",
     "make_quasi_grid",
+    "stage_footprint",
+    "compose_footprints",
+    "tile_read_region",
 ]
 
 #: padding modes accepted as string ``pad_value``s (jnp.pad mode names)
@@ -186,6 +189,71 @@ class QuasiGrid:
             hi = (k - 1 - (k - 1) // 2) * d
             out.append((lo, hi))
         return tuple(out)
+
+
+def stage_footprint(grid: "QuasiGrid") -> Tuple[Tuple[int, int], ...]:
+    """Per-dim (lo, hi) *input reach* of one stage around an output point.
+
+    'same' output ``g`` reads unpadded input ``[g·s − lo, g·s + hi]`` (the
+    halo); 'valid' output ``g`` reads ``[g·s, g·s + eff − 1]`` — so its
+    reach is ``(0, eff − 1)``.  This is the per-stage ingredient of the
+    tiled scheduler's footprint composition (DESIGN.md §12).
+    """
+    out = []
+    for d in range(grid.rank):
+        if grid.padding == "same":
+            out.append(grid.halo()[d])
+        else:
+            eff = (grid.op_shape[d] - 1) * grid.dilation[d] + 1
+            out.append((0, eff - 1))
+    return tuple(out)
+
+
+def compose_footprints(grids: Sequence["QuasiGrid"]
+                       ) -> Tuple[Tuple[int, int, int], ...]:
+    """Total input footprint of a stage chain, per dim as ``(α, β, γ)``.
+
+    An output tile ``[a, b)`` of the composed program needs input coords
+    ``[α·a − β, α·(b−1) + γ + 1)`` (before clamping to the volume).  The
+    affine form is exact for any mix of 'same'/'valid' stages, strides and
+    dilations: pre-composing a stage with stride ``s`` and reach
+    ``(lo, hi)`` maps ``(α, β, γ) → (s·α, s·β + lo, s·γ + hi)``.  Stride-1
+    chains degenerate to ``α = 1`` with ``(β, γ)`` the classic halo sums.
+    """
+    if not grids:
+        return ()
+    rank = grids[0].rank
+    abg = [(1, 0, 0)] * rank
+    for g in reversed(list(grids)):
+        reach = stage_footprint(g)
+        abg = [
+            (a * g.stride[d], g.stride[d] * b + reach[d][0],
+             g.stride[d] * c + reach[d][1])
+            for d, (a, b, c) in enumerate(abg)
+        ]
+    return tuple(abg)
+
+
+def tile_read_region(
+    footprint: Sequence[Tuple[int, int, int]],
+    tile_lo: Sequence[int],
+    tile_hi: Sequence[int],
+    in_shape: Sequence[int],
+) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """Clamped input region an output tile ``[tile_lo, tile_hi)`` reads.
+
+    Applies the :func:`compose_footprints` affine per dim and clamps to the
+    volume — the out-of-volume remainder is what the per-tile executor
+    re-creates with the pad mode (only ever at true volume boundaries, so
+    tiled results match the in-memory run under every pad mode).
+    """
+    lo, hi = [], []
+    for (a, b, c), tl, th, n in zip(footprint, tile_lo, tile_hi, in_shape):
+        if th <= tl:
+            raise ValueError(f"empty tile [{tl}, {th})")
+        lo.append(max(0, a * tl - b))
+        hi.append(min(n, a * (th - 1) + c + 1))
+    return tuple(lo), tuple(hi)
 
 
 def make_quasi_grid(

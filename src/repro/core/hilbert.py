@@ -1,9 +1,15 @@
-"""Hilbert-space generalizations (paper §2.2, Table 2).
+"""Hilbert-space generalizations (paper §2.2, Table 2) + Hilbert-curve order.
 
 Generic, rank-agnostic forms of concepts whose low-dimensional versions are
 degenerate special cases: the multivariate Gaussian (+ gradient), and the
 n-sphere operator footprint (rotation-invariant structuring elements: the
 line segment, disc and sphere are all one concept here).
+
+The module also hosts the *other* Hilbert: :func:`hilbert_order` walks an
+N-D box of tile indices along the Hilbert space-filling curve, the tile
+schedule of the out-of-core executor (DESIGN.md §12) — consecutive tiles
+share faces, so streamed halo reads stay in whatever cache layer holds the
+previous tile's neighbourhood.
 """
 from __future__ import annotations
 
@@ -15,6 +21,8 @@ __all__ = [
     "multivariate_gaussian",
     "multivariate_gaussian_grad",
     "n_sphere_mask",
+    "hilbert_index",
+    "hilbert_order",
 ]
 
 
@@ -56,6 +64,72 @@ def multivariate_gaussian_grad(x, mu, cov):
     prec = jnp.linalg.inv(jnp.asarray(cov))
     p = multivariate_gaussian(x, mu, cov)
     return -jnp.einsum("ij,...j->...i", prec, diff) * p[..., None]
+
+
+def hilbert_index(coords: np.ndarray, bits: int) -> np.ndarray:
+    """Hilbert-curve distance of integer points in ``[0, 2**bits)**d``.
+
+    ``coords`` is (..., d); returns int64 distances in ``[0, 2**(bits·d))``.
+    Vectorized Skilling transform (axes → transposed Gray code) followed by
+    bit interleaving — pure numpy, host-side schedule math only.
+    """
+    X = np.array(coords, dtype=np.int64, copy=True)
+    if X.ndim == 1:
+        X = X[None, :]
+    d = X.shape[-1]
+    if bits == 0 or d == 0:
+        return np.zeros(X.shape[:-1], dtype=np.int64)
+    if np.any(X < 0) or np.any(X >= (1 << bits)):
+        raise ValueError(f"coords out of range for bits={bits}")
+    # Skilling, "Programming the Hilbert curve" (AIP 2004): AxesToTranspose
+    M = 1 << (bits - 1)
+    Q = M
+    while Q > 1:
+        P = Q - 1
+        for i in range(d):
+            hit = (X[..., i] & Q).astype(bool)
+            X[..., 0] ^= np.where(hit, P, 0)              # invert low bits
+            t = np.where(hit, 0, (X[..., 0] ^ X[..., i]) & P)
+            X[..., 0] ^= t                                 # exchange
+            X[..., i] ^= t
+        Q >>= 1
+    for i in range(1, d):                                  # Gray encode
+        X[..., i] ^= X[..., i - 1]
+    t = np.zeros(X.shape[:-1], dtype=np.int64)
+    Q = M
+    while Q > 1:
+        t = np.where(X[..., d - 1] & Q, t ^ (Q - 1), t)
+        Q >>= 1
+    for i in range(d):
+        X[..., i] ^= t
+    # transposed bits → one distance: bit b of axis i lands at position
+    # (bits-1-b)*d + i from the MSB end
+    out = np.zeros(X.shape[:-1], dtype=np.int64)
+    for b in range(bits - 1, -1, -1):
+        for i in range(d):
+            out = (out << 1) | ((X[..., i] >> b) & 1)
+    return out
+
+
+def hilbert_order(counts) -> np.ndarray:
+    """All multi-indices of an N-D box, sorted along the Hilbert curve.
+
+    ``counts`` is the per-dim tile grid shape; returns an int array
+    ``(prod(counts), len(counts))`` that is a *permutation* of
+    ``np.ndindex(*counts)`` (the conformance tests pin this).  Non-power-
+    of-two boxes are handled by ordering inside the enclosing 2^b cube and
+    keeping in-box points — locality degrades gracefully at the clipped
+    faces but the schedule stays a permutation.  Rank 1 is the identity.
+    """
+    counts = tuple(int(c) for c in counts)
+    if any(c <= 0 for c in counts):
+        raise ValueError(f"tile counts must be positive, got {counts}")
+    grids = np.meshgrid(*[np.arange(c) for c in counts], indexing="ij")
+    pts = np.stack([g.ravel() for g in grids], axis=-1)
+    if len(counts) == 1 or max(counts) == 1:
+        return pts
+    bits = int(max(counts) - 1).bit_length()
+    return pts[np.argsort(hilbert_index(pts, bits), kind="stable")]
 
 
 def n_sphere_mask(op_shape, dilation=None) -> np.ndarray:

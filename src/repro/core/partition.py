@@ -25,6 +25,8 @@ __all__ = [
     "validate_partition",
     "permutation_matrix",
     "plan_slab_partition",
+    "plan_tile_partition",
+    "validate_tile_partition",
 ]
 
 
@@ -77,6 +79,50 @@ def permutation_matrix(ranges: Sequence[Tuple[int, int]], num_rows: int) -> np.n
     A[order, np.arange(num_rows)] = 1
     # row i of M is row position[i] of the stack:
     return A
+
+
+def plan_tile_partition(out_shape: Sequence[int], tile_counts: Sequence[int]):
+    """N-D box partition of an output grid into per-dim contiguous ranges.
+
+    The N-D generalization of :func:`plan_row_partition` (each dim is an
+    independent §2.4 row partition, so the boxes inherit its conditions:
+    non-empty, pairwise disjoint, covering).  Returns
+    ``(per_dim_ranges, boxes)`` where ``per_dim_ranges[d]`` is the
+    ``plan_row_partition`` of dim ``d`` and ``boxes`` lists every tile as
+    ``(lo_tuple, hi_tuple)`` in row-major order of the tile grid — the
+    unit of the out-of-core scheduler (DESIGN.md §12).  Counts exceeding a
+    dim's extent are clamped (empty tiles are never planned).
+    """
+    out_shape = tuple(int(s) for s in out_shape)
+    tile_counts = tuple(int(c) for c in tile_counts)
+    if len(tile_counts) != len(out_shape):
+        raise ValueError(
+            f"tile_counts must have length {len(out_shape)}, "
+            f"got {len(tile_counts)}")
+    per_dim = [plan_row_partition(n, max(1, c))
+               for n, c in zip(out_shape, tile_counts)]
+    boxes = []
+    for idx in np.ndindex(*[len(r) for r in per_dim]):
+        lo = tuple(per_dim[d][i][0] for d, i in enumerate(idx))
+        hi = tuple(per_dim[d][i][1] for d, i in enumerate(idx))
+        boxes.append((lo, hi))
+    return per_dim, boxes
+
+
+def validate_tile_partition(boxes, out_shape: Sequence[int]) -> bool:
+    """Check the §2.4 conditions for an N-D box partition: every output
+    point covered exactly once by non-empty boxes (tests' oracle)."""
+    out_shape = tuple(int(s) for s in out_shape)
+    if not boxes:
+        return False
+    covered = np.zeros(out_shape, dtype=np.int64)
+    for lo, hi in boxes:
+        if any(h <= l for l, h in zip(lo, hi)):
+            return False
+        if any(l < 0 or h > n for l, h, n in zip(lo, hi, out_shape)):
+            return False
+        covered[tuple(slice(l, h) for l, h in zip(lo, hi))] += 1
+    return bool((covered == 1).all())
 
 
 def plan_slab_partition(grid: QuasiGrid, num_shards: int):

@@ -46,10 +46,12 @@ __all__ = [
     "BankPlan",
     "StatsPlan",
     "PipePlan",
+    "TilePlan",
     "get_plan",
     "get_bank_plan",
     "get_stats_plan",
     "get_pipe_plan",
+    "get_tile_plan",
     "normalize_axes",
     "separable_eligible",
     "plan_cache_stats",
@@ -571,6 +573,43 @@ def get_pipe_plan(key: tuple, build) -> PipePlan:
     (and its hit/miss/eviction counters) with stencil/bank/stats plans.
     """
     return _intern(("pipe",) + tuple(key), build)
+
+
+class TilePlan(PipePlan):
+    """A :class:`PipePlan` specialized to one *tile-shape class* of an
+    out-of-core run (DESIGN.md §12).
+
+    A tiled execution streams many tiles through few plans: every tile
+    whose geometry class — patch shape, boundary-pad widths, alignment and
+    crop — matches an interned ``TilePlan`` reuses its jitted executor, so
+    the trace count scales with the number of classes (≤ 3 per dim for
+    uniform tilings: first / interior / last), never with the number of
+    tiles.  ``spec`` keeps the class geometry inspectable;
+    ``tile_batch`` > 0 marks the stacked variant that executes a whole
+    same-class tile group in one (optionally mesh-sharded) dispatch.
+    """
+
+    __slots__ = ("spec", "tile_batch")
+
+    def __init__(self, key, in_shape, dtype, opts, steps, passes, melt_calls,
+                 run_fn, spec=None, tile_batch: int = 0):
+        self.spec = spec
+        self.tile_batch = tile_batch
+        super().__init__(key, in_shape, dtype, opts, steps, passes,
+                         melt_calls, run_fn)
+
+    def __repr__(self):
+        return (f"TilePlan(patch={self.in_shape}, steps={len(self.steps)}, "
+                f"tile_batch={self.tile_batch}, "
+                f"method={self.opts.method!r})")
+
+
+def get_tile_plan(key: tuple, build) -> TilePlan:
+    """Intern a tile-class plan under ``("tiled", *key)`` in the shared
+    LRU cache — tiled execution is served (and evicted) by the same
+    machinery as every other plan kind, and the global hit/miss counters
+    are what the one-trace-per-class tests read."""
+    return _intern(("tiled",) + tuple(key), build)
 
 
 def plan_cache_stats() -> Dict[str, int]:

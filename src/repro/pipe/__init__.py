@@ -19,17 +19,22 @@ graphs lower straight onto the legacy ``StencilPlan``/``BankPlan``/
 ``StatsPlan`` caches — the eager entry points (``apply_stencil``,
 ``filters.*``, ``stats.*``) are thin wrappers over these graphs.
 """
-from repro.core.plan import ExecOptions, PipePlan
+from repro.core.plan import ExecOptions, PipePlan, TilePlan
 from repro.pipe.compile import build_program_for
 from repro.pipe.fuse import PipelineProgram, compose_weights
 from repro.pipe.graph import Pipe, pipe
+from repro.pipe.tiled import TiledProgram, plan_tiled, run_tiled
 
 __all__ = [
     "pipe",
     "Pipe",
     "PipePlan",
+    "TilePlan",
     "PipelineProgram",
+    "TiledProgram",
     "ExecOptions",
     "compose_weights",
     "build_program_for",
+    "plan_tiled",
+    "run_tiled",
 ]

@@ -13,6 +13,12 @@ points rather than a parallel engine:
 - **Multi-stage graphs** run the fusing planner (``repro.pipe.fuse``) and
   intern a :class:`~repro.core.plan.PipePlan` whose jitted executor walks
   the fused steps — one compiled computation for the whole chain.
+- **Out-of-core graphs** (``Pipe.run(tiles=…/memory_budget=…)``) are a
+  third tier layered on top: ``repro.pipe.tiled`` re-uses this module's
+  step executors — ``_apply_reduce`` for fused terminal reductions and
+  ``_check_out_dtype`` for option validation are shared contracts, not
+  private details — while swapping the 'same' grids for per-tile
+  pad-at-boundary + 'valid' execution (DESIGN.md §12).
 
 Traced inputs execute inline (no interning), matching the engine-wide
 convention.

@@ -339,7 +339,9 @@ class Pipe:
                                           pad_value=pad_value,
                                           out_dtype=out_dtype)
 
-    def run(self, method: str = "auto", pad_value="edge", out_dtype=None):
+    def run(self, method: str = "auto", pad_value="edge", out_dtype=None,
+            *, tiles=None, memory_budget=None, tile_order: str = "hilbert",
+            mesh=None, axis_name=None):
         """Compile through the planner and execute.
 
         Single-op graphs lower straight onto the legacy plan kinds
@@ -347,11 +349,46 @@ class Pipe:
         a strict superset of the eager entry points, not a parallel
         engine.  Multi-stage graphs intern a
         :class:`~repro.core.plan.PipePlan`.
+
+        With ``tiles=`` (int or per-dim counts) or ``memory_budget=``
+        (bytes), the program runs *out-of-core* (DESIGN.md §12): the
+        input streams through halo-padded tiles, reductions fold through
+        the merge algebra, and array outputs assemble host-side — results
+        match the in-memory run under every pad mode.  ``mesh``/
+        ``axis_name`` shard the tile stream across devices.
         """
         from repro.pipe import compile as _compile
 
+        if tiles is not None or memory_budget is not None:
+            from repro.pipe.tiled import run_tiled
+
+            return run_tiled(self, tiles=tiles,
+                             memory_budget=memory_budget, method=method,
+                             pad_value=pad_value, out_dtype=out_dtype,
+                             order=tile_order, mesh=mesh,
+                             axis_name=axis_name)
+        if mesh is not None or axis_name is not None:
+            raise ValueError("mesh=/axis_name= shard the *tiled* stream; "
+                             "pass tiles= or memory_budget= too (or use "
+                             "distributed.sharded_pipe_fn for slab "
+                             "sharding)")
+        if tile_order != "hilbert":
+            raise ValueError("tile_order only applies to tiled execution; "
+                             "pass tiles= or memory_budget= too")
         return _compile.run(self, method=method, pad_value=pad_value,
                             out_dtype=out_dtype)
+
+    def plan_tiled(self, *, tiles=None, memory_budget=None,
+                   method: str = "auto", pad_value="edge", out_dtype=None,
+                   tile_order: str = "hilbert"):
+        """Compile the out-of-core schedule without running it — the
+        :class:`~repro.pipe.tiled.TiledProgram` (tile boxes, shape
+        classes, melt/trace accounting)."""
+        from repro.pipe.tiled import plan_tiled as _plan_tiled
+
+        return _plan_tiled(self, tiles=tiles, memory_budget=memory_budget,
+                           method=method, pad_value=pad_value,
+                           out_dtype=out_dtype, order=tile_order)
 
     def grad(self, method: str = "auto", pad_value="edge"):
         """∂ sum(pipeline(x)) / ∂x — the pipeline's VJP with a ones

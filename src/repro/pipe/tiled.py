@@ -1,0 +1,596 @@
+"""Out-of-core tiled execution for pipe graphs (DESIGN.md §12).
+
+The paper's space-completeness argument — high-dimensional arrays
+decompose into dimension-independent pieces that can be processed
+piecewise and merged exactly — applied to volumes larger than device
+memory: a compiled pipe program runs as a stream of halo-padded tiles.
+
+The scheme, per tile of the program's *output* grid:
+
+1. **Backward footprint** — :func:`repro.core.grid.compose_footprints`
+   folds every linear stage's reach into one per-dim affine
+   ``(α, β, γ)``; the tile's input read region is
+   ``[α·a − β, α·(b−1) + γ + 1)`` clamped to the volume
+   (:func:`~repro.core.grid.tile_read_region`).  Only the clamped-off
+   remainder is ever re-created with the pad mode, and only at true
+   volume boundaries — so tiled results match the in-memory run under
+   every pad mode (zero / constant / edge / reflect), not just zero.
+2. **Forward simulation** — each 'same' stage runs as *pad-if-at-boundary
+   + 'valid'* over the shrinking patch (the same rewrite the distributed
+   slab engine uses for its halo-exchanged dim, here applied to every
+   dim); 'valid' stages run as-is.  Interior halos are real neighbour
+   data carried by the read region, never padding.
+3. **Crop & merge** — the final patch is cropped to exactly the tile's
+   output box.  Array-valued programs assemble tiles into a host-side
+   buffer; reduction-terminated programs fold per-tile
+   ``MomentState`` / ``Histogram`` / ``CovState`` through the PR-3 merge
+   algebra (a streaming binary-counter fold ⇒ balanced merge tree, O(log
+   #tiles) live states) — the full intermediate never exists anywhere.
+
+Tiles stream in Hilbert order (:func:`repro.core.hilbert.hilbert_order`)
+with a double-buffered ``jax.device_put`` prefetch, and every tile is
+served by a :class:`~repro.core.plan.TilePlan` interned per *tile-shape
+class* — interior tiles of a uniform tiling share one trace; edge tiles
+add at most 3^rank − 1 more.  With ``mesh=``/``axis_name=``, same-class
+tiles stack in groups of the mesh-axis size and shard across devices
+(:func:`repro.core.distributed.put_tile_batch`): halos are baked into
+each patch, so the stream is embarrassingly parallel and the only
+coupling cost is the O(state) reduction merge.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.grid import (
+    compose_footprints,
+    make_quasi_grid,
+    tile_read_region,
+)
+from repro.core.hilbert import hilbert_order
+from repro.core.melt import pad_array
+from repro.core.partition import plan_tile_partition
+from repro.core.plan import ExecOptions, TilePlan, get_tile_plan
+from repro.pipe.fuse import (
+    LinearStep,
+    PipelineProgram,
+    PointwiseStep,
+    ReduceStep,
+    ZscoreStep,
+    build_program,
+)
+from repro.pipe.graph import MomentsOp, Pipe
+
+__all__ = ["TileSpec", "TiledProgram", "plan_tiled", "run_tiled"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TileSpec:
+    """Static geometry of one tile: placement + the per-stage pad/crop
+    schedule the executor needs.
+
+    ``class_key()`` drops the placement — tiles sharing it execute an
+    identical trace, which is what lets a stream of many tiles run on a
+    handful of interned :class:`~repro.core.plan.TilePlan` executors.
+    """
+
+    out_lo: Tuple[int, ...]     # tile's box on the program output grid
+    out_hi: Tuple[int, ...]
+    read_lo: Tuple[int, ...]    # clamped input region the tile reads
+    read_hi: Tuple[int, ...]
+    stage_pads: Tuple           # per linear/zscore step: per-dim (lo, hi)
+    crop: Tuple                 # per-dim (start, stop) into the final patch
+
+    @property
+    def patch_shape(self) -> Tuple[int, ...]:
+        return tuple(h - l for l, h in zip(self.read_lo, self.read_hi))
+
+    def class_key(self) -> tuple:
+        return (self.patch_shape, self.stage_pads, self.crop)
+
+
+def _linear_geoms(program: PipelineProgram):
+    """The data-traversing steps, in execution order (each consumes one
+    entry of a TileSpec's ``stage_pads``)."""
+    return [s for s in program.steps
+            if isinstance(s, (LinearStep, ZscoreStep))]
+
+
+def _tile_spec(geoms, footprint, out_lo, out_hi, in_shape, pad_value
+               ) -> TileSpec:
+    """Forward-simulate one tile's patch through every stage (pure shape
+    math): where the patch sits in each intermediate's global coordinates,
+    which boundary pads apply, and the final crop."""
+    read_lo, read_hi = tile_read_region(footprint, out_lo, out_hi, in_shape)
+    c_lo, c_hi = list(read_lo), list(read_hi)
+    stage_pads = []
+    for step in geoms:
+        g = step.grid
+        pads, nlo, nhi = [], [], []
+        for d in range(g.rank):
+            s = g.stride[d]
+            eff = (g.op_shape[d] - 1) * g.dilation[d] + 1
+            if g.padding == "same":
+                at_lo = c_lo[d] == 0
+                at_hi = c_hi[d] == g.in_shape[d]
+                pad_l = g.pad_lo[d] if at_lo else 0
+                pad_r = g.pad_hi[d] if at_hi else 0
+                p = 0 if at_lo else c_lo[d] + g.pad_lo[d]
+            else:
+                pad_l = pad_r = 0
+                p = c_lo[d]
+            width = c_hi[d] - c_lo[d]
+            if pad_value == "reflect" and max(pad_l, pad_r) > width - 1:
+                raise ValueError(
+                    f"tile patch extent {width} along dim {d} is too small "
+                    f"for reflect padding of width {max(pad_l, pad_r)}; "
+                    f"use fewer tiles (or a larger memory budget) along "
+                    f"this dim")
+            if p % s:  # pragma: no cover — the footprint algebra
+                raise AssertionError(  # guarantees stride alignment
+                    "internal: tile patch misaligned with stage stride")
+            plen = width + pad_l + pad_r
+            n_out = (plen - eff) // s + 1
+            if n_out <= 0:
+                raise ValueError(
+                    f"tile patch extent {plen} along dim {d} is smaller "
+                    f"than the stage's effective operator {eff}; use fewer "
+                    f"tiles along this dim")
+            pads.append((pad_l, pad_r))
+            nlo.append(p // s)
+            nhi.append(p // s + n_out)
+        stage_pads.append(tuple(pads))
+        c_lo, c_hi = nlo, nhi
+    for d, (a, b) in enumerate(zip(out_lo, out_hi)):
+        if not (c_lo[d] <= a and c_hi[d] >= b):  # pragma: no cover
+            raise AssertionError(
+                f"internal: tile patch [{c_lo[d]}, {c_hi[d]}) does not "
+                f"cover output box [{a}, {b}) along dim {d}")
+    crop = tuple((a - cl, b - cl)
+                 for a, b, cl in zip(out_lo, out_hi, c_lo))
+    return TileSpec(tuple(out_lo), tuple(out_hi), read_lo, read_hi,
+                    tuple(stage_pads), crop)
+
+
+# -- per-tile execution ------------------------------------------------------
+
+
+def _crop(h, crop, batched: bool, channels: int):
+    sl = (([slice(None)] if batched else [])
+          + [slice(a, b) for a, b in crop]
+          + ([slice(None)] if channels else []))
+    return h[tuple(sl)]
+
+
+def _tile_linear(h, step: LinearStep, dim_pads, opts: ExecOptions,
+                 batched: bool):
+    """One fused linear group on a patch: boundary pads (real pad mode,
+    true volume edges only), then a 'valid' pass — interior halo data is
+    already inside the patch."""
+    from repro.core import engine
+
+    g = step.grid
+    if any(p != (0, 0) for p in dim_pads):
+        pads = ([(0, 0)] if batched else []) + list(dim_pads)
+        h = pad_array(h, pads, opts.pad_value)
+    lshape = h.shape[1:] if batched else h.shape
+    lgrid = make_quasi_grid(lshape, g.op_shape, g.stride, "valid",
+                            g.dilation)
+    meth = opts.resolved_method
+    if step.factors is not None:
+        out = engine.execute_separable_bank(h, lgrid, step.factors, 0.0,
+                                            meth, batched)
+        return out[..., 0] if step.kind == "stencil" else out
+    if step.kind == "stencil":
+        return engine.execute_stencil(
+            h, lgrid, jnp.asarray(step.weights[:, 0]), 0.0, meth, batched)
+    return engine.execute_stencil_bank(
+        h, lgrid, jnp.asarray(step.weights), 0.0, meth, batched)
+
+
+def _tile_zscore(h, step: ZscoreStep, dim_pads, opts: ExecOptions,
+                 batched: bool):
+    """Per-tile local z-score: the [x, x²] pair rides the batch axis of
+    one 'valid' window pass over the (boundary-padded) patch."""
+    from repro.core import engine
+
+    g = step.grid
+    xf = h.astype(jnp.float32)
+    if any(p != (0, 0) for p in dim_pads):
+        pads = ([(0, 0)] if batched else []) + list(dim_pads)
+        xf = pad_array(xf, pads, opts.pad_value)
+    lshape = xf.shape[1:] if batched else xf.shape
+    lgrid = make_quasi_grid(lshape, g.op_shape, 1, "valid", g.dilation)
+    stacked = (jnp.concatenate([xf, xf * xf], axis=0) if batched
+               else jnp.stack([xf, xf * xf]))
+    col = jnp.asarray(step.window_col)[:, None]
+    out = engine.execute_stencil_bank(
+        stacked, lgrid, col, 0.0, opts.resolved_method, batched=True)[..., 0]
+    b = h.shape[0] if batched else 1
+    mean, ex2 = (out[:b], out[b:]) if batched else (out[0], out[1])
+    var = jnp.maximum(ex2 - mean * mean, 0.0)
+    halos = g.halo()
+    csl = (([slice(None)] if batched else [])
+           + [slice(halos[d][0], halos[d][0] + lgrid.out_shape[d])
+              for d in range(g.rank)])
+    xc = xf[tuple(csl)]
+    return ((xc - mean) / jnp.sqrt(var + step.eps)).astype(h.dtype)
+
+
+def _run_tile(patch, program: PipelineProgram, spec: TileSpec,
+              opts: ExecOptions, batched: bool):
+    from repro.pipe.compile import _apply_reduce
+
+    h = patch
+    li = 0
+    for step in program.steps:
+        if isinstance(step, LinearStep):
+            h = _tile_linear(h, step, spec.stage_pads[li], opts, batched)
+            li += 1
+        elif isinstance(step, ZscoreStep):
+            h = _tile_zscore(h, step, spec.stage_pads[li], opts, batched)
+            li += 1
+        elif isinstance(step, PointwiseStep):
+            h = step.fn(h)
+        elif isinstance(step, ReduceStep):
+            # crop BEFORE reducing: the reduction must see exactly the
+            # tile's own output box, never halo leftovers
+            h = _crop(h, spec.crop, batched, program.channels)
+            h = _apply_reduce(h, step, opts, batched, program.channels)
+            return h
+        else:  # pragma: no cover
+            raise TypeError(f"unknown step {step!r}")
+    h = _crop(h, spec.crop, batched, program.channels)
+    if opts.out_dtype is not None:
+        h = h.astype(opts.out_dtype)
+    return h
+
+
+# -- tile-count selection ----------------------------------------------------
+
+
+def _interior_patch_elems(out_shape, footprint, counts) -> int:
+    elems = 1
+    for n, (a, b, c), k in zip(out_shape, footprint, counts):
+        t = -(-n // k)  # largest tile extent along this dim
+        elems *= a * (t - 1) + b + c + 1
+    return elems
+
+
+def _budget_tile_counts(out_shape, footprint, itemsize: int, batch: int,
+                        channels: int, budget: int) -> Tuple[int, ...]:
+    """Pick per-dim tile counts so an interior tile's working set fits the
+    byte budget.
+
+    The estimate is deliberately simple and documented: patch bytes ×
+    (2 + max(channels, 1)) for the padded copy and the widest
+    intermediate, ×2 for the double-buffered prefetch.  Splits always go
+    to the dim with the largest current patch extent (keeps tiles chunky
+    → fewest shape classes, best halo-to-interior ratio).
+    """
+    overhead = 2.0 * (2 + max(channels, 1))
+    counts = [1] * len(out_shape)
+
+    def bytes_now():
+        return (_interior_patch_elems(out_shape, footprint, counts)
+                * max(1, batch) * itemsize * overhead)
+
+    while bytes_now() > budget:
+        splittable = [d for d in range(len(out_shape))
+                      if counts[d] < out_shape[d]]
+        if not splittable:
+            break  # finest tiling reachable; best effort
+        d = max(splittable,
+                key=lambda i: -(-out_shape[i] // counts[i]))
+        counts[d] = min(out_shape[d], counts[d] * 2)
+    return tuple(counts)
+
+
+# -- the tiled program -------------------------------------------------------
+
+
+def _fold_merge(merge):
+    """Streaming balanced fold: a binary-counter of partial merges, so the
+    effective merge tree has log₂(#tiles) depth with O(log #tiles) live
+    states (the single-machine face of the distributed merge tree)."""
+    stack = []  # (level, state)
+
+    def push(s):
+        level = 0
+        while stack and stack[-1][0] == level:
+            _, prev = stack.pop()
+            s = merge(prev, s)
+            level += 1
+        stack.append((level, s))
+
+    def result():
+        acc = None
+        for _, s in reversed(stack):
+            acc = s if acc is None else merge(s, acc)
+        return acc
+
+    return push, result
+
+
+def _merge_fn(out_kind: str):
+    if out_kind == "moments":
+        from repro.stats.moments import merge_moments
+        return merge_moments
+    if out_kind == "hist":
+        from repro.stats.hist import merge_histograms
+        return merge_histograms
+    from repro.stats.cov import merge_cov
+    return merge_cov
+
+
+@dataclasses.dataclass
+class TiledProgram:
+    """A compiled out-of-core schedule: the fused program + tile geometry.
+
+    ``specs`` are in streaming (Hilbert) order; ``classes`` maps each
+    tile-shape class key to its member count — ``num_classes`` is the
+    exact number of traces a run costs (asserted by the conformance
+    tests), and ``num_classes × program.melt_calls`` the exact
+    materialize-path melt accounting.
+    """
+
+    graph: Pipe
+    opts: ExecOptions
+    program: PipelineProgram
+    footprint: Tuple
+    tile_counts: Tuple[int, ...]
+    specs: Tuple[TileSpec, ...]
+    classes: dict
+
+    @property
+    def num_tiles(self) -> int:
+        return len(self.specs)
+
+    @property
+    def num_classes(self) -> int:
+        return len(self.classes)
+
+    def describe(self) -> str:
+        return (f"{self.program.describe()} | tiles={self.num_tiles} "
+                f"({'x'.join(map(str, self.tile_counts))}) "
+                f"classes={self.num_classes}")
+
+    # -- execution ---------------------------------------------------------
+    def _plan_for(self, spec: TileSpec, stack: int = 0) -> TilePlan:
+        P, opts, program = self.graph, self.opts, self.program
+        batched = P.batched or stack > 0
+        dt = jnp.dtype(P.x.dtype).name
+        ckey = spec.class_key()
+        key = (P.signature(), opts.key(), P.batched, dt,
+               tuple(P.x.shape), ckey, stack)
+        lead = ((stack,) if stack else
+                ((P.x.shape[0],) if P.batched else ()))
+
+        def build():
+            return TilePlan(
+                ("tiled",) + key, lead + spec.patch_shape, dt, opts,
+                program.steps, program.passes, program.melt_calls,
+                lambda t: _run_tile(t, program, spec, opts, batched),
+                spec=ckey, tile_batch=stack)
+
+        return get_tile_plan(key, build)
+
+    def _read_patch(self, spec: TileSpec):
+        sl = (([slice(None)] if self.graph.batched else [])
+              + [slice(l, h) for l, h in zip(spec.read_lo, spec.read_hi)])
+        return self.graph.x[tuple(sl)]
+
+    def _out_buffer(self, tile0):
+        shape = (((self.graph.x.shape[0],) if self.graph.batched else ())
+                 + self.program.out_shape
+                 + ((self.program.channels,) if self.program.channels
+                    else ()))
+        return np.empty(shape, dtype=np.asarray(tile0).dtype)
+
+    def _place(self, buf, spec: TileSpec, tile):
+        sl = (([slice(None)] if self.graph.batched else [])
+              + [slice(a, b) for a, b in zip(spec.out_lo, spec.out_hi)]
+              + ([slice(None)] if self.program.channels else []))
+        buf[tuple(sl)] = np.asarray(tile)
+
+    def run(self, mesh=None, axis_name: Optional[str] = None,
+            prefetch: bool = True):
+        """Stream every tile; returns the merged reduction state, or the
+        assembled output as a host-side ``np.ndarray`` (the out-of-core
+        contract: the device only ever holds tiles)."""
+        if (mesh is None) != (axis_name is None):
+            raise ValueError("pass mesh= and axis_name= together")
+        if mesh is not None and self.graph.batched:
+            raise NotImplementedError(
+                "mesh-sharded tile streams support unbatched graphs (the "
+                "tile stack claims the batch-like axis); run batched "
+                "graphs untiled via sharded_pipe_fn, or tiled without a "
+                "mesh")
+        reduce_out = self.program.out_kind != "array"
+        merge = _merge_fn(self.program.out_kind) if reduce_out else None
+        push = result = buf = None
+        if reduce_out:
+            push, result = _fold_merge(merge)
+
+        if mesh is not None:
+            return self._run_sharded(mesh, axis_name, push, result)
+
+        # double-buffered prefetch: tile i+1's H2D transfer is issued
+        # before tile i's result is consumed
+        specs = self.specs
+        cur = jax.device_put(self._read_patch(specs[0]))
+        for i, spec in enumerate(specs):
+            nxt = (jax.device_put(self._read_patch(specs[i + 1]))
+                   if prefetch and i + 1 < len(specs) else None)
+            out = self._plan_for(spec)(cur)
+            if reduce_out:
+                push(out)
+            else:
+                if buf is None:
+                    buf = self._out_buffer(out)
+                self._place(buf, spec, out)
+            if not prefetch and i + 1 < len(specs):
+                nxt = jax.device_put(self._read_patch(specs[i + 1]))
+            cur = nxt
+        return result() if reduce_out else buf
+
+    def _run_sharded(self, mesh, axis_name, push, result):
+        """Group same-class tiles into mesh-axis-sized stacks; each stack
+        is one sharded dispatch (halos are baked in — no exchange)."""
+        from repro.core.distributed import put_tile_batch
+        from repro.stats.moments import merge_along_axis
+
+        ways = int(mesh.shape[axis_name])
+        reduce_out = push is not None
+        buf = None
+        by_class = {}
+        for spec in self.specs:
+            by_class.setdefault(spec.class_key(), []).append(spec)
+        leftovers = []
+        for members in by_class.values():
+            n_full = (len(members) // ways) * ways
+            for i in range(0, n_full, ways):
+                group = members[i:i + ways]
+                stacked = np.stack(
+                    [np.asarray(self._read_patch(s)) for s in group])
+                dev = put_tile_batch(stacked, mesh, axis_name)
+                out = self._plan_for(group[0], stack=ways)(dev)
+                if reduce_out:
+                    if self.program.out_kind == "moments":
+                        push(merge_along_axis(out, axis=0))
+                    else:  # hist/cov states already fold the stack axis
+                        push(out)
+                else:
+                    if buf is None:
+                        buf = self._out_buffer(out[0])
+                    for j, s in enumerate(group):
+                        self._place(buf, s, out[j])
+            leftovers.extend(members[n_full:])
+        for spec in leftovers:
+            out = self._plan_for(spec)(jax.device_put(
+                self._read_patch(spec)))
+            if reduce_out:
+                push(out)
+            else:
+                if buf is None:
+                    buf = self._out_buffer(out)
+                self._place(buf, spec, out)
+        return result() if reduce_out else buf
+
+
+# -- planning entry points ---------------------------------------------------
+
+
+def _validate_tiled(P: Pipe, program: PipelineProgram, opts: ExecOptions):
+    if not P.ops:
+        raise ValueError("tiled execution needs at least one op; an empty "
+                         "pipeline has nothing to stream")
+    if isinstance(P.x, jax.core.Tracer):
+        raise ValueError(
+            "tiled execution schedules host-side reads and cannot run on "
+            "a traced input; call it outside jit")
+    op0 = P.ops[0]
+    if (isinstance(op0, MomentsOp) and op0.axis is not None):
+        raise ValueError(
+            "tiled moments reduce every spatial axis (tiles partition "
+            "space); drop axis= or use stream_moments for custom axes")
+    if program.out_kind == "cov" and not program.channels:
+        raise ValueError(
+            "tiled .cov() needs a bank stage to provide the channel axis "
+            "(a standalone .cov() would tile across channels); use "
+            "stream_channel_cov for raw channeled data")
+    unit_stride = all(
+        s.grid.stride == (1,) * s.grid.rank
+        for s in program.steps if isinstance(s, LinearStep))
+    if opts.resolved_method == "fused" and not unit_stride:
+        raise ValueError(
+            "the fused path supports stride-1 stages only under tiling "
+            "(Pallas kernels lower stride-1 grids); use method='lax' or "
+            "'materialize' for strided programs")
+
+
+def plan_tiled(
+    P: Pipe,
+    *,
+    tiles=None,
+    memory_budget: Optional[int] = None,
+    method: str = "auto",
+    pad_value="edge",
+    out_dtype=None,
+    order: str = "hilbert",
+) -> TiledProgram:
+    """Compile a pipe graph into an out-of-core tile schedule.
+
+    ``tiles`` is an int (split the leading spatial dim into that many
+    slabs) or a per-dim tuple of tile counts; ``memory_budget`` (bytes)
+    derives counts so one tile's working set fits the budget.  ``order``
+    is ``'hilbert'`` (locality, the default) or ``'scan'`` (row-major).
+    Exactly one of ``tiles``/``memory_budget`` must be given.
+    """
+    from repro.pipe.compile import _check_out_dtype
+
+    opts = ExecOptions.make(method=method, pad_value=pad_value,
+                            batched=P.batched, out_dtype=out_dtype)
+    _check_out_dtype(P, opts)
+    program = build_program(P, opts)
+    _validate_tiled(P, program, opts)
+    geoms = _linear_geoms(program)
+    rank = P.rank
+    footprint = (compose_footprints([s.grid for s in geoms])
+                 or ((1, 0, 0),) * rank)
+    out_shape = program.out_shape
+
+    if (tiles is None) == (memory_budget is None):
+        raise ValueError("pass exactly one of tiles= or memory_budget=")
+    if tiles is not None:
+        if isinstance(tiles, (int, np.integer)):
+            counts = (int(tiles),) + (1,) * (rank - 1)
+        else:
+            counts = tuple(int(t) for t in tiles)
+            if len(counts) != rank:
+                raise ValueError(f"tiles must be an int or a rank-{rank} "
+                                 f"tuple, got {tiles!r}")
+        if any(t < 1 for t in counts):
+            raise ValueError(f"tile counts must be >= 1, got {counts}")
+    else:
+        if memory_budget <= 0:
+            raise ValueError(f"memory_budget must be positive bytes, got "
+                             f"{memory_budget}")
+        counts = _budget_tile_counts(
+            out_shape, footprint, jnp.dtype(P.x.dtype).itemsize,
+            P.x.shape[0] if P.batched else 1, program.channels,
+            int(memory_budget))
+
+    per_dim, boxes = plan_tile_partition(out_shape, counts)
+    grid_counts = tuple(len(r) for r in per_dim)
+    if order == "hilbert":
+        idx = hilbert_order(grid_counts)
+        flat = np.ravel_multi_index(tuple(idx.T), grid_counts)
+        boxes = [boxes[int(i)] for i in flat]
+    elif order != "scan":
+        raise ValueError(f"unknown tile order {order!r}; expected "
+                         f"'hilbert' or 'scan'")
+    in_shape = P.spatial_shape
+    specs = tuple(
+        _tile_spec(geoms, footprint, lo, hi, in_shape, opts.pad_value)
+        for lo, hi in boxes)
+    classes = {}
+    for s in specs:
+        classes[s.class_key()] = classes.get(s.class_key(), 0) + 1
+    return TiledProgram(graph=P, opts=opts, program=program,
+                        footprint=footprint, tile_counts=grid_counts,
+                        specs=specs, classes=classes)
+
+
+def run_tiled(P: Pipe, *, tiles=None, memory_budget=None, method="auto",
+              pad_value="edge", out_dtype=None, order="hilbert",
+              mesh=None, axis_name=None, prefetch=True):
+    """Plan + run in one call (the ``Pipe.run(tiles=…)`` backend)."""
+    tp = plan_tiled(P, tiles=tiles, memory_budget=memory_budget,
+                    method=method, pad_value=pad_value, out_dtype=out_dtype,
+                    order=order)
+    return tp.run(mesh=mesh, axis_name=axis_name, prefetch=prefetch)

@@ -1,0 +1,150 @@
+"""The bench-regression gate (benchmarks/regression.py).
+
+The gate diffs fresh BENCH_*.json speedups against committed baselines.
+Pinned here: a baseline *section* that is absent from the fresh run —
+missing file, truncated/invalid JSON, or an errored section — is a
+skip-with-warning, never a crash (the bug this suite was added for), while
+genuine speedup regressions and silently-renamed gated rows still fail.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.regression import _load_rows, compare  # noqa: E402
+
+
+def _write(path, payload):
+    with open(path, "w") as fh:
+        if isinstance(payload, str):
+            fh.write(payload)
+        else:
+            json.dump(payload, fh)
+
+
+def _row(name, us=100.0, speedup=4.0):
+    return {"name": name, "us_per_call": us,
+            "derived": f"seq=400us speedup={speedup:.2f}x"}
+
+
+@pytest.fixture
+def dirs(tmp_path):
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    base.mkdir()
+    fresh.mkdir()
+    _write(str(base / "BENCH_pipe.json"),
+           {"rows": [_row("pipe/fused-chain/32x48x48", 100.0, 4.0),
+                     _row("pipe/same-2pass/32x48x48", 200.0, 1.0)]})
+    return str(base), str(fresh)
+
+
+def test_within_tolerance_passes(dirs):
+    base, fresh = dirs
+    _write(os.path.join(fresh, "BENCH_pipe.json"),
+           {"rows": [_row("pipe/fused-chain/32x48x48", 110.0, 3.5)]})
+    failures, report = compare(base, fresh, 0.25)
+    assert not failures
+    assert any(line.startswith("ok ") for line in report)
+
+
+def test_speedup_regression_fails(dirs):
+    base, fresh = dirs
+    _write(os.path.join(fresh, "BENCH_pipe.json"),
+           {"rows": [_row("pipe/fused-chain/32x48x48", 300.0, 1.2)]})
+    failures, _ = compare(base, fresh, 0.25)
+    assert any("regressed" in f for f in failures)
+
+
+def test_missing_gated_row_fails(dirs):
+    base, fresh = dirs
+    _write(os.path.join(fresh, "BENCH_pipe.json"),
+           {"rows": [_row("pipe/other-row", 50.0, 9.0)]})
+    failures, _ = compare(base, fresh, 0.25)
+    assert any("missing from fresh" in f for f in failures)
+
+
+def test_missing_fresh_file_skips(dirs):
+    base, fresh = dirs
+    failures, report = compare(base, fresh, 0.25)
+    assert not failures
+    assert any("no fresh results" in line for line in report)
+
+
+def test_truncated_fresh_json_skips_not_crashes(dirs):
+    base, fresh = dirs
+    _write(os.path.join(fresh, "BENCH_pipe.json"), '{"rows": [{"na')
+    failures, report = compare(base, fresh, 0.25)
+    assert not failures
+    assert any("absent from the fresh run" in line for line in report)
+
+
+def test_wrong_schema_fresh_json_skips(dirs):
+    base, fresh = dirs
+    _write(os.path.join(fresh, "BENCH_pipe.json"), [1, 2, 3])
+    failures, report = compare(base, fresh, 0.25)
+    assert not failures
+    assert any("absent from the fresh run" in line for line in report)
+
+
+def test_errored_section_skips(dirs):
+    base, fresh = dirs
+    _write(os.path.join(fresh, "BENCH_pipe.json"),
+           {"rows": [{"name": "ERROR", "us_per_call": 0.0,
+                      "derived": "boom"}]})
+    failures, report = compare(base, fresh, 0.25)
+    assert not failures
+    assert any("section errored" in line for line in report)
+
+
+def test_row_missing_us_per_call_does_not_crash(dirs):
+    base, fresh = dirs
+    _write(os.path.join(fresh, "BENCH_pipe.json"),
+           {"rows": [{"name": "pipe/fused-chain/32x48x48",
+                      "derived": "speedup=4.00x"}]})
+    failures, report = compare(base, fresh, 0.25)
+    assert not failures  # speedup held; only the us context is unavailable
+    assert any("us n/a" in line for line in report)
+
+
+def test_unreadable_baseline_fails(dirs):
+    # the baseline is repo state: corruption must fail the gate, not
+    # silently disable the section (unlike fresh-side absence)
+    base, fresh = dirs
+    _write(os.path.join(base, "BENCH_pipe.json"), "garbage{")
+    _write(os.path.join(fresh, "BENCH_pipe.json"), {"rows": []})
+    failures, _ = compare(base, fresh, 0.25)
+    assert any("baseline unreadable" in f for f in failures)
+
+
+def test_malformed_baseline_row_fails(dirs):
+    # a nameless baseline row would otherwise be dropped and its gate
+    # silently disabled — row-level corruption fails like file-level
+    base, fresh = dirs
+    _write(os.path.join(base, "BENCH_pipe.json"),
+           {"rows": [{"us_per_call": 100.0,
+                      "derived": "speedup=4.00x"}]})
+    _write(os.path.join(fresh, "BENCH_pipe.json"), {"rows": []})
+    failures, _ = compare(base, fresh, 0.25)
+    assert any("malformed row" in f for f in failures)
+
+
+def test_malformed_fresh_row_warns_but_compares_rest(dirs):
+    base, fresh = dirs
+    _write(os.path.join(fresh, "BENCH_pipe.json"),
+           {"rows": [_row("pipe/fused-chain/32x48x48", 100.0, 4.0),
+                     {"noname": 1}]})
+    failures, report = compare(base, fresh, 0.25)
+    assert not failures  # the intact gated row still compares clean
+    assert any("malformed fresh row" in line for line in report)
+
+
+def test_load_rows_filters_malformed_rows(tmp_path):
+    p = str(tmp_path / "BENCH_x.json")
+    _write(p, {"rows": [_row("a/b"), {"noname": 1}, "junk"]})
+    rows, dropped = _load_rows(p)
+    assert set(rows) == {"a/b"}
+    assert dropped == 2

@@ -1,0 +1,89 @@
+"""The CI coverage gate (tools/coverage_gate.py) against synthetic
+Cobertura reports: floor math, duplicate class entries, missing subtrees,
+and unreadable reports."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from tools.coverage_gate import collect, main  # noqa: E402
+
+
+def _xml(tmp_path, body, sources=()):
+    p = str(tmp_path / "coverage.xml")
+    src = "".join(f"<source>{s}</source>" for s in sources)
+    with open(p, "w") as fh:
+        fh.write(f'<?xml version="1.0"?><coverage>'
+                 f'<sources>{src}</sources>{body}</coverage>')
+    return p
+
+
+def _cls(filename, hits_by_line):
+    lines = "".join(f'<line number="{n}" hits="{h}"/>'
+                    for n, h in hits_by_line.items())
+    return (f'<packages><package><classes>'
+            f'<class filename="{filename}"><lines>{lines}</lines></class>'
+            f'</classes></package></packages>')
+
+
+def test_collect_counts_lines_once(tmp_path):
+    # the same file listed twice (pytest-cov emits one class per module
+    # *and* sometimes per package) must not double-count
+    body = (_cls("src/repro/pipe/tiled.py", {1: 1, 2: 0})
+            + _cls("src/repro/pipe/tiled.py", {1: 0, 2: 1, 3: 0}))
+    stats = collect(_xml(tmp_path, body), ["repro/pipe/"])
+    assert stats["repro/pipe/"] == (2, 3)  # lines 1,2 hit somewhere; 3 not
+
+
+def test_collect_resolves_source_relative_filenames(tmp_path):
+    # the real pytest-cov layout for `--cov=src/repro`: filenames are
+    # RELATIVE to the source root, which only appears under <sources>
+    body = (_cls("pipe/tiled.py", {1: 1, 2: 0})
+            + _cls("stats/hist.py", {1: 1}))
+    xml = _xml(tmp_path, body,
+               sources=["/home/runner/work/repo/src/repro"])
+    stats = collect(xml, ["repro/pipe/", "repro/stats/"])
+    assert stats["repro/pipe/"] == (1, 2)
+    assert stats["repro/stats/"] == (1, 1)
+
+
+def test_gate_passes_on_source_relative_report(tmp_path):
+    body = (_cls("pipe/a.py", {i: 1 for i in range(1, 20)})
+            + _cls("stats/b.py", {i: 1 for i in range(1, 20)}))
+    xml = _xml(tmp_path, body, sources=["/ci/src/repro"])
+    assert main(["--xml", xml]) == 0
+
+
+def test_gate_passes_above_floor(tmp_path):
+    body = (_cls("src/repro/pipe/a.py", {i: 1 for i in range(1, 20)})
+            + _cls("src/repro/stats/b.py", {i: 1 for i in range(1, 20)}))
+    xml = _xml(tmp_path, body)
+    assert main(["--xml", xml]) == 0
+
+
+def test_gate_fails_below_floor(tmp_path):
+    body = (_cls("src/repro/pipe/a.py", {1: 1, 2: 0, 3: 0, 4: 0})
+            + _cls("src/repro/stats/b.py", {i: 1 for i in range(1, 10)}))
+    xml = _xml(tmp_path, body)
+    assert main(["--xml", xml]) == 1
+
+
+def test_gate_fails_when_subtree_unmeasured(tmp_path):
+    xml = _xml(tmp_path, _cls("src/other/x.py", {1: 1}))
+    assert main(["--xml", xml]) == 1  # no repro/pipe lines at all
+
+
+def test_gate_fails_on_missing_or_garbage_report(tmp_path):
+    assert main(["--xml", str(tmp_path / "nope.xml")]) == 1
+    p = str(tmp_path / "bad.xml")
+    with open(p, "w") as fh:
+        fh.write("<not-closed")
+    assert main(["--xml", p]) == 1
+
+
+def test_floor_override(tmp_path):
+    body = (_cls("src/repro/pipe/a.py", {1: 1, 2: 1, 3: 0, 4: 0})  # 50%
+            + _cls("src/repro/stats/b.py", {i: 1 for i in range(1, 10)}))
+    xml = _xml(tmp_path, body)
+    assert main(["--xml", xml, "--floor", "repro/pipe/=40"]) == 0
+    assert main(["--xml", xml, "--floor", "repro/pipe/=60"]) == 1

@@ -90,3 +90,77 @@ def test_offsets_within_halo(dims, op):
     for d, (lo, hi) in enumerate(g.halo()):
         assert offs[:, d].min() >= -lo
         assert offs[:, d].max() <= hi
+
+
+# -- tile-footprint math (DESIGN.md §12) -------------------------------------
+
+
+def test_stage_footprint_same_vs_valid():
+    from repro.core.grid import stage_footprint
+
+    g = make_quasi_grid((20, 20), (5, 3))
+    assert stage_footprint(g) == ((2, 2), (1, 1))
+    gv = make_quasi_grid((20,), (4,), padding="valid")
+    assert stage_footprint(gv) == ((0, 3),)
+    gd = make_quasi_grid((20,), (3,), dilation=2)
+    assert stage_footprint(gd) == ((2, 2),)
+
+
+def test_compose_footprints_empty_and_identity():
+    from repro.core.grid import compose_footprints, tile_read_region
+
+    assert compose_footprints([]) == ()
+    g = make_quasi_grid((10,), (1,))
+    assert compose_footprints([g]) == ((1, 0, 0),)
+    lo, hi = tile_read_region(((1, 0, 0),), (3,), (7,), (10,))
+    assert (lo, hi) == ((3,), (7,))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    ops=st.lists(st.integers(2, 5), min_size=1, max_size=3),
+    paddings=st.lists(st.sampled_from(["same", "valid"]), min_size=3,
+                      max_size=3),
+    strides=st.lists(st.sampled_from([1, 1, 2]), min_size=3, max_size=3),
+    a=st.integers(0, 4),
+    w=st.integers(1, 3),
+)
+def test_footprint_matches_dependency_oracle(ops, paddings, strides, a, w):
+    """compose_footprints must bound the true data dependency: perturbing
+    any input OUTSIDE the predicted read region leaves the output tile
+    untouched (all-ones weights make every in-region tap visible)."""
+    import jax.numpy as jnp
+    from repro.core.engine import apply_stencil
+    from repro.core.grid import compose_footprints, tile_read_region
+
+    n = 64
+    stages, cur = [], (n,)
+    for i, k in enumerate(ops):
+        s, p = strides[i], paddings[i]
+        try:
+            g = make_quasi_grid(cur, (k,), s, p, 1)
+        except ValueError:
+            return
+        stages.append(g)
+        cur = g.out_shape
+
+    def run(x):
+        h = jnp.asarray(x, jnp.float32)
+        for g in stages:
+            h = apply_stencil(h, g.op_shape, jnp.ones(g.op_shape[0]),
+                              stride=g.stride, padding=g.padding,
+                              pad_value=0.0, method="lax")
+        return np.asarray(h)
+
+    b = min(a + w, cur[0])
+    if b <= a:
+        return
+    fp = compose_footprints(stages)
+    lo, hi = tile_read_region(fp, (a,), (b,), (n,))
+    x = np.random.RandomState(7).randn(n).astype(np.float32)
+    base = run(x)[a:b]
+    pert = x.copy()
+    mask = np.ones(n, bool)
+    mask[lo[0]:hi[0]] = False
+    pert[mask] += 100.0  # hammer everything outside the predicted region
+    np.testing.assert_array_equal(run(pert)[a:b], base)

@@ -1,5 +1,6 @@
 """Paper §2.4 partition conditions — property-based."""
 import numpy as np
+import pytest
 from _prop import given, settings, strategies as st
 
 from repro.core.grid import make_quasi_grid
@@ -50,3 +51,40 @@ def test_slab_partition_alignment():
         assert r0 == s0 * rows_per and r1 == s1 * rows_per
         covered.append((r0, r1))
     assert validate_partition(covered, g.num_rows)
+
+
+# -- N-D tile partitions (DESIGN.md §12) -------------------------------------
+
+
+def test_tile_partition_basic_boxes():
+    from repro.core.partition import plan_tile_partition, validate_tile_partition
+
+    per_dim, boxes = plan_tile_partition((9, 4), (2, 2))
+    assert per_dim[0] == [(0, 5), (5, 9)]
+    assert per_dim[1] == [(0, 2), (2, 4)]
+    assert boxes[0] == ((0, 0), (5, 2))  # row-major over the tile grid
+    assert validate_tile_partition(boxes, (9, 4))
+
+
+@given(
+    d0=st.integers(1, 12),
+    d1=st.integers(1, 12),
+    c0=st.integers(1, 15),
+    c1=st.integers(1, 15),
+)
+@settings(max_examples=30, deadline=None)
+def test_tile_partition_always_valid(d0, d1, c0, c1):
+    from repro.core.partition import plan_tile_partition, validate_tile_partition
+
+    per_dim, boxes = plan_tile_partition((d0, d1), (c0, c1))
+    assert validate_tile_partition(boxes, (d0, d1))
+    # clamping: never more tiles than extent along a dim
+    assert len(per_dim[0]) == min(c0, d0)
+    assert len(per_dim[1]) == min(c1, d1)
+
+
+def test_tile_partition_rank_mismatch_rejected():
+    from repro.core.partition import plan_tile_partition
+
+    with pytest.raises(ValueError, match="length 2"):
+        plan_tile_partition((4, 4), (2,))

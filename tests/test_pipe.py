@@ -23,6 +23,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from _prop import given, settings, strategies as st
 from conftest import run_with_devices
 
 from repro.core import (
@@ -535,3 +536,108 @@ np.testing.assert_allclose(np.asarray(st3.variance),
 print("sharded-pipe OK")
 """, 4)
     assert "sharded-pipe OK" in out
+
+
+# -- property-fuzz: the fusion planner (DESIGN.md §11/§12) -------------------
+
+
+def _expected_groups(stages):
+    """Independent replay of the planner's greedy composition rule: how
+    many melt passes a chain of (op, stride, padding) stages must plan."""
+    groups = 0
+    can_extend = False
+    for op, stride, padding in stages:
+        mergeable = (padding == "valid" and stride == 1)
+        if can_extend and mergeable:
+            continue  # merged into the open group
+        groups += 1
+        can_extend = mergeable
+    return groups
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_stages=st.integers(1, 3),
+    op=st.integers(2, 3),
+    paddings=st.lists(st.sampled_from(["same", "valid"]), min_size=3,
+                      max_size=3),
+    strides=st.lists(st.sampled_from([1, 1, 2]), min_size=3, max_size=3),
+    pad=st.sampled_from(PADS),
+    seed=st.integers(0, 2**16),
+)
+def test_fuzz_planner_pass_accounting(n_stages, op, paddings, strides, pad,
+                                      seed):
+    """Random linear chains: the planner's pass count matches the greedy
+    composition rule, the materialize melt counter matches the plan, and
+    the fused program equals the eager chain."""
+    rng = np.random.RandomState(seed)
+    shape = (17, 15)
+    x = _vol(rng, shape)
+    stages = [((op, op), strides[i], paddings[i]) for i in range(n_stages)]
+    # 'valid'/strided chains can exhaust the extent — skip impossible draws
+    cur = shape
+    ok = True
+    for (o, s, p_) in stages:
+        try:
+            from repro.core.grid import grid_shape
+            cur = grid_shape(cur, (o, o) if isinstance(o, int) else o,
+                             (s, s), p_, (1, 1))
+        except ValueError:
+            ok = False
+            break
+    if not ok or min(cur) < 1:
+        return
+
+    P = pipe(x)
+    eager = x
+    for (o, s, p_) in stages:
+        w = rng.randn(int(np.prod(o if not isinstance(o, int)
+                                  else (o, o)))).astype(np.float32)
+        P = P.stencil(o, w, stride=s, padding=p_)
+        eager = apply_stencil(eager, o, jnp.asarray(w), stride=s,
+                              padding=p_, pad_value=pad, method="lax")
+
+    program = P.plan(method="lax", pad_value=pad)
+    assert program.passes == _expected_groups(stages)
+    np.testing.assert_allclose(np.asarray(P.run(method="lax",
+                                                pad_value=pad)),
+                               np.asarray(eager), rtol=3e-5, atol=3e-5)
+
+    clear_plan_cache()
+    prog_m = P.plan(method="materialize", pad_value=pad)
+    before = melt_call_count()
+    P.run(method="materialize", pad_value=pad)
+    assert melt_call_count() - before == prog_m.melt_calls
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    op1=st.integers(2, 4),
+    op2=st.integers(2, 4),
+    k=st.integers(1, 3),
+    seed=st.integers(0, 2**16),
+)
+def test_fuzz_weight_composition_exact(op1, op2, k, seed):
+    """compose_weights is the full N-D convolution: a composed one-pass
+    bank equals the two-pass chain exactly for random weights."""
+    rng = np.random.RandomState(seed)
+    x = _vol(rng, (14, 13))
+    w1 = rng.randn(op1 * op1).astype(np.float32)
+    W2 = rng.randn(op2 * op2, k).astype(np.float32)
+    P = (pipe(x).stencil((op1, op1), w1, padding="valid")
+         .bank((op2, op2), W2, padding="valid"))
+    assert P.plan(method="lax").passes == 1
+    y = apply_stencil(x, (op1, op1), jnp.asarray(w1), padding="valid",
+                      method="lax")
+    ref = apply_stencil_bank(y, (op2, op2), jnp.asarray(W2),
+                             padding="valid", method="lax",
+                             separable=False)
+    np.testing.assert_allclose(np.asarray(P.run(method="lax")),
+                               np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_pipe_run_rejects_mesh_without_tiles(rng):
+    x = _vol(rng, (8, 8))
+    with pytest.raises(ValueError, match="tiled"):
+        pipe(x).gaussian(1.0, op_shape=3).run(mesh=object(),
+                                              axis_name="t")

@@ -1,0 +1,119 @@
+"""Coverage gate: fail CI when pipe/stats line coverage drops.
+
+CI runs the suite under ``pytest-cov`` (``--cov=src/repro
+--cov-report=xml``) and this script reads the Cobertura ``coverage.xml``,
+computes line coverage for the gated subtrees, and exits 1 when any falls
+below its floor.  The floors are the levels measured when the gate was
+introduced (PR 5, full suite on the pinned container) minus a small
+tolerance for collection differences between coverage.py versions and the
+with/without-hypothesis CI legs — a real coverage regression (new
+untested module, deleted tests) blows through that margin; line-level
+noise does not.
+
+    python tools/coverage_gate.py [--xml coverage.xml]
+                                  [--floor repro/pipe/=90 ...]
+
+Gated subtrees are matched as path substrings against the ``filename``
+attributes in the report, so the gate is layout-agnostic (pytest-cov
+emits paths relative to the invocation root).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import xml.etree.ElementTree as ET
+
+#: gated subtree -> minimum line coverage (percent).  Measured at PR 5
+#: (pipe/stats/tiled suites, pinned container): repro/pipe/ ≈89%,
+#: repro/stats/ ≈95%.  Floors leave ~5 points of slack for coverage.py
+#: vs. co_lines collection drift, the with/without-hypothesis legs, and
+#: subprocess-executed lines (run_with_devices tests) that in-process
+#: coverage cannot see — not for real regressions.
+DEFAULT_FLOORS = {
+    "repro/pipe/": 84.0,
+    "repro/stats/": 89.0,
+}
+
+
+def collect(xml_path: str, subtrees) -> dict:
+    """Per-subtree (covered, total) statement counts from a Cobertura
+    report.  A line counts once per file (class entries can repeat).
+
+    coverage.py writes ``class filename=`` attributes *relative to* the
+    measured source roots and lists those roots under ``<sources>`` (so
+    ``--cov=src/repro`` yields filenames like ``pipe/tiled.py`` with
+    ``…/src/repro`` in ``<sources>``); other producers emit repo-relative
+    or absolute paths.  Each filename is therefore matched both bare and
+    re-rooted under every ``<source>`` entry.
+    """
+    tree = ET.parse(xml_path)
+    root = tree.getroot()
+    sources = [s.text.replace("\\", "/").rstrip("/")
+               for s in root.iter("source") if s.text]
+    per_file = {}
+    for cls in root.iter("class"):
+        fname = cls.get("filename", "").replace("\\", "/")
+        lines = per_file.setdefault(fname, {})
+        for line in cls.iter("line"):
+            num = int(line.get("number"))
+            hit = int(line.get("hits", "0")) > 0
+            lines[num] = lines.get(num, False) or hit
+    out = {}
+    for sub in subtrees:
+        total = covered = 0
+        for fname, lines in per_file.items():
+            paths = [fname] + [f"{src}/{fname}" for src in sources]
+            if any(sub in p for p in paths):
+                total += len(lines)
+                covered += sum(lines.values())
+        out[sub] = (covered, total)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--xml", default="coverage.xml",
+                    help="Cobertura report from pytest-cov")
+    ap.add_argument("--floor", action="append", default=[],
+                    metavar="SUBTREE=PCT",
+                    help="override/add a gated subtree floor "
+                         "(e.g. repro/pipe/=92)")
+    args = ap.parse_args(argv)
+
+    floors = dict(DEFAULT_FLOORS)
+    for spec in args.floor:
+        sub, _, pct = spec.partition("=")
+        if not pct:
+            ap.error(f"--floor needs SUBTREE=PCT, got {spec!r}")
+        floors[sub] = float(pct)
+
+    try:
+        stats = collect(args.xml, floors)
+    except (OSError, ET.ParseError) as e:
+        print(f"coverage gate: cannot read {args.xml}: {e}")
+        return 1
+
+    failures = []
+    for sub, floor in sorted(floors.items()):
+        covered, total = stats[sub]
+        if total == 0:
+            failures.append(f"{sub}: no measured lines — did --cov cover "
+                            f"src/repro?")
+            continue
+        pct = 100.0 * covered / total
+        verdict = "FAIL" if pct < floor else "ok"
+        print(f"{verdict:4s} {sub}: {pct:.1f}% ({covered}/{total} lines, "
+              f"floor {floor:.1f}%)")
+        if pct < floor:
+            failures.append(f"{sub}: {pct:.1f}% < floor {floor:.1f}%")
+    if failures:
+        print("\ncoverage gate FAILURES:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("\ncoverage gate: all gated subtrees at or above their floors")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
