@@ -4,15 +4,22 @@ CI produces fresh ``BENCH_<section>.json`` files (``benchmarks.run
 --quick --json-dir``) and this script diffs them against the committed
 baselines in ``benchmarks/baselines/`` (generated the same way).  For
 every **gated** row — the headline speedup rows of the bank / stats /
-pipe benchmarks — it compares the *speedup factor* parsed from the
-``derived`` string rather than raw wall-clock: speedups are ratios of two
-measurements on the same machine, so they transfer across runner
-generations where absolute µs never would.
+pipe benchmarks — it compares the *speedup factor* (``speedup=…x`` or
+``parity=…x``) parsed from the ``derived`` string rather than raw
+wall-clock: speedups are ratios of two measurements on the same machine,
+so they transfer across runner generations where absolute µs never
+would.
 
 Failure conditions (exit 1):
 
 - a gated row's speedup dropped more than ``--tolerance`` (default 25%)
   below its baseline;
+- a gated row with an entry in ``GATED_FLOORS`` measured *below its
+  absolute floor* in the fresh run (beyond a small ``FLOOR_NOISE``
+  measurement allowance), regardless of the baseline — e.g.
+  ``tiled/assemble`` claims break-even-or-better parity with the
+  in-memory run, so any fresh value meaningfully under 1.0x is a
+  failure even if the committed baseline drifted;
 - a gated baseline row has no fresh counterpart (row names embed shapes —
   silently changing a benchmark shape must force a baseline refresh, not
   skip the gate);
@@ -46,9 +53,29 @@ GATED_PREFIXES = (
     "stats/var-streaming",  # streaming variance vs per-item two-pass loop
     "pipe/fused-chain",    # fused pipeline vs eager 3-call chain
     "tiled/stream-var",    # out-of-core stream vs naive per-tile eager loop
+    "tiled/assemble",      # tiled array assembly vs the in-memory run
 )
 
-_SPEEDUP = re.compile(r"speedup=([0-9.]+)x")
+#: absolute factor floors, by gated prefix: the fresh run must meet these
+#: independent of the committed baseline.  The relative gate catches
+#: *drift*; these catch a row whose very claim is a threshold — tiled
+#: assembly promises parity with the in-memory run (DESIGN.md §12), so
+#: anything below 1.0x is a regression even if a baseline said otherwise.
+GATED_FLOORS = {
+    "tiled/assemble": 1.0,
+}
+
+#: one-sided measurement-resolution allowance on absolute floors.  Parity
+#: factors are medians of interleaved reps with ~±2% run-to-run spread on
+#: shared runners, and the tiled/assemble claim sits *exactly at* its
+#: floor (true parity ≈ 1.0: slab tiling recomputes nothing, so assembly
+#: overhead vs in-memory is the only difference) — a literal `< floor`
+#: check would coin-flip on timing noise.  A fresh value more than this
+#: far below the floor is a real regression, not jitter: the bug this
+#: gate was added for measured 0.77x.
+FLOOR_NOISE = 0.03
+
+_SPEEDUP = re.compile(r"(?:speedup|parity)=([0-9.]+)x")
 
 
 def _load_rows(path):
@@ -84,6 +111,13 @@ def _section_errored(rows: dict) -> bool:
 
 def _gated(name: str) -> bool:
     return any(name.startswith(p) for p in GATED_PREFIXES)
+
+
+def _abs_floor(name: str) -> "float | None":
+    for prefix, floor in GATED_FLOORS.items():
+        if name.startswith(prefix):
+            return floor
+    return None
 
 
 def _speedup(row) -> float | None:
@@ -144,6 +178,9 @@ def compare(baseline_dir: str, fresh_dir: str, tolerance: float):
                 failures.append(f"{name}: fresh row lost its speedup field")
                 continue
             floor = b_sp * (1.0 - tolerance)
+            abs_floor = _abs_floor(name)
+            if abs_floor is not None:
+                floor = max(floor, abs_floor - FLOOR_NOISE)
             verdict = "FAIL" if f_sp < floor else "ok"
             try:  # absolute-us drift is context only — never crash on it
                 du = (float(frow["us_per_call"]) /
@@ -151,13 +188,22 @@ def compare(baseline_dir: str, fresh_dir: str, tolerance: float):
                 us_note = f"us x{du:.2f}"
             except (KeyError, TypeError, ValueError):
                 us_note = "us n/a"
+            floor_note = (f"floor {floor:.2f}x"
+                          + (f", abs {abs_floor:.2f}x"
+                             if abs_floor is not None else ""))
             report.append(
                 f"{verdict:4s} {name}: speedup {b_sp:.2f}x -> {f_sp:.2f}x "
-                f"(floor {floor:.2f}x); {us_note}")
+                f"({floor_note}); {us_note}")
             if f_sp < floor:
+                what = ("below the absolute "
+                        f"{abs_floor:.2f}x floor "
+                        f"(beyond the {FLOOR_NOISE:.2f} noise allowance)"
+                        if abs_floor is not None
+                        and f_sp < abs_floor - FLOOR_NOISE
+                        else f"> {tolerance:.0%} drop")
                 failures.append(
                     f"{name}: speedup regressed {b_sp:.2f}x -> {f_sp:.2f}x "
-                    f"(> {tolerance:.0%} drop)")
+                    f"({what})")
     return failures, report
 
 

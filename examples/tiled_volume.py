@@ -2,7 +2,7 @@
 
 A synthetic "whole-slide" volume lives in *host* memory as a plain numpy
 array — the device never holds more than one halo-padded tile — and one
-pipe graph runs over it three ways:
+pipe graph runs over it four ways:
 
 1. a reduction-terminated program under a **memory budget**: the
    scheduler picks tile counts so a tile's working set fits, streams
@@ -12,10 +12,17 @@ pipe graph runs over it three ways:
 2. the same program with an explicit ``tiles=`` grid, showing the
    tile-shape *classes*: many tiles, a handful of traced executors;
 3. an array-valued program whose tiles assemble into a host-side output
-   buffer, bit-identical to the in-memory run under 'reflect' padding.
+   buffer, bit-identical to the in-memory run under 'reflect' padding;
+4. the same assembly streaming straight into a ``.npy`` memmap on disk
+   (``out_path=``) through the async double-buffered D2H writeback —
+   the output never fully occupies RAM either, and the stream stages at
+   most two output tiles at any moment (``writeback_stats``).
 
     PYTHONPATH=src python examples/tiled_volume.py
 """
+import os
+import tempfile
+
 import numpy as np
 
 from repro.core import melt_call_count
@@ -75,6 +82,24 @@ def main():
     print(f"\narray-valued program on a {crop.shape} crop: "
           f"assembled == in-memory: {np.array_equal(tiled_out, ref)} "
           f"(reflect padding, host-side {type(tiled_out).__name__} out)")
+
+    # --- 4. memmap output: the result never fully occupies RAM either ----
+    # plan once; the output shape/dtype are plan metadata, so the memmap
+    # is created before any tile runs and tiles write back as they land
+    tpa = Pa.plan_tiled(tiles=(3, 2, 2), method="auto",
+                        pad_value="reflect")
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "assembled.npy")
+        mm = tpa.run(out_path=path)                       # np.memmap
+        on_disk = os.path.getsize(path) / 2**20
+        reloaded = np.load(path, mmap_mode="r")
+        print(f"\nmemmap output: {mm.shape} {mm.dtype} -> {on_disk:.1f} "
+              f"MiB .npy on disk, np.load round-trip bit-identical: "
+              f"{np.array_equal(np.asarray(reloaded), ref)}")
+        print(f"writeback: {tpa.writeback_stats['placed']} tiles placed, "
+              f"max {tpa.writeback_stats['max_staged']} staged at once "
+              f"(bound: 2)")
+        del mm, reloaded  # release the mmaps before the tempdir goes away
 
 
 if __name__ == "__main__":

@@ -587,20 +587,31 @@ class TilePlan(PipePlan):
     tiles.  ``spec`` keeps the class geometry inspectable;
     ``tile_batch`` > 0 marks the stacked variant that executes a whole
     same-class tile group in one (optionally mesh-sharded) dispatch.
+
+    The crop to the tile's output box and the ``out_dtype`` cast are fused
+    *inside* the jitted executor (only final bytes ever cross the
+    device→host bus), so the plan also records the fused result's
+    ``out_shape``/``out_dtype`` — the assemble path sizes its staged
+    writeback from this metadata instead of inspecting a computed tile
+    (``None`` for reduction-terminated programs, whose result is a merge
+    state, not an array).
     """
 
-    __slots__ = ("spec", "tile_batch")
+    __slots__ = ("spec", "tile_batch", "out_shape", "out_dtype")
 
     def __init__(self, key, in_shape, dtype, opts, steps, passes, melt_calls,
-                 run_fn, spec=None, tile_batch: int = 0):
+                 run_fn, spec=None, tile_batch: int = 0, out_shape=None,
+                 out_dtype=None):
         self.spec = spec
         self.tile_batch = tile_batch
+        self.out_shape = tuple(out_shape) if out_shape is not None else None
+        self.out_dtype = out_dtype
         super().__init__(key, in_shape, dtype, opts, steps, passes,
                          melt_calls, run_fn)
 
     def __repr__(self):
         return (f"TilePlan(patch={self.in_shape}, steps={len(self.steps)}, "
-                f"tile_batch={self.tile_batch}, "
+                f"tile_batch={self.tile_batch}, out={self.out_shape}, "
                 f"method={self.opts.method!r})")
 
 

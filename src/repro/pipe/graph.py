@@ -341,7 +341,8 @@ class Pipe:
 
     def run(self, method: str = "auto", pad_value="edge", out_dtype=None,
             *, tiles=None, memory_budget=None, tile_order: str = "hilbert",
-            mesh=None, axis_name=None):
+            mesh=None, axis_name=None, prefetch: bool = True, out=None,
+            out_path=None):
         """Compile through the planner and execute.
 
         Single-op graphs lower straight onto the legacy plan kinds
@@ -353,9 +354,15 @@ class Pipe:
         With ``tiles=`` (int or per-dim counts) or ``memory_budget=``
         (bytes), the program runs *out-of-core* (DESIGN.md §12): the
         input streams through halo-padded tiles, reductions fold through
-        the merge algebra, and array outputs assemble host-side — results
-        match the in-memory run under every pad mode.  ``mesh``/
-        ``axis_name`` shard the tile stream across devices.
+        the merge algebra, and array outputs assemble host-side through
+        the async double-buffered writeback — results match the
+        in-memory run under every pad mode.  ``tile_order`` (the
+        ``order=`` of ``repro.pipe.tiled``) picks the streaming order;
+        ``prefetch=False`` disables the input-prefetch/writeback overlap
+        (one fully synchronous tile at a time); ``out=`` assembles into
+        a caller-supplied arena and ``out_path=`` into a ``.npy`` memmap
+        on disk (results larger than RAM).  ``mesh``/``axis_name`` shard
+        the tile stream across devices.
         """
         from repro.pipe import compile as _compile
 
@@ -366,7 +373,8 @@ class Pipe:
                              memory_budget=memory_budget, method=method,
                              pad_value=pad_value, out_dtype=out_dtype,
                              order=tile_order, mesh=mesh,
-                             axis_name=axis_name)
+                             axis_name=axis_name, prefetch=prefetch,
+                             out=out, out_path=out_path)
         if mesh is not None or axis_name is not None:
             raise ValueError("mesh=/axis_name= shard the *tiled* stream; "
                              "pass tiles= or memory_budget= too (or use "
@@ -375,6 +383,12 @@ class Pipe:
         if tile_order != "hilbert":
             raise ValueError("tile_order only applies to tiled execution; "
                              "pass tiles= or memory_budget= too")
+        if prefetch is not True:
+            raise ValueError("prefetch= tunes the tiled stream's overlap; "
+                             "pass tiles= or memory_budget= too")
+        if out is not None or out_path is not None:
+            raise ValueError("out=/out_path= assemble the *tiled* array "
+                             "output; pass tiles= or memory_budget= too")
         return _compile.run(self, method=method, pad_value=pad_value,
                             out_dtype=out_dtype)
 
@@ -383,7 +397,11 @@ class Pipe:
                    tile_order: str = "hilbert"):
         """Compile the out-of-core schedule without running it — the
         :class:`~repro.pipe.tiled.TiledProgram` (tile boxes, shape
-        classes, melt/trace accounting)."""
+        classes, assembled ``out_shape``/``out_dtype``, melt/trace
+        accounting).  ``tile_order`` maps to ``order=`` of
+        :func:`repro.pipe.tiled.plan_tiled`, same as in :meth:`run`;
+        run-time knobs (``prefetch=``, ``out=``, ``out_path=``) live on
+        :meth:`TiledProgram.run`."""
         from repro.pipe.tiled import plan_tiled as _plan_tiled
 
         return _plan_tiled(self, tiles=tiles, memory_budget=memory_budget,

@@ -20,9 +20,15 @@ The scheme, per tile of the program's *output* grid:
    slab engine uses for its halo-exchanged dim, here applied to every
    dim); 'valid' stages run as-is.  Interior halos are real neighbour
    data carried by the read region, never padding.
-3. **Crop & merge** — the final patch is cropped to exactly the tile's
-   output box.  Array-valued programs assemble tiles into a host-side
-   buffer; reduction-terminated programs fold per-tile
+3. **Crop & merge** — the crop to the tile's output box and the
+   ``out_dtype`` cast are fused *inside* the jitted executor, so only
+   final bytes ever cross the device→host bus.  Array-valued programs
+   assemble tiles into a host-side buffer (optionally a caller-supplied
+   arena or an ``np.lib.format.open_memmap`` file, for results larger
+   than RAM) through :class:`_WritebackStream` — the output-side mirror
+   of the input prefetch: tile i's device→host copy and placement overlap
+   tile i+1's compute, with at most 2 results staged at any moment.
+   Reduction-terminated programs fold per-tile
    ``MomentState`` / ``Histogram`` / ``CovState`` through the PR-3 merge
    algebra (a streaming binary-counter fold ⇒ balanced merge tree, O(log
    #tiles) live states) — the full intermediate never exists anywhere.
@@ -262,22 +268,34 @@ def _interior_patch_elems(out_shape, footprint, counts) -> int:
 
 
 def _budget_tile_counts(out_shape, footprint, itemsize: int, batch: int,
-                        channels: int, budget: int) -> Tuple[int, ...]:
+                        channels: int, budget: int,
+                        out_itemsize: int = 0) -> Tuple[int, ...]:
     """Pick per-dim tile counts so an interior tile's working set fits the
     byte budget.
 
     The estimate is deliberately simple and documented: patch bytes ×
     (2 + max(channels, 1)) for the padded copy and the widest
-    intermediate, ×2 for the double-buffered prefetch.  Splits always go
-    to the dim with the largest current patch extent (keeps tiles chunky
-    → fewest shape classes, best halo-to-interior ratio).
+    intermediate, ×2 for the double-buffered prefetch.  Array-output
+    programs (``out_itemsize`` > 0) additionally stage the writeback:
+    up to 2 cropped result tiles live awaiting their device→host copy
+    (the double-buffered D2H mirror of the input prefetch), so the
+    estimate adds 2 × output-tile bytes.  Splits always go to the dim
+    with the largest current patch extent (keeps tiles chunky → fewest
+    shape classes, best halo-to-interior ratio).
     """
     overhead = 2.0 * (2 + max(channels, 1))
     counts = [1] * len(out_shape)
 
     def bytes_now():
-        return (_interior_patch_elems(out_shape, footprint, counts)
-                * max(1, batch) * itemsize * overhead)
+        b = (_interior_patch_elems(out_shape, footprint, counts)
+             * max(1, batch) * itemsize * overhead)
+        if out_itemsize:
+            tile_out = 1
+            for n, k in zip(out_shape, counts):
+                tile_out *= -(-n // k)
+            b += (2 * tile_out * max(1, batch) * max(channels, 1)
+                  * out_itemsize)
+        return b
 
     while bytes_now() > budget:
         splittable = [d for d in range(len(out_shape))
@@ -327,6 +345,101 @@ def _merge_fn(out_kind: str):
     return merge_cov
 
 
+class _WritebackStream:
+    """Async double-buffered device→host writeback for array outputs.
+
+    The output-side mirror of the input prefetch: :meth:`stage` is called
+    immediately after the *next* tile's compute is dispatched.  It starts
+    the device→host copy of this tile's result
+    (``jax.Array.copy_to_host_async``) and then drains the *previously*
+    staged result into the assembled buffer — so host placement of tile i
+    overlaps device compute of tile i+1, and the stream never holds more
+    than ``depth`` (= 2) staged results.  ``depth=1`` (``prefetch=False``)
+    degrades to the old fully synchronous place-per-tile behaviour.
+
+    Placement prefers a zero-copy DLPack view of the result buffer
+    (``np.from_dlpack``; on the CPU backend the "device" buffer is
+    host-resident, so no staging allocation happens at all).  Backends
+    whose buffers numpy cannot view fall back to one host staging copy
+    per tile — already in flight thanks to the async transfer above, and
+    dropped as soon as its bytes land in the assembled buffer, so peak
+    host memory stays ≤ ``depth`` result tiles either way.
+
+    An entry may also be a same-class tile *group* (a tuple of specs with
+    a stack-axis result, the mesh-sharded path): the group drains as one
+    staged unit, placing each member from the stacked host view.
+    """
+
+    __slots__ = ("buf", "max_staged", "placed", "_batched", "_channels",
+                 "_dtype", "_depth", "_staged", "_views", "_copies")
+
+    def __init__(self, buf, batched: bool, channels: int, out_dtype,
+                 depth: int = 2):
+        self.buf = buf
+        self.max_staged = 0
+        self.placed = 0
+        self._batched = batched
+        self._channels = channels
+        self._dtype = np.dtype(out_dtype)
+        self._depth = max(1, int(depth))
+        self._staged = []  # [(spec | tuple-of-specs, device result)]
+        self._views = 0    # zero-copy dlpack placements
+        self._copies = 0   # staging-copy fallbacks
+
+    def _slices(self, spec: TileSpec):
+        return (tuple([slice(None)] if self._batched else [])
+                + tuple(slice(a, b)
+                        for a, b in zip(spec.out_lo, spec.out_hi))
+                + (tuple([slice(None)]) if self._channels else ()))
+
+    def _host_view(self, tile):
+        """A host-readable array of ``tile``'s bytes: zero-copy when the
+        buffer supports DLPack into numpy, else one staging copy."""
+        try:
+            h = np.from_dlpack(tile)
+            self._views += 1
+            return h
+        except Exception:
+            self._copies += 1
+            return np.asarray(tile)
+
+    def _drain_one(self):
+        specs, tile = self._staged.pop(0)
+        host = self._host_view(tile)
+        if isinstance(specs, tuple):  # stacked same-class group
+            for j, s in enumerate(specs):
+                self.buf[self._slices(s)] = host[j]
+                self.placed += 1
+        else:
+            self.buf[self._slices(specs)] = host
+            self.placed += 1
+
+    def stage(self, specs, tile):
+        if np.dtype(tile.dtype) != self._dtype:
+            raise AssertionError(
+                f"internal: tile executor emitted dtype {tile.dtype}, "
+                f"but the plan promised {self._dtype} — the fused "
+                f"out_dtype cast and the plan metadata disagree")
+        try:
+            tile.copy_to_host_async()
+        except (AttributeError, NotImplementedError):
+            pass  # plain arrays (tests) / backends without async D2H
+        self._staged.append((specs, tile))
+        self.max_staged = max(self.max_staged, len(self._staged))
+        while len(self._staged) > self._depth - 1:
+            self._drain_one()
+
+    def flush(self):
+        while self._staged:
+            self._drain_one()
+        return self.buf
+
+    def stats(self) -> dict:
+        return {"max_staged": self.max_staged, "placed": self.placed,
+                "views": self._views, "copies": self._copies,
+                "depth": self._depth}
+
+
 @dataclasses.dataclass
 class TiledProgram:
     """A compiled out-of-core schedule: the fused program + tile geometry.
@@ -345,6 +458,13 @@ class TiledProgram:
     tile_counts: Tuple[int, ...]
     specs: Tuple[TileSpec, ...]
     classes: dict
+    #: full assembled shape (batch + out grid + channels) — plan metadata,
+    #: derived from the program, never from a computed tile
+    out_shape: Tuple[int, ...] = ()
+    #: np.dtype of the assembled output (None for reduction programs)
+    out_dtype: object = None
+    #: last run's :class:`_WritebackStream` counters (array outputs only)
+    writeback_stats: dict = dataclasses.field(default_factory=dict)
 
     @property
     def num_tiles(self) -> int:
@@ -371,11 +491,19 @@ class TiledProgram:
                 ((P.x.shape[0],) if P.batched else ()))
 
         def build():
+            if program.out_kind == "array":
+                t_out = (lead + tuple(b - a for a, b in spec.crop)
+                         + ((program.channels,) if program.channels
+                            else ()))
+                t_dt = self.out_dtype
+            else:
+                t_out = t_dt = None  # merge state, not an array
             return TilePlan(
                 ("tiled",) + key, lead + spec.patch_shape, dt, opts,
                 program.steps, program.passes, program.melt_calls,
                 lambda t: _run_tile(t, program, spec, opts, batched),
-                spec=ckey, tile_batch=stack)
+                spec=ckey, tile_batch=stack, out_shape=t_out,
+                out_dtype=t_dt)
 
         return get_tile_plan(key, build)
 
@@ -384,24 +512,54 @@ class TiledProgram:
               + [slice(l, h) for l, h in zip(spec.read_lo, spec.read_hi)])
         return self.graph.x[tuple(sl)]
 
-    def _out_buffer(self, tile0):
-        shape = (((self.graph.x.shape[0],) if self.graph.batched else ())
-                 + self.program.out_shape
-                 + ((self.program.channels,) if self.program.channels
-                    else ()))
-        return np.empty(shape, dtype=np.asarray(tile0).dtype)
-
-    def _place(self, buf, spec: TileSpec, tile):
-        sl = (([slice(None)] if self.graph.batched else [])
-              + [slice(a, b) for a, b in zip(spec.out_lo, spec.out_hi)]
-              + ([slice(None)] if self.program.channels else []))
-        buf[tuple(sl)] = np.asarray(tile)
+    def _make_out_buffer(self, out=None, out_path=None):
+        """The assembled-output buffer, sized from plan metadata (never
+        from a computed tile): a fresh array, the caller's ``out=``
+        arena, or a ``.npy`` memmap created at ``out_path=`` — the
+        latter streams results larger than RAM straight to disk."""
+        if out is not None and out_path is not None:
+            raise ValueError("pass at most one of out= / out_path=")
+        if self.program.out_kind != "array":
+            if out is not None or out_path is not None:
+                raise ValueError(
+                    "out=/out_path= assemble array outputs; this program "
+                    f"ends in a {self.program.out_kind!r} reduction whose "
+                    "result is a merged state, not an array")
+            return None
+        shape, dtype = self.out_shape, self.out_dtype
+        if out_path is not None:
+            return np.lib.format.open_memmap(
+                str(out_path), mode="w+", dtype=dtype, shape=shape)
+        if out is not None:
+            if not isinstance(out, np.ndarray):
+                raise TypeError(
+                    "out= must be a writable np.ndarray (np.memmap "
+                    f"included), got {type(out).__name__}")
+            if tuple(out.shape) != shape or np.dtype(out.dtype) != dtype:
+                raise ValueError(
+                    f"out= has shape {tuple(out.shape)} dtype "
+                    f"{np.dtype(out.dtype).name}; this program assembles "
+                    f"shape {shape} dtype {np.dtype(dtype).name}")
+            if not out.flags.writeable:
+                raise ValueError("out= array is read-only")
+            return out
+        return np.empty(shape, dtype)
 
     def run(self, mesh=None, axis_name: Optional[str] = None,
-            prefetch: bool = True):
+            prefetch: bool = True, out=None, out_path=None):
         """Stream every tile; returns the merged reduction state, or the
         assembled output as a host-side ``np.ndarray`` (the out-of-core
-        contract: the device only ever holds tiles)."""
+        contract: the device only ever holds tiles).
+
+        Array outputs assemble through the async double-buffered
+        writeback (:class:`_WritebackStream`); ``prefetch=False``
+        disables both the input prefetch and the writeback overlap (one
+        fully synchronous tile at a time).  ``out=`` assembles into a
+        caller-supplied arena (shape/dtype must match ``out_shape`` /
+        ``out_dtype``); ``out_path=`` creates an
+        ``np.lib.format.open_memmap`` file and assembles into it, for
+        results larger than RAM.  Both return the buffer they filled.
+        """
         if (mesh is None) != (axis_name is None):
             raise ValueError("pass mesh= and axis_name= together")
         if mesh is not None and self.graph.batched:
@@ -411,75 +569,98 @@ class TiledProgram:
                 "graphs untiled via sharded_pipe_fn, or tiled without a "
                 "mesh")
         reduce_out = self.program.out_kind != "array"
-        merge = _merge_fn(self.program.out_kind) if reduce_out else None
-        push = result = buf = None
+        buf = self._make_out_buffer(out, out_path)  # validates out kwargs
+        push = result = sink = None
         if reduce_out:
-            push, result = _fold_merge(merge)
+            push, result = _fold_merge(_merge_fn(self.program.out_kind))
+        else:
+            sink = _WritebackStream(
+                buf, self.graph.batched, self.program.channels,
+                self.out_dtype, depth=2 if prefetch else 1)
 
         if mesh is not None:
-            return self._run_sharded(mesh, axis_name, push, result)
+            res = self._run_sharded(mesh, axis_name, push, result, sink)
+        else:
+            # double-buffered both ways: tile i+1's H2D transfer is
+            # issued before tile i's compute is dispatched, and tile i's
+            # D2H writeback drains while tile i+1 computes
+            specs = self.specs
+            cur = jax.device_put(self._read_patch(specs[0]))
+            for i, spec in enumerate(specs):
+                nxt = (jax.device_put(self._read_patch(specs[i + 1]))
+                       if prefetch and i + 1 < len(specs) else None)
+                tile = self._plan_for(spec)(cur)
+                if reduce_out:
+                    push(tile)
+                else:
+                    sink.stage(spec, tile)
+                if not prefetch and i + 1 < len(specs):
+                    nxt = jax.device_put(self._read_patch(specs[i + 1]))
+                cur = nxt
+            res = result() if reduce_out else sink.flush()
+        if sink is not None:
+            self.writeback_stats.clear()
+            self.writeback_stats.update(sink.stats())
+        return res
 
-        # double-buffered prefetch: tile i+1's H2D transfer is issued
-        # before tile i's result is consumed
-        specs = self.specs
-        cur = jax.device_put(self._read_patch(specs[0]))
-        for i, spec in enumerate(specs):
-            nxt = (jax.device_put(self._read_patch(specs[i + 1]))
-                   if prefetch and i + 1 < len(specs) else None)
-            out = self._plan_for(spec)(cur)
-            if reduce_out:
-                push(out)
-            else:
-                if buf is None:
-                    buf = self._out_buffer(out)
-                self._place(buf, spec, out)
-            if not prefetch and i + 1 < len(specs):
-                nxt = jax.device_put(self._read_patch(specs[i + 1]))
-            cur = nxt
-        return result() if reduce_out else buf
-
-    def _run_sharded(self, mesh, axis_name, push, result):
+    def _run_sharded(self, mesh, axis_name, push, result, sink):
         """Group same-class tiles into mesh-axis-sized stacks; each stack
-        is one sharded dispatch (halos are baked in — no exchange)."""
+        is one sharded dispatch (halos are baked in — no exchange).
+
+        Array outputs share the staged writeback with the single-device
+        path (a whole stacked group drains as one unit while the next
+        group computes), and the stacked reads fill two alternating
+        per-class host staging slabs instead of allocating a fresh
+        ``np.stack`` per group — ``device_put`` may alias aligned host
+        memory, so a slab is only refilled once the group computed from
+        it has drained, which the sink's ≤1-pending invariant
+        guarantees.  Leftover tiles drain through the same sink.
+        """
         from repro.core.distributed import put_tile_batch
         from repro.stats.moments import merge_along_axis
 
         ways = int(mesh.shape[axis_name])
         reduce_out = push is not None
-        buf = None
+        dt = jnp.dtype(self.graph.x.dtype)
         by_class = {}
         for spec in self.specs:
             by_class.setdefault(spec.class_key(), []).append(spec)
+        slabs = {}  # class key -> two alternating input staging slabs
         leftovers = []
-        for members in by_class.values():
+        for ckey, members in by_class.items():
             n_full = (len(members) // ways) * ways
             for i in range(0, n_full, ways):
                 group = members[i:i + ways]
-                stacked = np.stack(
-                    [np.asarray(self._read_patch(s)) for s in group])
+                if reduce_out:
+                    stacked = np.stack(
+                        [np.asarray(self._read_patch(s)) for s in group])
+                else:
+                    pair = slabs.get(ckey)
+                    if pair is None:
+                        pair = slabs[ckey] = [
+                            np.empty((ways,) + group[0].patch_shape, dt)
+                            for _ in range(2)]
+                    stacked = pair[(i // ways) % 2]
+                    for j, s in enumerate(group):
+                        stacked[j] = self._read_patch(s)
                 dev = put_tile_batch(stacked, mesh, axis_name)
-                out = self._plan_for(group[0], stack=ways)(dev)
+                tile = self._plan_for(group[0], stack=ways)(dev)
                 if reduce_out:
                     if self.program.out_kind == "moments":
-                        push(merge_along_axis(out, axis=0))
+                        push(merge_along_axis(tile, axis=0))
                     else:  # hist/cov states already fold the stack axis
-                        push(out)
+                        push(tile)
                 else:
-                    if buf is None:
-                        buf = self._out_buffer(out[0])
-                    for j, s in enumerate(group):
-                        self._place(buf, s, out[j])
+                    sink.stage(tuple(group), tile)
             leftovers.extend(members[n_full:])
         for spec in leftovers:
-            out = self._plan_for(spec)(jax.device_put(
+            tile = self._plan_for(spec)(jax.device_put(
                 self._read_patch(spec)))
             if reduce_out:
-                push(out)
+                push(tile)
             else:
-                if buf is None:
-                    buf = self._out_buffer(out)
-                self._place(buf, spec, out)
-        return result() if reduce_out else buf
+                sink.stage(spec, tile)
+        return result() if reduce_out else sink.flush()
 
 
 # -- planning entry points ---------------------------------------------------
@@ -544,6 +725,26 @@ def plan_tiled(
                  or ((1, 0, 0),) * rank)
     out_shape = program.out_shape
 
+    # plan-time output metadata: abstract-eval the tile executor (shape
+    # math only, no compute/compile) on the whole-volume "tile" — the
+    # assembled buffer's dtype comes from the program, never from the
+    # first computed tile, so mixed-precision programs can't mis-pin it
+    out_full: Tuple[int, ...] = ()
+    out_dt = None
+    out_itemsize = 0
+    if program.out_kind == "array":
+        lead = (P.x.shape[0],) if P.batched else ()
+        spec_all = _tile_spec(geoms, footprint, (0,) * rank,
+                              out_shape, P.spatial_shape, opts.pad_value)
+        aval = jax.eval_shape(
+            lambda t: _run_tile(t, program, spec_all, opts, P.batched),
+            jax.ShapeDtypeStruct(lead + spec_all.patch_shape,
+                                 jnp.dtype(P.x.dtype)))
+        out_dt = np.dtype(aval.dtype)
+        out_itemsize = out_dt.itemsize
+        out_full = (lead + out_shape
+                    + ((program.channels,) if program.channels else ()))
+
     if (tiles is None) == (memory_budget is None):
         raise ValueError("pass exactly one of tiles= or memory_budget=")
     if tiles is not None:
@@ -563,7 +764,7 @@ def plan_tiled(
         counts = _budget_tile_counts(
             out_shape, footprint, jnp.dtype(P.x.dtype).itemsize,
             P.x.shape[0] if P.batched else 1, program.channels,
-            int(memory_budget))
+            int(memory_budget), out_itemsize=out_itemsize)
 
     per_dim, boxes = plan_tile_partition(out_shape, counts)
     grid_counts = tuple(len(r) for r in per_dim)
@@ -583,14 +784,17 @@ def plan_tiled(
         classes[s.class_key()] = classes.get(s.class_key(), 0) + 1
     return TiledProgram(graph=P, opts=opts, program=program,
                         footprint=footprint, tile_counts=grid_counts,
-                        specs=specs, classes=classes)
+                        specs=specs, classes=classes,
+                        out_shape=out_full, out_dtype=out_dt)
 
 
 def run_tiled(P: Pipe, *, tiles=None, memory_budget=None, method="auto",
               pad_value="edge", out_dtype=None, order="hilbert",
-              mesh=None, axis_name=None, prefetch=True):
+              mesh=None, axis_name=None, prefetch=True, out=None,
+              out_path=None):
     """Plan + run in one call (the ``Pipe.run(tiles=…)`` backend)."""
     tp = plan_tiled(P, tiles=tiles, memory_budget=memory_budget,
                     method=method, pad_value=pad_value, out_dtype=out_dtype,
                     order=order)
-    return tp.run(mesh=mesh, axis_name=axis_name, prefetch=prefetch)
+    return tp.run(mesh=mesh, axis_name=axis_name, prefetch=prefetch,
+                  out=out, out_path=out_path)

@@ -148,3 +148,71 @@ def test_load_rows_filters_malformed_rows(tmp_path):
     rows, dropped = _load_rows(p)
     assert set(rows) == {"a/b"}
     assert dropped == 2
+
+
+# -- the absolute parity floor (tiled/assemble) ---------------------------
+
+
+def _parity_row(name, us=100.0, parity=1.1):
+    return {"name": name, "us_per_call": us,
+            "derived": f"in-memory=110us parity={parity:.2f}x"}
+
+
+def _tiled_dirs(tmp_path, base_parity, fresh_parity):
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    base.mkdir()
+    fresh.mkdir()
+    name = "tiled/assemble/32x48x48/t2"
+    _write(str(base / "BENCH_tiled.json"),
+           {"rows": [_parity_row(name, 100.0, base_parity)]})
+    _write(str(fresh / "BENCH_tiled.json"),
+           {"rows": [_parity_row(name, 100.0, fresh_parity)]})
+    return str(base), str(fresh)
+
+
+def test_parity_factor_is_parsed_and_gated(tmp_path):
+    base, fresh = _tiled_dirs(tmp_path, 1.10, 1.05)
+    failures, report = compare(base, fresh, 0.25)
+    assert not failures  # within tolerance AND above the absolute floor
+    assert any("tiled/assemble" in line and line.startswith("ok")
+               for line in report)
+
+
+def test_parity_below_absolute_floor_fails_even_within_tolerance(tmp_path):
+    # 1.10x -> 0.95x is only a 14% drop (inside the 25% tolerance), but
+    # 0.95x breaks the tiled/assemble >= 1.0x parity claim: must fail
+    base, fresh = _tiled_dirs(tmp_path, 1.10, 0.95)
+    failures, _ = compare(base, fresh, 0.25)
+    assert any("below the absolute 1.00x floor" in f for f in failures)
+
+
+def test_parity_just_under_floor_within_noise_band_passes(tmp_path):
+    # true tiled/assemble parity sits exactly at the 1.0 claim; a fresh
+    # 0.98x is inside the FLOOR_NOISE measurement allowance, not a
+    # regression (a literal < 1.0 check would coin-flip CI on jitter)
+    base, fresh = _tiled_dirs(tmp_path, 1.00, 0.98)
+    failures, _ = compare(base, fresh, 0.25)
+    assert not failures
+
+
+def test_parity_floor_does_not_apply_to_other_rows(tmp_path):
+    # a non-floored gated row at 0.9x of a 1.0x baseline is fine
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    base.mkdir()
+    fresh.mkdir()
+    _write(str(base / "BENCH_pipe.json"),
+           {"rows": [_row("pipe/fused-chain/32x48x48", 100.0, 1.0)]})
+    _write(str(fresh / "BENCH_pipe.json"),
+           {"rows": [_row("pipe/fused-chain/32x48x48", 100.0, 0.9)]})
+    failures, _ = compare(str(base), str(fresh), 0.25)
+    assert not failures
+
+
+def test_drifted_baseline_cannot_lower_the_floor(tmp_path):
+    # even if a bad baseline committed 0.8x, a fresh 0.85x still fails:
+    # the absolute floor is independent of the baseline value
+    base, fresh = _tiled_dirs(tmp_path, 0.80, 0.85)
+    failures, _ = compare(base, fresh, 0.25)
+    assert any("below the absolute 1.00x floor" in f for f in failures)

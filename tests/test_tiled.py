@@ -587,3 +587,177 @@ def test_sharded_tile_stream_rejects_batched_graph(rng):
 
     with pytest.raises(NotImplementedError, match="unbatched"):
         tp.run(mesh=_FakeMesh(), axis_name="t")
+
+
+# -- async writeback, out=/out_path=, plan-time output metadata --------------
+
+
+@pytest.mark.parametrize("method", ("lax", "materialize"))
+@pytest.mark.parametrize("pad", PADS)
+def test_memmap_out_bit_identical(method, pad, rng, tmp_path):
+    """out_path= assembles the exact bytes of the in-memory np.ndarray
+    result, across pad modes and execution paths."""
+    x = _vol(rng, (10, 9, 8))
+    P = pipe(x).gaussian(1.2, op_shape=3).gradient()
+    ref = np.asarray(P.run(method=method, pad_value=pad))
+    tp = P.plan_tiled(tiles=(2, 2, 2), method=method, pad_value=pad)
+    mm = tp.run(out_path=tmp_path / "out.npy")
+    assert isinstance(mm, np.memmap)
+    np.testing.assert_array_equal(np.asarray(mm), ref)
+    del mm  # release the mapping before tmp_path cleanup (Windows-safe)
+    np.testing.assert_array_equal(np.load(tmp_path / "out.npy"), ref)
+
+
+def test_prefetch_false_equals_true(rng):
+    """prefetch=False (fully synchronous, no input prefetch, no staged
+    writeback) and the default overlapped stream agree bit-for-bit —
+    from TiledProgram.run and through the Pipe.run plumbing."""
+    x = _vol(rng, (12, 10))
+    P = pipe(x).gaussian(1.0, op_shape=3).gradient()
+    tp = P.plan_tiled(tiles=(3, 2), method="lax")
+    a = tp.run(prefetch=True)
+    assert tp.writeback_stats["depth"] == 2
+    b = tp.run(prefetch=False)
+    assert tp.writeback_stats["depth"] == 1
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(
+        P.run(method="lax", tiles=(3, 2), prefetch=False), a)
+
+
+def test_prefetch_requires_tiles(rng):
+    x = _vol(rng, (12, 10))
+    P = pipe(x).gaussian(1.0, op_shape=3)
+    with pytest.raises(ValueError, match="tiles= or memory_budget="):
+        P.run(method="lax", prefetch=False)
+
+
+def test_out_buffer_dtype_from_plan_metadata(rng):
+    """out_shape/out_dtype are plan metadata (derived from the program,
+    not the first computed tile) — with and without out_dtype=."""
+    x = _vol(rng, (12, 10))
+    P = pipe(x).gaussian(1.0, op_shape=3).gradient()
+    tp = P.plan_tiled(tiles=(3, 2), method="lax")
+    assert tp.out_shape == (12, 10, 2)
+    assert tp.out_dtype == np.float32
+    assert tp.run().dtype == np.float32
+
+    tpb = P.plan_tiled(tiles=(3, 2), method="lax", out_dtype="bfloat16")
+    assert tpb.out_dtype == jnp.dtype(jnp.bfloat16)
+    assert tpb.run().dtype == jnp.dtype(jnp.bfloat16)
+
+    # reduction programs assemble nothing: no array metadata
+    tpm = (pipe(x).gaussian(1.0, op_shape=3).moments(order=2)
+           .plan_tiled(tiles=(2, 2)))
+    assert tpm.out_dtype is None and tpm.out_shape == ()
+
+
+def test_tile_plan_records_fused_crop_cast_output(rng, fresh_cache):
+    """Each interned TilePlan carries the fused crop/out_dtype-cast
+    result metadata for its class."""
+    x = _vol(rng, (12, 10))
+    P = pipe(x).gaussian(1.0, op_shape=3).gradient()
+    tp = P.plan_tiled(tiles=(3, 1), method="lax", out_dtype="float16")
+    for spec in tp.specs:
+        plan = tp._plan_for(spec)
+        assert isinstance(plan, TilePlan)
+        want = tuple(b - a for a, b in spec.crop) + (2,)
+        assert plan.out_shape == want
+        assert plan.out_dtype == np.float16
+    # reduction classes carry none (their result is a merge state)
+    tpm = (pipe(x).gaussian(1.0, op_shape=3).moments(order=2)
+           .plan_tiled(tiles=(2, 1)))
+    assert tpm._plan_for(tpm.specs[0]).out_shape is None
+
+
+def test_writeback_working_set_bounded(rng):
+    """The assemble stream never holds more than 2 staged output tiles,
+    however many tiles stream."""
+    x = _vol(rng, (24, 18))
+    P = pipe(x).gaussian(1.0, op_shape=3).gradient()
+    tp = P.plan_tiled(tiles=(6, 3), method="lax")
+    assert tp.num_tiles == 18
+    tp.run()
+    stats = tp.writeback_stats
+    assert stats["placed"] == tp.num_tiles
+    assert 1 <= stats["max_staged"] <= 2
+    tp.run(prefetch=False)
+    assert tp.writeback_stats["max_staged"] == 1
+
+
+def test_out_arena_reuse(rng):
+    """out= assembles into the caller's arena and returns it — the
+    steady-state of an out-of-core loop allocates nothing per run."""
+    x = _vol(rng, (12, 10))
+    P = pipe(x).gaussian(1.0, op_shape=3).gradient()
+    tp = P.plan_tiled(tiles=(3, 2), method="lax")
+    ref = tp.run()
+    arena = np.empty(tp.out_shape, tp.out_dtype)
+    got = tp.run(out=arena)
+    assert got is arena
+    np.testing.assert_array_equal(arena, ref)
+    arena[...] = -1.0  # a second run refills the same arena
+    np.testing.assert_array_equal(tp.run(out=arena), ref)
+
+
+def test_out_validation_errors(rng, tmp_path):
+    x = _vol(rng, (12, 10))
+    P = pipe(x).gaussian(1.0, op_shape=3).gradient()
+    tp = P.plan_tiled(tiles=(3, 2), method="lax")
+    with pytest.raises(ValueError, match="at most one of"):
+        tp.run(out=np.empty(tp.out_shape, tp.out_dtype),
+               out_path=tmp_path / "x.npy")
+    with pytest.raises(ValueError, match="shape"):
+        tp.run(out=np.empty((1, 2), np.float32))
+    with pytest.raises(ValueError, match="dtype"):
+        tp.run(out=np.empty(tp.out_shape, np.float64))
+    with pytest.raises(TypeError, match="np.ndarray"):
+        tp.run(out=[[0.0]])
+    ro = np.empty(tp.out_shape, tp.out_dtype)
+    ro.flags.writeable = False
+    with pytest.raises(ValueError, match="read-only"):
+        tp.run(out=ro)
+    # reductions have no array output to assemble
+    tpm = (pipe(x).gaussian(1.0, op_shape=3).moments(order=2)
+           .plan_tiled(tiles=(2, 2)))
+    with pytest.raises(ValueError, match="merged state"):
+        tpm.run(out_path=tmp_path / "m.npy")
+    # and the untiled Pipe.run rejects the kwargs outright
+    with pytest.raises(ValueError, match="tiles= or memory_budget="):
+        P.run(method="lax", out_path=tmp_path / "y.npy")
+
+
+def test_memmap_out_exceeds_tile_budget(rng, tmp_path):
+    """Acceptance: a memmap-out run completes on a volume whose assembled
+    output is larger than the tile memory budget, allclose to in-memory."""
+    x = _vol(rng, (48, 32, 24))
+    P = pipe(x).gaussian(1.2, op_shape=3).gradient()
+    budget = 1 << 18  # 256 KiB working-set budget per tile
+    tp = P.plan_tiled(memory_budget=budget, method="lax")
+    out_bytes = int(np.prod(tp.out_shape)) * tp.out_dtype.itemsize
+    assert out_bytes > budget  # the full result can never sit in-budget
+    assert tp.num_tiles > 2
+    mm = tp.run(out_path=tmp_path / "big.npy")
+    assert tp.writeback_stats["max_staged"] <= 2
+    ref = np.asarray(P.run(method="lax", pad_value="edge"))
+    np.testing.assert_allclose(np.asarray(mm), ref, rtol=1e-6, atol=1e-6)
+    del mm
+
+
+def test_budget_counts_staged_output_tiles():
+    """Array-output programs add 2 × output-tile bytes (the staged
+    writeback) to the working-set estimate: at an equal budget the
+    tiling is at least as fine as a reduction program's."""
+    from repro.pipe.tiled import _budget_tile_counts
+
+    shape = (64, 64, 64)
+    fp = ((1, 2, 2),) * 3
+    budget = 600_000
+    plain = _budget_tile_counts(shape, fp, 4, 1, 3, budget)
+    staged = _budget_tile_counts(shape, fp, 4, 1, 3, budget,
+                                 out_itemsize=4)
+    assert int(np.prod(staged)) > int(np.prod(plain))
+    # and the budget-driven plan of an array program picks up the term
+    x = jnp.zeros(shape, jnp.float32)
+    P = pipe(x).gaussian(1.0, op_shape=5).gradient()
+    tp = P.plan_tiled(memory_budget=budget, method="lax")
+    assert tuple(tp.tile_counts) == tuple(staged)
