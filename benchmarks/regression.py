@@ -54,6 +54,7 @@ GATED_PREFIXES = (
     "pipe/fused-chain",    # fused pipeline vs eager 3-call chain
     "tiled/stream-var",    # out-of-core stream vs naive per-tile eager loop
     "tiled/assemble",      # tiled array assembly vs the in-memory run
+    "tiled/ckpt-overhead",  # journaled stream vs the unjournaled stream
 )
 
 #: absolute factor floors, by gated prefix: the fresh run must meet these
@@ -63,6 +64,15 @@ GATED_PREFIXES = (
 #: anything below 1.0x is a regression even if a baseline said otherwise.
 GATED_FLOORS = {
     "tiled/assemble": 1.0,
+    # the crash-only journal (DESIGN.md §13) promises ≤5% overhead vs
+    # the unjournaled stream: appends/fsyncs/snapshot commits run on a
+    # background writer that overlaps the stream.  The floor is pinned
+    # to the full shape because the claim is *amortized*: the journal
+    # lifecycle (dir setup, writer thread, one fold snapshot, final
+    # fsync) is a fixed few-ms cost per run — ~0.5% of the full-shape
+    # stream, but by construction right at 5% of the ~90ms --quick
+    # stream.  Quick rows are still drift-gated vs their baseline.
+    "tiled/ckpt-overhead/64x96x96": 0.95,
 }
 
 #: one-sided measurement-resolution allowance on absolute floors.  Parity

@@ -26,6 +26,14 @@ tile instead of three dispatches and two tile-sized intermediates.
 - ``tiled/memmap-out``  — the same program assembling straight into an
   ``np.lib.format.open_memmap`` file (``out_path=``); context scaling
   row for the larger-than-RAM story.
+- ``tiled/ckpt-overhead`` — the stream row's reduction run *with* the
+  crash-only journal + fold-state snapshots (``checkpoint_dir=``,
+  DESIGN.md §13) vs the same run unjournaled.  **Gated ≥0.95x parity**
+  (≤5% overhead): durability is cadence-chunked journal appends/fsyncs
+  plus an atomic ``state.npz`` snapshot every ``checkpoint_every``
+  tiles, all on the checkpoint's background writer thread while the
+  stream's host thread keeps dispatching tiles, so it must be nearly
+  free next to the compute.
 
 It also *asserts* (always, not just ``--strict``):
 
@@ -49,6 +57,7 @@ import argparse
 import os
 import sys
 import tempfile
+import time
 
 import jax
 import jax.numpy as jnp
@@ -110,6 +119,50 @@ def stream_pair(x, reps):
         reps=reps), tp
 
 
+def ckpt_pair(x, ckpt_root, reps):
+    """(t_journaled_us, parity) for the stream row's reduction program.
+    Gated ≥0.95x parity: journaling + snapshot-every-8-tiles must cost
+    ≤5% vs the unjournaled stream.
+
+    Two quirks vs the other rows' plain ``_time_pair``: each journaled
+    rep gets a *fresh* checkpoint dir (re-running into a completed
+    journal would resume and compute nothing, timing the no-op instead
+    of the durable run), and parity is the median of per-rep
+    *bracketed* ratios — each journaled call is sandwiched between two
+    plain calls and compared to their mean.  The overhead under test is
+    a few percent, below the minute-scale clock drift of shared
+    runners; independent medians (what ``_time_pair`` returns) absorb
+    that drift into the ratio, bracketing cancels it."""
+    P = (pipe(x).gaussian(SIGMA, op_shape=GAUSS_OP, padding="valid")
+         .gradient(padding="valid").moments(order=2))
+    tp = P.plan_tiled(tiles=TILES, method="auto")
+    n = [0]
+
+    def run_journaled():
+        n[0] += 1
+        d = os.path.join(ckpt_root, f"rep{n[0]}")
+        return tp.run(checkpoint_dir=d, checkpoint_every=8).variance
+
+    def run_plain():
+        return tp.run().variance
+
+    def once(f):
+        t0 = time.perf_counter()
+        np.asarray(f())
+        return time.perf_counter() - t0
+
+    for _ in range(2):  # warmup: trace + first-touch of the ckpt dir
+        once(run_journaled), once(run_plain)
+    ratios, times = [], []
+    for _ in range(reps):
+        before = once(run_plain)
+        t_j = once(run_journaled)
+        after = once(run_plain)
+        times.append(t_j)
+        ratios.append(((before + after) / 2) / t_j)
+    return (float(np.median(times)) * 1e6, float(np.median(ratios))), tp
+
+
 def _assemble_setup(x):
     """The honest out-of-core setting: a *host-resident* numpy volume —
     both sides stream it from host memory, the tiled side through the
@@ -169,6 +222,13 @@ def headline_rows(x, reps):
             x, os.path.join(td, "assemble.npy"), asm_reps)
     rows.append((f"tiled/memmap-out/{tag}/t{tpa.num_tiles}", t_mm,
                  f"in-memory={t_mem2:.0f}us parity={t_mem2 / t_mm:.2f}x"))
+    # like the assemble rows, the ckpt row gates on an absolute parity
+    # floor near its true value — give the median the extra samples
+    with tempfile.TemporaryDirectory() as td:
+        (t_ckpt, parity), tpc = ckpt_pair(x, td, asm_reps)
+    rows.append((f"tiled/ckpt-overhead/{tag}/t{tpc.num_tiles}", t_ckpt,
+                 f"unjournaled={t_ckpt * parity:.0f}us "
+                 f"parity={parity:.2f}x"))
     return rows, speedup
 
 

@@ -27,11 +27,72 @@ import json
 import os
 import re
 import shutil
+import tempfile
 import threading
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+
+def _fsync_path(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+class AsyncSave:
+    """Handle for an in-flight ``save(async_=True)``.
+
+    ``join()`` (or ``result()``) blocks until the writer finishes and
+    **re-raises any exception the writer thread hit** — a background
+    save that silently dropped an ENOSPC would let the caller believe
+    the step is durable.  ``join(timeout=)`` raises ``TimeoutError`` if
+    the writer is still running when it lapses.
+    """
+
+    def __init__(self, fn):
+        self._result: Optional[str] = None
+        self._exc: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._run, args=(fn,),
+                                        daemon=True)
+        self._thread.start()
+
+    def _run(self, fn):
+        try:
+            self._result = fn()
+        except BaseException as e:  # noqa: BLE001 — re-raised at join
+            self._exc = e
+
+    def join(self, timeout: Optional[float] = None) -> Optional[str]:
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError(
+                f"async checkpoint save still running after {timeout}s")
+        if self._exc is not None:
+            raise self._exc
+        return self._result
+
+    result = join
+
+    def is_alive(self) -> bool:
+        return self._thread.is_alive()
+
+
+# one lock per (ckpt dir, step): concurrent saves of the same step must
+# serialize — with a shared temp-dir name they would interleave leaf
+# files and commit a chimera; with unique temp dirs (below) they would
+# still race the final rename.  Last writer wins, atomically.
+_SAVE_LOCKS: dict = {}
+_SAVE_LOCKS_GUARD = threading.Lock()
+
+
+def _save_lock(ckpt_dir: str, step: int) -> threading.Lock:
+    key = (os.path.abspath(ckpt_dir), int(step))
+    with _SAVE_LOCKS_GUARD:
+        return _SAVE_LOCKS.setdefault(key, threading.Lock())
 
 
 def _flatten_with_names(tree):
@@ -56,33 +117,50 @@ def _key_str(k) -> str:
 def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None,
          async_: bool = False):
     """Write a committed checkpoint for ``step``.  Returns the final path
-    (or a join handle when async_)."""
+    (sync) or an :class:`AsyncSave` handle (``async_=True``) whose
+    ``join()`` re-raises writer-thread failures.
+
+    Concurrency: each writer stages into its own ``mkdtemp`` temp dir
+    (two saves of the same step never interleave files), and the
+    stage→rename→commit section serializes per ``(dir, step)`` so the
+    last writer wins atomically.
+    """
     def _do():
+        os.makedirs(ckpt_dir, exist_ok=True)
         final = os.path.join(ckpt_dir, f"step_{step:09d}")
-        tmp = final + ".tmp"
-        os.makedirs(tmp, exist_ok=True)
-        leaves, _ = _flatten_with_names(tree)
-        manifest = {"step": step, "leaves": {}, "extra": extra or {}}
-        for name, leaf in leaves:
-            arr = np.asarray(jax.device_get(leaf))
-            fname = re.sub(r"[^A-Za-z0-9_.\[\]-]", "_", name) + ".npy"
-            np.save(os.path.join(tmp, fname), arr)
-            manifest["leaves"][name] = {
-                "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)
-            }
-        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
-            json.dump(manifest, f)
-        if os.path.isdir(final):
-            shutil.rmtree(final)
-        os.replace(tmp, final)
-        with open(os.path.join(final, "_COMMITTED"), "w") as f:
-            f.write("ok")
+        with _save_lock(ckpt_dir, step):
+            tmp = tempfile.mkdtemp(prefix=f".step_{step:09d}.tmp-",
+                                   dir=ckpt_dir)
+            try:
+                leaves, _ = _flatten_with_names(tree)
+                manifest = {"step": step, "leaves": {}, "extra": extra or {}}
+                for name, leaf in leaves:
+                    arr = np.asarray(jax.device_get(leaf))
+                    fname = re.sub(r"[^A-Za-z0-9_.\[\]-]", "_", name) + ".npy"
+                    np.save(os.path.join(tmp, fname), arr)
+                    manifest["leaves"][name] = {
+                        "file": fname, "shape": list(arr.shape),
+                        "dtype": str(arr.dtype)
+                    }
+                with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+                    json.dump(manifest, f)
+                for entry in manifest["leaves"].values():
+                    _fsync_path(os.path.join(tmp, entry["file"]))
+                _fsync_path(os.path.join(tmp, "MANIFEST.json"))
+                if os.path.isdir(final):
+                    shutil.rmtree(final)
+                os.replace(tmp, final)
+            except BaseException:
+                shutil.rmtree(tmp, ignore_errors=True)
+                raise
+            with open(os.path.join(final, "_COMMITTED"), "w") as f:
+                f.write("ok")
+            _fsync_path(os.path.join(final, "_COMMITTED"))
+            _fsync_path(ckpt_dir)
         return final
 
     if async_:
-        t = threading.Thread(target=_do, daemon=True)
-        t.start()
-        return t
+        return AsyncSave(_do)
     return _do()
 
 

@@ -56,6 +56,7 @@ __all__ = [
     "separable_eligible",
     "plan_cache_stats",
     "clear_plan_cache",
+    "plan_fingerprint",
     "METHODS",
 ]
 
@@ -621,6 +622,37 @@ def get_tile_plan(key: tuple, build) -> TilePlan:
     machinery as every other plan kind, and the global hit/miss counters
     are what the one-trace-per-class tests read."""
     return _intern(("tiled",) + tuple(key), build)
+
+
+def plan_fingerprint(*parts) -> str:
+    """Stable hex digest of a nested plan-key structure.
+
+    In-process plan keys only need to be hashable; a *checkpoint* key
+    must additionally be stable across processes, so equality can gate
+    resuming a journaled stream against the plan that wrote it
+    (DESIGN.md §13).  ``parts`` may nest tuples/lists/dicts of
+    primitives (str/int/float/bool/None, numpy scalars); anything else
+    falls back to ``repr`` — which keeps the digest *conservative*: a
+    structure whose repr is process-dependent (e.g. an anonymous
+    ``pointwise`` op keyed on ``id(fn)``) changes the fingerprint and a
+    cross-process resume refuses, rather than silently mixing plans.
+    Give such ops an explicit ``key=`` to make their streams resumable.
+    """
+    import hashlib
+
+    def canon(o) -> str:
+        if isinstance(o, (tuple, list)):
+            return "(" + ",".join(canon(i) for i in o) + ")"
+        if isinstance(o, dict):
+            items = sorted((canon(k), canon(v)) for k, v in o.items())
+            return "{" + ",".join(f"{k}:{v}" for k, v in items) + "}"
+        if isinstance(o, (np.integer, np.floating, np.bool_)):
+            return repr(o.item())
+        if isinstance(o, float):
+            return repr(o)  # repr is exact for floats (round-trips)
+        return repr(o)
+
+    return hashlib.sha256(canon(parts).encode()).hexdigest()[:24]
 
 
 def plan_cache_stats() -> Dict[str, int]:

@@ -46,6 +46,9 @@ coupling cost is the O(state) reduction merge.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import time
 from typing import Optional, Tuple
 
 import jax
@@ -60,7 +63,12 @@ from repro.core.grid import (
 from repro.core.hilbert import hilbert_order
 from repro.core.melt import pad_array
 from repro.core.partition import plan_tile_partition
-from repro.core.plan import ExecOptions, TilePlan, get_tile_plan
+from repro.core.plan import (
+    ExecOptions,
+    TilePlan,
+    get_tile_plan,
+    plan_fingerprint,
+)
 from repro.pipe.fuse import (
     LinearStep,
     PipelineProgram,
@@ -70,8 +78,11 @@ from repro.pipe.fuse import (
     build_program,
 )
 from repro.pipe.graph import MomentsOp, Pipe
+from repro.runtime.faults import NO_FAULTS, PermanentFault, TransientFault
+from repro.runtime.stream_ckpt import StreamCheckpoint
 
-__all__ = ["TileSpec", "TiledProgram", "plan_tiled", "run_tiled"]
+__all__ = ["TileSpec", "TiledProgram", "plan_tiled", "run_tiled",
+           "FaultReport", "StreamFaultError"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -311,27 +322,47 @@ def _budget_tile_counts(out_shape, footprint, itemsize: int, batch: int,
 # -- the tiled program -------------------------------------------------------
 
 
-def _fold_merge(merge):
+class _FoldStack:
     """Streaming balanced fold: a binary-counter of partial merges, so the
     effective merge tree has log₂(#tiles) depth with O(log #tiles) live
-    states (the single-machine face of the distributed merge tree)."""
-    stack = []  # (level, state)
+    states (the single-machine face of the distributed merge tree).
 
-    def push(s):
+    The counter state is exposed (``entries``) and restorable (pass the
+    snapshotted entries back in) — a resumed stream that restores the
+    stack and keeps pushing reproduces the uninterrupted run's merge
+    tree node for node, which is what makes resume bit-identical on the
+    lax/materialize paths.
+    """
+
+    __slots__ = ("merge", "stack")
+
+    def __init__(self, merge, entries=()):
+        self.merge = merge
+        self.stack = [(int(lvl), s) for lvl, s in entries]
+
+    def push(self, s):
         level = 0
-        while stack and stack[-1][0] == level:
-            _, prev = stack.pop()
-            s = merge(prev, s)
+        while self.stack and self.stack[-1][0] == level:
+            _, prev = self.stack.pop()
+            s = self.merge(prev, s)
             level += 1
-        stack.append((level, s))
+        self.stack.append((level, s))
 
-    def result():
+    @property
+    def entries(self):
+        return tuple(self.stack)
+
+    def result(self):
         acc = None
-        for _, s in reversed(stack):
-            acc = s if acc is None else merge(s, acc)
+        for _, s in reversed(self.stack):
+            acc = s if acc is None else self.merge(s, acc)
         return acc
 
-    return push, result
+
+def _fold_merge(merge):
+    """``(push, result)`` closures over a fresh :class:`_FoldStack`."""
+    fold = _FoldStack(merge)
+    return fold.push, fold.result
 
 
 def _merge_fn(out_kind: str):
@@ -343,6 +374,68 @@ def _merge_fn(out_kind: str):
         return merge_histograms
     from repro.stats.cov import merge_cov
     return merge_cov
+
+
+@dataclasses.dataclass
+class FaultReport:
+    """What a fault-tolerant stream could not do, and what it cost.
+
+    ``records`` has one dict per quarantined tile — ``tile`` (stream
+    index), ``out_lo``/``out_hi`` (its box on the output grid), ``site``
+    (read / device / writeback), ``fault`` (transient-exhausted or
+    permanent), ``attempts``, ``error``.  ``retried`` counts transient
+    faults absorbed by the retry policy (they cost time, not coverage).
+    An empty ``records`` means full coverage.
+    """
+
+    num_tiles: int
+    out_shape: Tuple[int, ...]   # the spatial output grid the boxes tile
+    records: list = dataclasses.field(default_factory=list)
+    retried: int = 0
+
+    @property
+    def quarantined(self) -> Tuple[int, ...]:
+        return tuple(r["tile"] for r in self.records)
+
+    def uncovered_mask(self) -> np.ndarray:
+        """Boolean mask over the spatial output grid: True where no
+        result landed (the union of quarantined tiles' boxes).  Batch
+        and channel axes are never partial — a tile covers all of both —
+        so the mask is spatial-only."""
+        mask = np.zeros(self.out_shape, dtype=bool)
+        for r in self.records:
+            mask[tuple(slice(a, b)
+                       for a, b in zip(r["out_lo"], r["out_hi"]))] = True
+        return mask
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "num_tiles": self.num_tiles,
+            "out_shape": list(self.out_shape),
+            "retried": self.retried,
+            "quarantined": len(self.records),
+            "records": self.records,
+        }, indent=2)
+
+
+class StreamFaultError(RuntimeError):
+    """Raised at end-of-stream (``strict=True``) when tiles quarantined.
+
+    The stream runs to completion first — every healthy tile's work is
+    done, journaled, and (for reductions) snapshotted — so catching this
+    and resuming from the checkpoint dir re-attempts only the
+    quarantined tiles.  The full :class:`FaultReport` rides on
+    ``.report``.
+    """
+
+    def __init__(self, report: FaultReport):
+        self.report = report
+        sites = sorted({r["site"] for r in report.records})
+        super().__init__(
+            f"{len(report.records)} of {report.num_tiles} tile(s) "
+            f"quarantined after retries (sites: {', '.join(sites)}); "
+            f"pass strict=False for the partial result + fault report, "
+            f"or re-run with the same checkpoint_dir to re-attempt them")
 
 
 class _WritebackStream:
@@ -371,10 +464,11 @@ class _WritebackStream:
     """
 
     __slots__ = ("buf", "max_staged", "placed", "_batched", "_channels",
-                 "_dtype", "_depth", "_staged", "_views", "_copies")
+                 "_dtype", "_depth", "_staged", "_views", "_copies",
+                 "_guard", "_on_placed")
 
     def __init__(self, buf, batched: bool, channels: int, out_dtype,
-                 depth: int = 2):
+                 depth: int = 2, guard=None, on_placed=None):
         self.buf = buf
         self.max_staged = 0
         self.placed = 0
@@ -385,6 +479,12 @@ class _WritebackStream:
         self._staged = []  # [(spec | tuple-of-specs, device result)]
         self._views = 0    # zero-copy dlpack placements
         self._copies = 0   # staging-copy fallbacks
+        # fault/journal hooks around the host placement (the 'writeback'
+        # boundary): guard(spec, place_fn) -> placed?; on_placed(spec)
+        # fires only after the tile's bytes are in the buffer — that is
+        # the durability point the journal's "done" lines mean
+        self._guard = guard
+        self._on_placed = on_placed
 
     def _slices(self, spec: TileSpec):
         return (tuple([slice(None)] if self._batched else [])
@@ -403,16 +503,23 @@ class _WritebackStream:
             self._copies += 1
             return np.asarray(tile)
 
+    def _place(self, spec, host):
+        self.buf[self._slices(spec)] = host
+        self.placed += 1
+
     def _drain_one(self):
         specs, tile = self._staged.pop(0)
         host = self._host_view(tile)
-        if isinstance(specs, tuple):  # stacked same-class group
-            for j, s in enumerate(specs):
-                self.buf[self._slices(s)] = host[j]
-                self.placed += 1
-        else:
-            self.buf[self._slices(specs)] = host
-            self.placed += 1
+        grouped = isinstance(specs, tuple)  # stacked same-class group
+        for j, s in enumerate(specs if grouped else (specs,)):
+            h = host[j] if grouped else host
+            if self._guard is not None:
+                ok = self._guard(s, lambda s=s, h=h: self._place(s, h))
+            else:
+                self._place(s, h)
+                ok = True
+            if ok and self._on_placed is not None:
+                self._on_placed(s)
 
     def stage(self, specs, tile):
         if np.dtype(tile.dtype) != self._dtype:
@@ -465,6 +572,10 @@ class TiledProgram:
     out_dtype: object = None
     #: last run's :class:`_WritebackStream` counters (array outputs only)
     writeback_stats: dict = dataclasses.field(default_factory=dict)
+    #: last run's :class:`FaultReport` (empty records == full coverage)
+    fault_report: Optional[FaultReport] = None
+    #: last sharded run's heartbeat/straggler counters
+    liveness_stats: dict = dataclasses.field(default_factory=dict)
 
     @property
     def num_tiles(self) -> int:
@@ -478,6 +589,23 @@ class TiledProgram:
         return (f"{self.program.describe()} | tiles={self.num_tiles} "
                 f"({'x'.join(map(str, self.tile_counts))}) "
                 f"classes={self.num_classes}")
+
+    def fingerprint(self) -> str:
+        """The stream-checkpoint identity: graph signature × exec options
+        × input shape/dtype × tiling × tile boxes in stream order.
+
+        Two plans share a fingerprint iff replaying one's journal against
+        the other is sound — same tiles, same order, same per-tile math.
+        Note anonymous pointwise stages sign by function identity, so
+        their fingerprints do not survive a process restart: resume then
+        refuses (the safe direction) — use named graph ops for
+        checkpointed streams.
+        """
+        P = self.graph
+        return plan_fingerprint(
+            "tiled-stream", P.signature(), self.opts.key(), P.batched,
+            jnp.dtype(P.x.dtype).name, tuple(P.x.shape), self.tile_counts,
+            tuple((s.out_lo, s.out_hi) for s in self.specs))
 
     # -- execution ---------------------------------------------------------
     def _plan_for(self, spec: TileSpec, stack: int = 0) -> TilePlan:
@@ -512,11 +640,14 @@ class TiledProgram:
               + [slice(l, h) for l, h in zip(spec.read_lo, spec.read_hi)])
         return self.graph.x[tuple(sl)]
 
-    def _make_out_buffer(self, out=None, out_path=None):
+    def _make_out_buffer(self, out=None, out_path=None, resume=False):
         """The assembled-output buffer, sized from plan metadata (never
         from a computed tile): a fresh array, the caller's ``out=``
         arena, or a ``.npy`` memmap created at ``out_path=`` — the
-        latter streams results larger than RAM straight to disk."""
+        latter streams results larger than RAM straight to disk.  A
+        resumed run re-opens an existing ``out_path`` read-write
+        (``mode='w+'`` would truncate away the completed tiles the
+        journal says are durable)."""
         if out is not None and out_path is not None:
             raise ValueError("pass at most one of out= / out_path=")
         if self.program.out_kind != "array":
@@ -528,6 +659,16 @@ class TiledProgram:
             return None
         shape, dtype = self.out_shape, self.out_dtype
         if out_path is not None:
+            if resume and os.path.exists(str(out_path)):
+                m = np.lib.format.open_memmap(str(out_path), mode="r+")
+                if tuple(m.shape) != shape or np.dtype(m.dtype) != dtype:
+                    raise ValueError(
+                        f"resume target {out_path} holds shape "
+                        f"{tuple(m.shape)} dtype {np.dtype(m.dtype).name}; "
+                        f"this plan assembles shape {shape} dtype "
+                        f"{np.dtype(dtype).name} — the journal matched "
+                        f"but the output file was replaced")
+                return m
             return np.lib.format.open_memmap(
                 str(out_path), mode="w+", dtype=dtype, shape=shape)
         if out is not None:
@@ -546,7 +687,10 @@ class TiledProgram:
         return np.empty(shape, dtype)
 
     def run(self, mesh=None, axis_name: Optional[str] = None,
-            prefetch: bool = True, out=None, out_path=None):
+            prefetch: bool = True, out=None, out_path=None, *,
+            checkpoint_dir=None, resume_dir=None, checkpoint_every: int = 8,
+            faults=None, max_retries: int = 3, retry_backoff: float = 0.0,
+            strict: bool = True, heartbeat=None, straggler=None):
         """Stream every tile; returns the merged reduction state, or the
         assembled output as a host-side ``np.ndarray`` (the out-of-core
         contract: the device only ever holds tiles).
@@ -559,6 +703,34 @@ class TiledProgram:
         ``out_dtype``); ``out_path=`` creates an
         ``np.lib.format.open_memmap`` file and assembles into it, for
         results larger than RAM.  Both return the buffer they filled.
+
+        **Crash-only execution** (DESIGN.md §13).  ``checkpoint_dir=``
+        journals per-tile progress and snapshots the reduction fold
+        every ``checkpoint_every`` tiles, all keyed by
+        :meth:`fingerprint`; re-running with the same directory (or
+        ``resume_dir=``, the read-side alias) skips durable tiles and
+        continues the fold exactly — bit-identical to the uninterrupted
+        run on lax/materialize.  A directory written by a *different*
+        plan refuses to load (``ValueError``).  Array-output streams
+        need a persistent destination (``out=``/``out_path=``) to be
+        checkpointable.
+
+        **Fault policy.**  ``faults=`` takes a
+        :class:`~repro.runtime.faults.FaultInjector` (chaos testing) —
+        but the policy applies equally to real ``TransientFault`` /
+        ``PermanentFault`` raised at the stream's boundaries: transient
+        faults retry up to ``max_retries`` times with exponential
+        ``retry_backoff`` seconds; permanent (or retry-exhausted) tiles
+        are *quarantined* and the stream keeps going.  At end of stream,
+        quarantined tiles raise :class:`StreamFaultError` when
+        ``strict`` (the default), or — ``strict=False`` — the partial
+        result returns and ``self.fault_report`` carries the
+        uncovered-region mask.
+
+        ``heartbeat=`` / ``straggler=`` wire the mesh-sharded path's
+        tile-group dispatch into the runtime liveness monitors (slow
+        groups are flagged and re-dispatched once); see
+        ``repro.runtime.fault_tolerance``.
         """
         if (mesh is None) != (axis_name is None):
             raise ValueError("pass mesh= and axis_name= together")
@@ -568,42 +740,206 @@ class TiledProgram:
                 "tile stack claims the batch-like axis); run batched "
                 "graphs untiled via sharded_pipe_fn, or tiled without a "
                 "mesh")
+        if resume_dir is not None:
+            if (checkpoint_dir is not None
+                    and str(checkpoint_dir) != str(resume_dir)):
+                raise ValueError(
+                    "resume_dir= is an alias for checkpoint_dir= (resume "
+                    "IS running with the same journal); pass one of them")
+            checkpoint_dir = resume_dir
+        if mesh is not None and (checkpoint_dir is not None
+                                 or faults is not None):
+            raise NotImplementedError(
+                "checkpoint/fault-injection cover the single-process "
+                "stream; the mesh path's resilience hooks are heartbeat= "
+                "and straggler= (DESIGN.md §13)")
         reduce_out = self.program.out_kind != "array"
-        buf = self._make_out_buffer(out, out_path)  # validates out kwargs
-        push = result = sink = None
+        inj = faults if faults is not None else NO_FAULTS
+
+        ckpt = resume = None
+        if checkpoint_dir is not None:
+            if not reduce_out and out is None and out_path is None:
+                raise ValueError(
+                    "checkpointing an array-output stream needs a "
+                    "persistent destination — pass out= (caller-owned "
+                    "arena) or out_path= (memmap file) so completed "
+                    "tiles survive the process")
+            ckpt = StreamCheckpoint(
+                str(checkpoint_dir), fingerprint=self.fingerprint(),
+                num_tiles=self.num_tiles, out_kind=self.program.out_kind,
+                every=max(1, int(checkpoint_every)))
+            resume = ckpt.load()
+
+        done = set(resume.done) if resume is not None else set()
+        buf = self._make_out_buffer(out, out_path, resume=bool(done))
+        records: list = []
+        retried = 0
+
+        def quarantine(idx, site, kind, attempts, err):
+            spec = self.specs[idx]
+            records.append({
+                "tile": int(idx), "out_lo": list(spec.out_lo),
+                "out_hi": list(spec.out_hi), "site": site, "fault": kind,
+                "attempts": int(attempts), "error": err})
+            if ckpt is not None:
+                ckpt.quarantine(idx, site, kind, attempts, err)
+
+        def attempt(idx, site, fn):
+            """Bounded per-tile retry → ``(ok, value)``.  Transient
+            faults back off and retry; permanent faults quarantine at
+            once; anything else — including ``StreamKilled`` —
+            propagates (crash-only: the journal, not a handler, owns
+            whole-process recovery)."""
+            nonlocal retried
+            tries = 0
+            while True:
+                try:
+                    inj.check(site, idx, tries)
+                    return True, fn()
+                except TransientFault as e:
+                    tries += 1
+                    retried += 1
+                    if tries > max_retries:
+                        quarantine(idx, site, "transient", tries, str(e))
+                        return False, None
+                    if retry_backoff:
+                        time.sleep(retry_backoff * 2.0 ** (tries - 1))
+                except PermanentFault as e:
+                    quarantine(idx, site, "permanent", tries + 1, str(e))
+                    return False, None
+
+        push = result = sink = fold = None
         if reduce_out:
-            push, result = _fold_merge(_merge_fn(self.program.out_kind))
+            fold = _FoldStack(_merge_fn(self.program.out_kind),
+                              entries=resume.entries if resume else ())
+            push, result = fold.push, fold.result
         else:
+            guard = on_placed = None
+            if ckpt is not None or faults is not None:
+                index_of = {s: i for i, s in enumerate(self.specs)}
+
+                def guard(spec, place):
+                    ok, _ = attempt(index_of[spec], "writeback", place)
+                    return ok
+
+            if ckpt is not None:
+                def on_placed(spec, _n=[0]):
+                    ckpt.tile_done(index_of[spec])
+                    _n[0] += 1
+                    if _n[0] % ckpt.every == 0:
+                        if isinstance(buf, np.memmap):
+                            buf.flush()
+                        ckpt.sync()
+
             sink = _WritebackStream(
                 buf, self.graph.batched, self.program.channels,
-                self.out_dtype, depth=2 if prefetch else 1)
+                self.out_dtype, depth=2 if prefetch else 1,
+                guard=guard, on_placed=on_placed)
 
-        if mesh is not None:
-            res = self._run_sharded(mesh, axis_name, push, result, sink)
-        else:
-            # double-buffered both ways: tile i+1's H2D transfer is
-            # issued before tile i's compute is dispatched, and tile i's
-            # D2H writeback drains while tile i+1 computes
-            specs = self.specs
-            cur = jax.device_put(self._read_patch(specs[0]))
-            for i, spec in enumerate(specs):
-                nxt = (jax.device_put(self._read_patch(specs[i + 1]))
-                       if prefetch and i + 1 < len(specs) else None)
-                tile = self._plan_for(spec)(cur)
-                if reduce_out:
-                    push(tile)
-                else:
-                    sink.stage(spec, tile)
-                if not prefetch and i + 1 < len(specs):
-                    nxt = jax.device_put(self._read_patch(specs[i + 1]))
-                cur = nxt
-            res = result() if reduce_out else sink.flush()
+        try:
+            if mesh is not None:
+                res = self._run_sharded(mesh, axis_name, push, result,
+                                        sink, heartbeat=heartbeat,
+                                        straggler=straggler)
+            else:
+                pending = [i for i in range(self.num_tiles)
+                           if i not in done]
+                res = self._run_stream(pending, prefetch, attempt, push,
+                                       sink, ckpt, fold, done)
+            # end-of-stream durability: on full coverage the completion
+            # marker alone is durable truth (resume short-circuits before
+            # ever reading a snapshot), so the tail fold state is only
+            # snapshotted when quarantines left the stream partial and a
+            # resume will need it
+            if ckpt is not None:
+                if reduce_out and records:
+                    ckpt.snapshot(done, fold.entries)
+                elif isinstance(buf, np.memmap):
+                    buf.flush()
+                if not records:
+                    ckpt.complete()
+        finally:
+            if ckpt is not None:
+                ckpt.close()
+
+        self.fault_report = FaultReport(
+            num_tiles=self.num_tiles, out_shape=self.program.out_shape,
+            records=records, retried=retried)
         if sink is not None:
             self.writeback_stats.clear()
             self.writeback_stats.update(sink.stats())
+        if records and strict:
+            raise StreamFaultError(self.fault_report)
         return res
 
-    def _run_sharded(self, mesh, axis_name, push, result, sink):
+    def _run_stream(self, pending, prefetch, attempt, push, sink, ckpt,
+                    fold, done):
+        """The single-device loop, double-buffered both ways: tile i+1's
+        H2D transfer is issued before tile i's compute is dispatched,
+        and tile i's D2H writeback drains while tile i+1 computes.
+        ``pending`` is the stream order minus resumed-durable tiles."""
+        specs = self.specs
+
+        def fetch(k):
+            idx = pending[k]
+            ok, patch = attempt(idx, "read", lambda i=idx: jax.device_put(
+                self._read_patch(specs[i])))
+            return patch if ok else None
+
+        cur = fetch(0) if pending else None
+        for k, idx in enumerate(pending):
+            spec = specs[idx]
+            nxt = (fetch(k + 1)
+                   if prefetch and k + 1 < len(pending) else None)
+            if cur is not None:  # read not quarantined
+                plan = self._plan_for(spec)
+                ok, tile = attempt(idx, "device", lambda c=cur: plan(c))
+                if ok:
+                    if push is not None:
+                        push(tile)
+                        done.add(idx)
+                        if ckpt is not None:
+                            ckpt.tile_done(idx)
+                            # the final-tile boundary is excluded: full
+                            # coverage is about to become a `complete`
+                            # marker, partial coverage gets its tail
+                            # snapshot from the quarantine path
+                            if (len(done) % ckpt.every == 0
+                                    and len(done) < self.num_tiles):
+                                ckpt.snapshot(done, fold.entries)
+                    else:
+                        sink.stage(spec, tile)
+            if not prefetch and k + 1 < len(pending):
+                nxt = fetch(k + 1)
+            cur = nxt
+        return fold.result() if push is not None else sink.flush()
+
+    def run_restartable(self, *, checkpoint_dir, max_restarts: int = 3,
+                        **kw):
+        """Crash-loop driver for whole-stream restarts: :meth:`run` with
+        journaling, and any unexpected exception → restart (which
+        resumes from the journal, so completed work is never redone) up
+        to ``max_restarts`` — the stream-level mirror of
+        ``repro.runtime.fault_tolerance.run_restartable``.
+
+        ``KeyboardInterrupt`` passes through (that's the user);
+        :class:`StreamFaultError` passes through too — it already *is*
+        the end-of-stream verdict, and restarting would re-quarantine
+        the same tiles under the same deterministic faults.
+        """
+        restarts = 0
+        while True:
+            try:
+                return self.run(checkpoint_dir=checkpoint_dir, **kw)
+            except (KeyboardInterrupt, StreamFaultError):
+                raise
+            except Exception:  # noqa: BLE001 — crash-only restart
+                restarts += 1
+                if restarts > max_restarts:
+                    raise
+
+    def _run_sharded(self, mesh, axis_name, push, result, sink,
+                     heartbeat=None, straggler=None):
         """Group same-class tiles into mesh-axis-sized stacks; each stack
         is one sharded dispatch (halos are baked in — no exchange).
 
@@ -615,6 +951,16 @@ class TiledProgram:
         memory, so a slab is only refilled once the group computed from
         it has drained, which the sink's ≤1-pending invariant
         guarantees.  Leftover tiles drain through the same sink.
+
+        ``heartbeat=``/``straggler=`` make each group dispatch a
+        *liveness step*: the dispatch blocks until ready (trading the
+        async pipeline for a measurable per-group latency), beats the
+        heartbeat, and feeds the
+        :class:`~repro.runtime.fault_tolerance.StragglerMonitor` — a
+        flagged group is re-dispatched once (a fresh executor call over
+        the still-resident device patch, the single-host analogue of
+        rescheduling a slow rank's shard).  Counters land in
+        ``self.liveness_stats``.
         """
         from repro.core.distributed import put_tile_batch
         from repro.stats.moments import merge_along_axis
@@ -622,6 +968,26 @@ class TiledProgram:
         ways = int(mesh.shape[axis_name])
         reduce_out = push is not None
         dt = jnp.dtype(self.graph.x.dtype)
+        live = heartbeat is not None or straggler is not None
+        seq = [0]  # dispatched group count (the liveness "step")
+        flagged = redispatched = 0
+
+        def observe(tile, redo):
+            nonlocal flagged, redispatched
+            if not live:
+                return tile
+            t0 = time.perf_counter()
+            tile = jax.block_until_ready(tile)
+            dt_s = time.perf_counter() - t0
+            if heartbeat is not None:
+                heartbeat.beat(step=seq[0])
+            if straggler is not None and straggler.observe(seq[0], dt_s):
+                flagged += 1
+                tile = jax.block_until_ready(redo())
+                redispatched += 1
+            seq[0] += 1
+            return tile
+
         by_class = {}
         for spec in self.specs:
             by_class.setdefault(spec.class_key(), []).append(spec)
@@ -644,7 +1010,8 @@ class TiledProgram:
                     for j, s in enumerate(group):
                         stacked[j] = self._read_patch(s)
                 dev = put_tile_batch(stacked, mesh, axis_name)
-                tile = self._plan_for(group[0], stack=ways)(dev)
+                plan = self._plan_for(group[0], stack=ways)
+                tile = observe(plan(dev), lambda p=plan, d=dev: p(d))
                 if reduce_out:
                     if self.program.out_kind == "moments":
                         push(merge_along_axis(tile, axis=0))
@@ -654,12 +1021,18 @@ class TiledProgram:
                     sink.stage(tuple(group), tile)
             leftovers.extend(members[n_full:])
         for spec in leftovers:
-            tile = self._plan_for(spec)(jax.device_put(
-                self._read_patch(spec)))
+            plan = self._plan_for(spec)
+            dev = jax.device_put(self._read_patch(spec))
+            tile = observe(plan(dev), lambda p=plan, d=dev: p(d))
             if reduce_out:
                 push(tile)
             else:
                 sink.stage(spec, tile)
+        if live:
+            self.liveness_stats.clear()
+            self.liveness_stats.update(
+                {"groups": seq[0], "flagged": flagged,
+                 "redispatched": redispatched})
         return result() if reduce_out else sink.flush()
 
 
@@ -791,10 +1164,17 @@ def plan_tiled(
 def run_tiled(P: Pipe, *, tiles=None, memory_budget=None, method="auto",
               pad_value="edge", out_dtype=None, order="hilbert",
               mesh=None, axis_name=None, prefetch=True, out=None,
-              out_path=None):
+              out_path=None, checkpoint_dir=None, resume_dir=None,
+              checkpoint_every=8, faults=None, max_retries=3,
+              retry_backoff=0.0, strict=True, heartbeat=None,
+              straggler=None):
     """Plan + run in one call (the ``Pipe.run(tiles=…)`` backend)."""
     tp = plan_tiled(P, tiles=tiles, memory_budget=memory_budget,
                     method=method, pad_value=pad_value, out_dtype=out_dtype,
                     order=order)
     return tp.run(mesh=mesh, axis_name=axis_name, prefetch=prefetch,
-                  out=out, out_path=out_path)
+                  out=out, out_path=out_path, checkpoint_dir=checkpoint_dir,
+                  resume_dir=resume_dir, checkpoint_every=checkpoint_every,
+                  faults=faults, max_retries=max_retries,
+                  retry_backoff=retry_backoff, strict=strict,
+                  heartbeat=heartbeat, straggler=straggler)

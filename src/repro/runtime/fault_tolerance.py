@@ -24,10 +24,20 @@ from repro.checkpoint import checkpoint as ckpt
 
 
 class Heartbeat:
-    def __init__(self, dir_: str, host_id: int, interval_s: float = 10.0):
+    def __init__(self, dir_: str, host_id: int, interval_s: float = 10.0,
+                 startup_grace_s: Optional[float] = None):
         self.dir = dir_
         self.host_id = host_id
         self.interval_s = interval_s
+        # hosts that have never beaten are not stale during the startup
+        # grace window (measured from monitor creation): at pod start
+        # every peer's beat file is legitimately absent until its first
+        # beat lands, and flagging them all would trigger an immediate
+        # spurious re-elect.  A *corrupt* beat file is different — the
+        # host did write, and wrote garbage — and stays stale at once.
+        self.startup_grace_s = (3.0 * interval_s if startup_grace_s is None
+                                else startup_grace_s)
+        self._created = time.time()
         os.makedirs(dir_, exist_ok=True)
 
     def beat(self, step: int):
@@ -39,6 +49,7 @@ class Heartbeat:
 
     def stale_hosts(self, num_hosts: int, timeout_s: float = 60.0):
         now = time.time()
+        in_grace = now - self._created <= self.startup_grace_s
         stale = []
         for h in range(num_hosts):
             path = os.path.join(self.dir, f"host_{h}.hb")
@@ -47,7 +58,10 @@ class Heartbeat:
                     t = json.load(f)["t"]
                 if now - t > timeout_s:
                     stale.append(h)
-            except (FileNotFoundError, json.JSONDecodeError):
+            except FileNotFoundError:
+                if not in_grace:  # never beat, and grace has lapsed
+                    stale.append(h)
+            except json.JSONDecodeError:
                 stale.append(h)
         return stale
 
@@ -75,6 +89,37 @@ class StragglerMonitor:
         if not self.times:
             return None
         return sorted(self.times)[len(self.times) // 2]
+
+
+def _aligned_batches(batches, step: int):
+    """An iterator positioned at batch ``step`` — step N consumes batch N.
+
+    Restart alignment: after restoring step N the driver must NOT replay
+    batches 0..N-1 (re-iterating a list from scratch would feed batch 0
+    to step N).  Seekable sources (a ``seek(step)`` method) jump
+    directly; re-iterable sources (lists, datasets) fast-forward by
+    consuming ``step`` items; one-shot streams (generators — where
+    ``iter(batches) is batches``) cannot rewind and are returned as-is,
+    which is already aligned *within a process* (the stream sits past
+    the batches consumed before the crash) but cannot replay the
+    uncommitted tail — pass a seekable/re-iterable source when exact
+    batch/step pairing across restarts matters.
+    """
+    if hasattr(batches, "seek"):
+        batches.seek(step)
+        return iter(batches)
+    it = iter(batches)
+    if it is batches:
+        return it
+    for _ in range(step):
+        try:
+            next(it)
+        except StopIteration:
+            raise ValueError(
+                f"batch source exhausted while fast-forwarding to the "
+                f"restored step {step}; it must yield at least {step} "
+                f"batches to resume") from None
+    return it
 
 
 def run_restartable(
@@ -106,7 +151,7 @@ def run_restartable(
             else:
                 state = init_state_fn()
                 step = 0
-            it = iter(batches)
+            it = _aligned_batches(batches, step)
             while step < total_steps:
                 batch = next(it)
                 t0 = time.time()

@@ -1,0 +1,196 @@
+"""Deterministic fault injection for out-of-core tile streams.
+
+The failure model of a long-running tiled stream (DESIGN.md §13) has
+three boundaries where the host scheduler talks to something that can
+break independently of the program logic:
+
+- ``'read'``       — the host-side patch read (a memmap page-in, an NFS
+  volume, an object-store GET);
+- ``'device'``     — the device compute dispatch (a preempted
+  accelerator, an XLA transient, a flaky interconnect);
+- ``'writeback'``  — the device→host result placement (the D2H copy or
+  the destination buffer/file write).
+
+Faults come in two kinds, mirroring what recovery can do about them:
+
+- **transient** — goes away if you retry (``TransientFault``); the
+  stream's bounded per-tile retry must absorb these;
+- **permanent** — every retry fails (``PermanentFault``); the tile is
+  *quarantined* and the stream degrades gracefully (``strict=False``)
+  or raises with the full :class:`~repro.pipe.tiled.FaultReport`
+  attached (``strict=True``).
+
+:class:`FaultInjector` raises these at the boundaries of
+``repro.pipe.tiled`` **deterministically**: whether tile ``i`` faults at
+site ``s`` is a pure function of ``(seed, site, tile)``, so a failing
+chaos run reproduces exactly from its seed.  ``kill_after=`` simulates a
+whole-process crash (SIGKILL mid-stream) by raising
+:class:`StreamKilled` once ``k`` tiles have entered device compute —
+the checkpoint/resume tests interrupt runs with it.
+
+The injector is *test/chaos infrastructure shipped as library code*: the
+production stream runs with :data:`NO_FAULTS` (every check inlines to a
+no-op), and real exceptions raised by real boundaries flow through the
+same retry/quarantine policy — user code can raise ``TransientFault``
+from a flaky reader to opt into bounded retries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Optional, Tuple
+
+__all__ = [
+    "SITES",
+    "TransientFault",
+    "PermanentFault",
+    "StreamKilled",
+    "FaultSpec",
+    "FaultInjector",
+    "NO_FAULTS",
+]
+
+#: the three injectable boundaries of a tiled stream, in pipeline order
+SITES = ("read", "device", "writeback")
+
+
+class TransientFault(RuntimeError):
+    """A fault that clears on retry (preemption blip, flaky I/O)."""
+
+    def __init__(self, site: str, tile: int, attempt: int):
+        self.site = site
+        self.tile = tile
+        self.attempt = attempt
+        super().__init__(
+            f"transient fault at {site!r} boundary, tile {tile} "
+            f"(attempt {attempt})")
+
+
+class PermanentFault(RuntimeError):
+    """A fault no retry fixes (bad block, poisoned input tile)."""
+
+    def __init__(self, site: str, tile: int):
+        self.site = site
+        self.tile = tile
+        super().__init__(f"permanent fault at {site!r} boundary, "
+                         f"tile {tile}")
+
+
+class StreamKilled(RuntimeError):
+    """Simulated whole-process death mid-stream (kill -9 semantics).
+
+    Raised *between* tiles, never caught by the per-tile retry policy:
+    it models the crash the journal/snapshot machinery exists to
+    survive.  Re-running with the same ``checkpoint_dir`` resumes.
+    """
+
+    def __init__(self, after_tiles: int):
+        self.after_tiles = after_tiles
+        super().__init__(
+            f"stream killed after {after_tiles} tile(s) entered compute "
+            f"(simulated crash; resume from the checkpoint dir)")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One seeded fault population: which boundary, which kind, how many.
+
+    ``rate`` is the fraction of tiles hit at ``site`` (selection is
+    deterministic per tile from the injector seed).  For transient
+    faults, ``failures`` is how many consecutive attempts fail before
+    the fault clears — ``failures <= max_retries`` is recoverable,
+    ``failures > max_retries`` exhausts the retry budget and
+    quarantines like a permanent fault.
+    """
+
+    site: str
+    kind: str = "transient"
+    rate: float = 1.0
+    failures: int = 1
+
+    def __post_init__(self):
+        if self.site not in SITES:
+            raise ValueError(f"unknown fault site {self.site!r}; expected "
+                             f"one of {', '.join(SITES)}")
+        if self.kind not in ("transient", "permanent"):
+            raise ValueError(f"unknown fault kind {self.kind!r}; expected "
+                             f"'transient' or 'permanent'")
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(f"rate must be in [0, 1], got {self.rate}")
+        if self.failures < 1:
+            raise ValueError(f"failures must be >= 1, got {self.failures}")
+
+
+class FaultInjector:
+    """Raises seeded faults at the stream's boundaries.
+
+    ``check(site, tile, attempt)`` is called by the tiled runner before
+    each boundary crossing; it either returns (no fault for this
+    ``(site, tile)``) or raises the scheduled fault.  Selection is a
+    pure function of ``(seed, site, tile)`` — re-running the same
+    stream with the same injector faults the same tiles, which is what
+    makes chaos runs reproducible and the kill/resume tests exact.
+
+    ``kill_after=k`` raises :class:`StreamKilled` when the ``k+1``-th
+    *distinct first attempt* reaches the device boundary (i.e. after
+    ``k`` tiles entered compute).  The kill fires once per injector by
+    default (``kill_once=True``): the same injector object carried into
+    the resumed run will not re-kill, mimicking a crash that does not
+    recur.
+    """
+
+    def __init__(self, specs: Tuple[FaultSpec, ...] = (), seed: int = 0,
+                 kill_after: Optional[int] = None, kill_once: bool = True):
+        self.specs = tuple(specs)
+        for s in self.specs:
+            if not isinstance(s, FaultSpec):
+                raise TypeError(f"specs must be FaultSpec, got {s!r}")
+        self.seed = int(seed)
+        if kill_after is not None and kill_after < 0:
+            raise ValueError(f"kill_after must be >= 0, got {kill_after}")
+        self.kill_after = kill_after
+        self.kill_once = bool(kill_once)
+        self._killed = False
+        self._compute_entries = 0
+
+    # -- deterministic selection -------------------------------------------
+    def _u(self, site: str, tile: int) -> float:
+        h = hashlib.sha256(f"{self.seed}:{site}:{tile}".encode()).digest()
+        return int.from_bytes(h[:8], "big") / 2.0 ** 64
+
+    def faults_at(self, site: str, tile: int) -> Optional[FaultSpec]:
+        """The spec that hits ``(site, tile)``, or None (pure, no state)."""
+        for spec in self.specs:
+            if spec.site == site and self._u(site, tile) < spec.rate:
+                return spec
+        return None
+
+    # -- the boundary hook --------------------------------------------------
+    def check(self, site: str, tile: int, attempt: int = 0) -> None:
+        if site == "device" and attempt == 0:
+            if (self.kill_after is not None
+                    and not (self.kill_once and self._killed)
+                    and self._compute_entries >= self.kill_after):
+                self._killed = True
+                raise StreamKilled(self._compute_entries)
+            self._compute_entries += 1
+        spec = self.faults_at(site, tile)
+        if spec is None:
+            return
+        if spec.kind == "permanent":
+            raise PermanentFault(site, tile)
+        if attempt < spec.failures:
+            raise TransientFault(site, tile, attempt)
+
+
+class _NoFaults(FaultInjector):
+    """The production default: every check is a no-op."""
+
+    def __init__(self):
+        super().__init__()
+
+    def check(self, site, tile, attempt=0):  # noqa: D102 — hot path
+        return None
+
+
+NO_FAULTS = _NoFaults()

@@ -1,0 +1,456 @@
+"""Crash-only progress for tiled streams: journal + snapshots (§13).
+
+A :class:`~repro.pipe.tiled.TiledProgram` run with ``checkpoint_dir=``
+persists its progress so a killed process resumes instead of restarting:
+
+    <dir>/journal.jsonl        # append-only progress log (see below)
+    <dir>/snap_<k>/            # atomic snapshot of the fold state after
+        META.json              #   k tiles folded (reduction outputs)
+        state.npz              #   stack leaves, one array per entry leaf
+        _COMMITTED             # written LAST — uncommitted snaps ignored
+
+Journal lines are single JSON objects:
+
+    {"kind": "tiled-stream-journal", "version": 1, "fingerprint": ...,
+     "num_tiles": N, "out_kind": ...}          # header, always first
+    {"done": i}                                # tile i's result is durable
+    {"quarantine": i, "site": ..., "fault": ..., "attempts": n,
+     "error": ...}                             # tile i gave up (re-attempted
+                                               # on resume — a new process
+                                               # may not share the fault)
+    {"snapshot": "snap_000000012"}             # fold state committed
+    {"complete": true}                         # stream finished
+
+Durability model — **process death, not host power loss**: appends are
+written and fsync'd in cadence-sized chunks (every ``every`` lines and
+at snapshot / completion boundaries), so a SIGKILL loses at most the
+trailing unwritten entries — fewer than ``every`` — which resume simply
+recomputes.  A torn trailing line (the
+append the crash interrupted) is detected on load and truncated away
+before new appends.
+
+The caller's thread only ever appends (json + buffered write + flush,
+microseconds); every blocking disk operation — journal fsyncs and the
+whole snapshot stage/fsync/rename/prune sequence — runs on a single
+background writer thread, so durability costs overlap the stream's
+compute instead of stalling the tile loop (the ``tiled/ckpt-overhead``
+benchmark row gates this at ≤5%).  ``close()`` drains the writer, so
+everything enqueued before a *graceful* stop (including the simulated
+kills in the fault tests) is on disk when ``run()`` returns; a SIGKILL
+can lose at most the enqueued-but-unwritten tail, which is exactly the
+journal's recompute-on-resume contract.  Writer failures (disk full)
+are re-raised on the caller's thread at the next checkpoint call or at
+``close()``.
+
+What "durable" means depends on the program's output:
+
+- **array outputs** — a tile is journaled ``done`` only after its bytes
+  landed in the caller's persistent buffer (``out=`` arena or
+  ``out_path=`` memmap), so the done-set in the journal *is* the
+  completed-box set and resume skips exactly those tiles;
+- **reduction outputs** — per-tile states live in memory (the
+  binary-counter fold), so durable progress is the latest committed
+  *snapshot*: the exact fold stack plus the set of folded tiles.
+  Restoring the stack and continuing the fold reproduces the
+  uninterrupted merge tree node for node — resumed results are
+  bit-identical on lax/materialize.
+
+Every journal is keyed by a plan *fingerprint*
+(:func:`repro.core.plan.plan_fingerprint` over graph signature ×
+options × tiling × volume shape/dtype): resuming against a journal
+written by any other plan raises instead of silently mixing results.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import queue
+import re
+import shutil
+import threading
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = ["StreamCheckpoint", "ResumeState", "JOURNAL_NAME"]
+
+JOURNAL_NAME = "journal.jsonl"
+_SNAP_RE = re.compile(r"snap_(\d+)")
+
+
+def _fsync_path(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+# -- reduction-state serialization (the three mergeable kinds) ---------------
+
+
+def _state_parts(state):
+    """``(kind, aux, leaves)`` of one mergeable reduction state.
+
+    Leaves are returned as-is (possibly still device-resident futures);
+    the caller starts their D2H copies asynchronously and the writer
+    thread collects the host values — a *blocking* ``device_get`` on
+    either thread stalls the dispatch pipeline far beyond its own wall
+    time, so nothing here is allowed to wait.
+    """
+    from repro.stats.cov import CovState
+    from repro.stats.hist import Histogram
+    from repro.stats.moments import MomentState
+
+    if isinstance(state, MomentState):
+        return "moments", {"order": int(state.order)}, [
+            state.count, state.mean, state.m2, state.m3, state.m4]
+    if isinstance(state, Histogram):
+        return "hist", {"lo": float(state.lo), "hi": float(state.hi)}, [
+            state.counts]
+    if isinstance(state, CovState):
+        return "cov", {}, [state.count, state.mean, state.comoment]
+    raise TypeError(f"unknown reduction state {type(state).__name__}; "
+                    f"snapshots carry MomentState/Histogram/CovState")
+
+
+def _state_from_parts(kind: str, aux: dict, leaves):
+    import jax.numpy as jnp
+
+    from repro.stats.cov import CovState
+    from repro.stats.hist import Histogram
+    from repro.stats.moments import MomentState
+
+    leaves = [jnp.asarray(x) for x in leaves]
+    if kind == "moments":
+        return MomentState(*leaves, order=int(aux["order"]))
+    if kind == "hist":
+        return Histogram(leaves[0], float(aux["lo"]), float(aux["hi"]))
+    if kind == "cov":
+        return CovState(*leaves)
+    raise ValueError(f"unknown snapshot state kind {kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ResumeState:
+    """What a resumed run starts from."""
+
+    done: frozenset            # tile indices whose results are durable
+    entries: Tuple             # restored fold stack: ((level, state), ...)
+    snapshot: Optional[str]    # name of the snapshot restored (or None)
+    complete: bool             # the previous run finished the stream
+
+
+class StreamCheckpoint:
+    """The journal/snapshot writer+reader for one checkpoint directory.
+
+    Construction only records the expected identity; :meth:`load` binds
+    to the directory — parsing (and fingerprint-validating) an existing
+    journal, or writing a fresh header.  One instance serves one run.
+    """
+
+    def __init__(self, dir_: str, *, fingerprint: str, num_tiles: int,
+                 out_kind: str, every: int = 8):
+        self.dir = str(dir_)
+        self.fingerprint = fingerprint
+        self.num_tiles = int(num_tiles)
+        self.out_kind = out_kind
+        self.every = max(1, int(every))
+        self._jf = None
+        self._since_sync = 0
+        self._buf: list = []
+        self._q: Optional[queue.Queue] = None
+        self._writer: Optional[threading.Thread] = None
+        self._err: Optional[BaseException] = None
+
+    # -- load / resume ------------------------------------------------------
+    def load(self) -> Optional[ResumeState]:
+        """Bind to the directory; the previous run's progress, or None.
+
+        Raises ``ValueError`` when the directory holds a journal written
+        by a *different* plan (stale fingerprint / tiling / out kind) —
+        refusing is the whole point: a resumed fold must continue the
+        exact plan that started it.
+        """
+        os.makedirs(self.dir, exist_ok=True)
+        path = os.path.join(self.dir, JOURNAL_NAME)
+        records, good_end = self._parse(path)
+        if records is None:
+            self._open(path, truncate_at=None, fresh=True)
+            return None
+        header, body = records[0], records[1:]
+        for field, mine in (("fingerprint", self.fingerprint),
+                            ("num_tiles", self.num_tiles),
+                            ("out_kind", self.out_kind)):
+            theirs = header.get(field)
+            if theirs != mine:
+                raise ValueError(
+                    f"stale stream checkpoint at {self.dir!r}: journal "
+                    f"{field} {theirs!r} does not match this plan's "
+                    f"{mine!r} — the directory was written by a different "
+                    f"(graph x tiling x dtype x pad) plan; resume with the "
+                    f"original plan or use a fresh checkpoint_dir")
+        done = set()
+        complete = False
+        for rec in body:
+            if "done" in rec:
+                done.add(int(rec["done"]))
+            elif "complete" in rec:
+                complete = True
+        snap_name = self._latest_snapshot()
+        entries: Tuple = ()
+        if self.out_kind != "array":
+            # durable reduction progress is the snapshot, not the journal:
+            # per-tile states since the last snapshot died with the process
+            done = set()
+            if snap_name is not None:
+                folded, entries = self._load_snapshot(snap_name)
+                done = set(folded)
+            complete = complete and not self._pending_after(done)
+        self._open(path, truncate_at=good_end, fresh=False)
+        return ResumeState(done=frozenset(done), entries=entries,
+                           snapshot=snap_name, complete=complete)
+
+    def _pending_after(self, done) -> bool:
+        return len(done) < self.num_tiles
+
+    def _parse(self, path: str):
+        """``(records, offset-of-last-good-line-end)`` or ``(None, _)``
+        for a missing/empty journal.  Parsing stops at the first torn or
+        invalid line — everything after a torn write is suspect."""
+        if not os.path.exists(path):
+            return None, 0
+        records, good_end = [], 0
+        with open(path, "rb") as f:
+            data = f.read()
+        if not data.strip():
+            return None, 0
+        pos = 0
+        while pos < len(data):
+            nl = data.find(b"\n", pos)
+            if nl < 0:
+                break  # torn trailing line (no newline): drop it
+            line = data[pos:nl]
+            try:
+                rec = json.loads(line.decode("utf-8"))
+            except (UnicodeDecodeError, json.JSONDecodeError):
+                break
+            if not isinstance(rec, dict):
+                break
+            records.append(rec)
+            good_end = nl + 1
+            pos = nl + 1
+        if not records or records[0].get("kind") != "tiled-stream-journal":
+            raise ValueError(
+                f"{path} is not a tiled-stream journal (bad or missing "
+                f"header); refusing to append — use a fresh checkpoint_dir")
+        return records, good_end
+
+    def _open(self, path: str, truncate_at, fresh: bool):
+        if fresh:
+            self._jf = open(path, "w")
+        else:
+            if truncate_at is not None:
+                with open(path, "r+b") as f:
+                    f.truncate(truncate_at)
+            self._jf = open(path, "a")
+        self._q = queue.Queue()
+        self._writer = threading.Thread(target=self._drain,
+                                        name="stream-ckpt-writer",
+                                        daemon=True)
+        self._writer.start()
+        if fresh:
+            self._append({"kind": "tiled-stream-journal", "version": 1,
+                          "fingerprint": self.fingerprint,
+                          "num_tiles": self.num_tiles,
+                          "out_kind": self.out_kind})
+            self.sync()
+
+    # -- the background writer ----------------------------------------------
+    # The caller's thread stalls the tile stream for every millisecond it
+    # spends in the filesystem, so ALL file work — appends, fsyncs, the
+    # snapshot commit sequence — is enqueued here.  One thread, FIFO: the
+    # worker is the sole owner of the journal fd between load() and
+    # close(), and the on-disk line order matches the enqueue order
+    # (dones → snapshot line → complete, exactly as a synchronous writer
+    # would interleave them).  The first failure is latched and every
+    # later job skipped — a journal that lost a write must not keep
+    # appending as if durable — and re-raised on the caller's thread by
+    # the next public call or close().
+    def _drain(self):
+        while True:
+            job = self._q.get()
+            if job is None:
+                return
+            try:
+                if self._err is None:
+                    if job[0] == "write":
+                        self._jf.write(job[1])
+                        self._jf.flush()
+                    elif job[0] == "sync":
+                        os.fsync(self._jf.fileno())
+                    else:
+                        self._commit_snapshot(*job[1:])
+            except BaseException as e:  # latched, re-raised on caller
+                self._err = e
+
+    def _raise_pending(self):
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    # -- appends ------------------------------------------------------------
+    # Appends are buffered on the caller and handed to the writer in
+    # cadence-sized chunks: every Queue.put wakes the writer thread,
+    # and each wake steals GIL slices from the dispatch-bound stream
+    # loop — per-line handoff costs several times its own wall time.
+    # A SIGKILL loses at most the buffered tail (< ``every`` lines),
+    # which is already the journal's recompute-on-resume contract.
+    def _append(self, rec: dict):
+        if self._jf is None:  # pragma: no cover — misuse guard
+            raise RuntimeError("StreamCheckpoint.load() must run first")
+        self._raise_pending()
+        self._buf.append(json.dumps(rec) + "\n")
+        self._since_sync += 1
+        if self._since_sync >= self.every:
+            self.sync()
+
+    def _flush_buf(self):
+        if self._buf:
+            self._q.put(("write", "".join(self._buf)))
+            self._buf.clear()
+
+    def sync(self):
+        if self._q is not None:
+            self._flush_buf()
+            self._q.put(("sync",))
+            self._since_sync = 0
+
+    def tile_done(self, idx: int):
+        self._append({"done": int(idx)})
+
+    def quarantine(self, idx: int, site: str, fault: str, attempts: int,
+                   error: str):
+        self._append({"quarantine": int(idx), "site": site, "fault": fault,
+                      "attempts": int(attempts), "error": error})
+
+    def complete(self):
+        # no explicit sync: close() drains the writer and fsyncs the
+        # tail — one end-of-run fsync instead of two on the caller's
+        # critical path
+        self._append({"complete": True})
+
+    def close(self):
+        if self._writer is not None:
+            self._flush_buf()
+            self._q.put(None)
+            self._writer.join()
+            self._writer = None
+            self._q = None
+        if self._jf is not None:
+            if self._since_sync:
+                os.fsync(self._jf.fileno())
+            self._jf.close()
+            self._jf = None
+        self._raise_pending()
+
+    # -- snapshots (reduction fold state) -----------------------------------
+    def snapshot(self, folded, entries):
+        """Atomically commit the fold stack after ``len(folded)`` tiles.
+
+        ``entries`` is the binary-counter stack — ``(level, state)``
+        pairs, bottom first.  Temp-dir → fsync → rename → ``_COMMITTED``
+        (the checkpoint.py discipline): a crash mid-snapshot leaves the
+        previous snapshot authoritative.  Older snapshots are pruned
+        after the new one commits.
+
+        The caller only *starts* the (tiny) states' D2H copies — never
+        blocks on them — and the writer thread collects the values and
+        does the file I/O (stage, fsync, rename, prune); the snapshot is
+        durable once :meth:`close` returns.
+        """
+        self._raise_pending()
+        self._flush_buf()  # dones precede their snapshot line on disk
+        folded = sorted(int(i) for i in folded)
+        name = f"snap_{len(folded):09d}"
+        staged = []
+        for level, state in entries:
+            kind, aux, leaves = _state_parts(state)
+            for leaf in leaves:
+                if hasattr(leaf, "copy_to_host_async"):
+                    leaf.copy_to_host_async()
+            staged.append((int(level), kind, aux, leaves))
+        self._q.put(("snap", folded, name, staged))
+        return name
+
+    def _commit_snapshot(self, folded, name, staged):
+        final = os.path.join(self.dir, name)
+        tmp = final + f".tmp-{os.getpid()}"
+        if os.path.isdir(tmp):  # leftover from a crashed attempt
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        try:
+            meta_entries, arrays = [], {}
+            for i, (level, kind, aux, leaves) in enumerate(staged):
+                meta_entries.append({"level": level, "kind": kind,
+                                     "aux": aux, "leaves": len(leaves)})
+                for j, leaf in enumerate(leaves):
+                    arrays[f"e{i}_l{j}"] = np.asarray(leaf)
+            np.savez(os.path.join(tmp, "state.npz"), **arrays)
+            with open(os.path.join(tmp, "META.json"), "w") as f:
+                json.dump({"folded": folded, "entries": meta_entries}, f)
+            for fname in ("state.npz", "META.json"):
+                _fsync_path(os.path.join(tmp, fname))
+            if os.path.isdir(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        with open(os.path.join(final, "_COMMITTED"), "w") as f:
+            f.write("ok")
+        _fsync_path(os.path.join(final, "_COMMITTED"))
+        _fsync_path(self.dir)
+        # already on the writer: append + fsync inline (going through
+        # _append/sync would re-enqueue behind a possible close sentinel)
+        self._jf.write(json.dumps({"snapshot": name}) + "\n")
+        self._jf.flush()
+        os.fsync(self._jf.fileno())
+        self._prune(keep=name)
+        return name
+
+    def _snapshots(self):
+        out = []
+        for d in os.listdir(self.dir):
+            m = _SNAP_RE.fullmatch(d)
+            if m and os.path.exists(os.path.join(self.dir, d, "_COMMITTED")):
+                out.append((int(m.group(1)), d))
+        return sorted(out)
+
+    def _latest_snapshot(self) -> Optional[str]:
+        snaps = self._snapshots()
+        return snaps[-1][1] if snaps else None
+
+    def _prune(self, keep: str):
+        for _, d in self._snapshots():
+            if d != keep:
+                shutil.rmtree(os.path.join(self.dir, d),
+                              ignore_errors=True)
+        for d in os.listdir(self.dir):  # crashed temp attempts
+            if ".tmp-" in d and d.startswith("snap_"):
+                shutil.rmtree(os.path.join(self.dir, d),
+                              ignore_errors=True)
+
+    def _load_snapshot(self, name: str):
+        final = os.path.join(self.dir, name)
+        with open(os.path.join(final, "META.json")) as f:
+            meta = json.load(f)
+        entries = []
+        with np.load(os.path.join(final, "state.npz")) as z:
+            for i, ent in enumerate(meta["entries"]):
+                leaves = [z[f"e{i}_l{j}"] for j in range(ent["leaves"])]
+                entries.append((int(ent["level"]),
+                                _state_from_parts(ent["kind"], ent["aux"],
+                                                  leaves)))
+        return meta["folded"], tuple(entries)

@@ -106,6 +106,8 @@ def test_heartbeat_staleness(tmp_path):
     hb2 = Heartbeat(str(tmp_path), host_id=1)
     hb2.beat(step=1)
     assert hb.stale_hosts(2, timeout_s=60) == []
+    assert hb.stale_hosts(3, timeout_s=60) == []  # host 2: startup grace
+    hb._created -= hb.startup_grace_s + 1.0       # grace lapses
     assert hb.stale_hosts(3, timeout_s=60) == [2]  # host 2 never beat
 
 
@@ -137,3 +139,70 @@ print("elastic OK")
 """
     out = run_with_devices(code, 8)
     assert "elastic OK" in out
+
+
+def test_async_save_surfaces_writer_exceptions(tmp_path):
+    """PR-7 audit: a failing writer thread must raise at join, not
+    silently drop the error while the caller believes the step durable."""
+
+    class Boom:
+        """A pytree leaf whose device_get explodes mid-write."""
+
+    def bad_get(x):
+        raise OSError("disk full")
+
+    t = {"a": jnp.ones(3)}
+    handle = ckpt.save(str(tmp_path), 1, t, async_=True)
+    handle.join(timeout=30)  # healthy save: join returns the final path
+
+    import unittest.mock as mock
+    with mock.patch.object(jax, "device_get", side_effect=bad_get):
+        handle = ckpt.save(str(tmp_path), 2, t, async_=True)
+        with pytest.raises(OSError, match="disk full"):
+            handle.join(timeout=30)
+    assert ckpt.latest_step(str(tmp_path)) == 1  # step 2 never committed
+    # the failed writer's temp dir was cleaned up, not left to shadow
+    assert not [d for d in os.listdir(str(tmp_path)) if ".tmp" in d]
+
+
+def test_async_save_join_returns_final_path(tmp_path):
+    t = _tree()
+    handle = ckpt.save(str(tmp_path), 4, t, async_=True)
+    final = handle.join(timeout=30)
+    assert final == os.path.join(str(tmp_path), "step_000000004")
+    assert handle.result() == final  # idempotent alias
+    assert not handle.is_alive()
+
+
+def test_concurrent_same_step_saves_do_not_race(tmp_path):
+    """PR-7 audit: two concurrent saves of the same step must not
+    interleave files in a shared temp dir — each stages privately and
+    the committed checkpoint is one writer's complete tree."""
+    import threading
+
+    n_writers, errors = 6, []
+    barrier = threading.Barrier(n_writers)
+
+    def writer(i):
+        try:
+            barrier.wait(timeout=30)
+            ckpt.save(str(tmp_path), 9, {"w": jnp.full((32, 32), float(i)),
+                                         "tag": jnp.int32(i)})
+        except Exception as e:  # noqa: BLE001 — collected for the assert
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(i,))
+               for i in range(n_writers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30)
+    assert not errors
+    assert ckpt.latest_step(str(tmp_path)) == 9
+    r = ckpt.restore(str(tmp_path), 9, {"w": jnp.zeros((32, 32)),
+                                        "tag": jnp.int32(0)})
+    # a complete, self-consistent tree from ONE writer (no chimera)
+    i = int(r["tag"])
+    np.testing.assert_array_equal(np.asarray(r["w"]),
+                                  np.full((32, 32), float(i)))
+    assert not [d for d in os.listdir(str(tmp_path)) if ".tmp" in d]

@@ -251,3 +251,107 @@ def test_run_restartable_saves_final_partial_interval(tmp_path):
         save_every=5)
     assert int(state["n"]) == 7
     assert ckpt.latest_step(str(tmp_path)) == 7
+
+
+def test_heartbeat_startup_grace_for_never_beaten_hosts(tmp_path):
+    """PR-7 regression: a freshly created monitor must not flag peers
+    that simply have not beaten yet (their files legitimately do not
+    exist at pod start) — only after the startup grace lapses."""
+    hb = Heartbeat(str(tmp_path), host_id=0, interval_s=10.0)
+    hb.beat(step=1)
+    assert hb.stale_hosts(3, timeout_s=60) == []  # within 3x interval grace
+    hb._created -= hb.startup_grace_s + 1.0       # grace lapses
+    assert hb.stale_hosts(3, timeout_s=60) == [1, 2]
+
+
+def test_heartbeat_grace_does_not_cover_corrupt_files(tmp_path):
+    """The grace window is for *absent* beats; a host that wrote garbage
+    did beat — and is stale immediately, grace or not."""
+    hb = Heartbeat(str(tmp_path), host_id=0)
+    hb.beat(step=1)
+    with open(os.path.join(str(tmp_path), "host_1.hb"), "w") as f:
+        f.write("{not json")
+    assert hb.stale_hosts(2, timeout_s=60) == [1]
+
+
+def test_heartbeat_grace_window_configurable(tmp_path):
+    hb = Heartbeat(str(tmp_path), host_id=0, startup_grace_s=0.0)
+    hb._created -= 1.0
+    assert hb.stale_hosts(2, timeout_s=60) == [0, 1]
+
+
+def test_run_restartable_fast_forwards_reiterable_batches(tmp_path):
+    """PR-7 regression: restoring step N from a re-iterable source must
+    feed batch N to step N+1 — the old ``iter(batches)`` replayed batch
+    0 against the restored step."""
+    crashed = {"done": False}
+    pairs = []  # (step-entering, batch consumed)
+
+    def step_fn(state, batch):
+        n = int(state["n"])
+        pairs.append((n, batch))
+        if n + 1 == 8 and not crashed["done"]:
+            crashed["done"] = True
+            raise RuntimeError("boom")
+        return {"n": state["n"] + 1}
+
+    batches = list(range(100))  # re-iterable: restart must fast-forward
+    state, _ = run_restartable(
+        step_fn, lambda: {"n": jnp.int32(0)}, batches,
+        ckpt_dir=str(tmp_path), total_steps=10, save_every=5,
+        max_restarts=2)
+    assert int(state["n"]) == 10
+    # every step (first run and resumed replay alike) consumed ITS batch
+    assert all(b == n for n, b in pairs)
+    assert [n for n, _ in pairs] == [0, 1, 2, 3, 4, 5, 6, 7, 5, 6, 7, 8, 9]
+
+
+def test_run_restartable_seekable_batches(tmp_path):
+    """A source with ``seek(step)`` is positioned directly (no
+    fast-forward consumption)."""
+
+    class Seekable:
+        def __init__(self, n):
+            self.n = n
+            self.pos = 0
+            self.seeks = []
+
+        def seek(self, step):
+            self.seeks.append(step)
+            self.pos = step
+
+        def __iter__(self):
+            while self.pos < self.n:
+                v = self.pos
+                self.pos += 1
+                yield v
+
+    crashed = {"done": False}
+    pairs = []
+
+    def step_fn(state, batch):
+        n = int(state["n"])
+        pairs.append((n, batch))
+        if n + 1 == 7 and not crashed["done"]:
+            crashed["done"] = True
+            raise RuntimeError("boom")
+        return {"n": state["n"] + 1}
+
+    src = Seekable(100)
+    state, _ = run_restartable(
+        step_fn, lambda: {"n": jnp.int32(0)}, src,
+        ckpt_dir=str(tmp_path), total_steps=8, save_every=5, max_restarts=2)
+    assert int(state["n"]) == 8
+    assert src.seeks == [0, 5]  # fresh start, then restored step
+    assert all(b == n for n, b in pairs)
+
+
+def test_run_restartable_fast_forward_exhaustion_is_an_error(tmp_path):
+    """Restoring past the end of a short re-iterable source must say so
+    instead of silently feeding batch 0."""
+    ckpt.save(str(tmp_path), 5, {"n": jnp.int32(5)})
+    with pytest.raises(ValueError, match="fast-forwarding"):
+        run_restartable(
+            lambda s, b: {"n": s["n"] + 1}, lambda: {"n": jnp.int32(0)},
+            [0, 1, 2], ckpt_dir=str(tmp_path), total_steps=10,
+            save_every=5, max_restarts=0)

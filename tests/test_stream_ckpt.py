@@ -1,0 +1,382 @@
+"""Crash-only tiled streams: journal + snapshot + resume (DESIGN.md §13).
+
+The crash-only contract's *checkpoint* half, pinned here:
+
+- **Kill-and-resume property (fuzzed)** — for random (graph × tiling ×
+  terminal × kill-point) cases, interrupting after k of n tiles and
+  resuming from the journal yields bit-identical reduction states and
+  array/memmap outputs vs the uninterrupted run on lax/materialize
+  (allclose on fused): the restored binary-counter fold continues the
+  exact merge tree.
+- **Resume skips durable work** — the second process computes only the
+  non-durable tiles (counted via a fresh injector's device entries),
+  and a completed journal makes re-runs compute nothing.
+- **Fingerprint invalidation** — a journal written by a different plan
+  (tiling, pad mode, graph) refuses to load; so does a non-journal
+  file.  Torn trailing journal lines (the append a crash interrupted)
+  are dropped, not fatal.
+- **Snapshot discipline** — snapshots commit atomically (`_COMMITTED`
+  last), uncommitted ones are ignored, only the latest survives.
+- **Quarantine interplay** — tiles quarantined in a faulty run are
+  re-attempted by a resumed run (a new process may not share the
+  fault).
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _prop import given, settings, strategies as st
+
+from repro.pipe import pipe, plan_tiled
+from repro.pipe.tiled import StreamFaultError
+from repro.runtime.faults import FaultInjector, FaultSpec, StreamKilled
+from repro.runtime.stream_ckpt import JOURNAL_NAME, StreamCheckpoint
+
+TERMINALS = ("array", "moments", "hist", "cov")
+
+
+def _graph(terminal, seed=0, shape=(18, 14)):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(*shape).astype(np.float32))
+    P = pipe(x).gaussian(1.0, op_shape=3)
+    if terminal == "array":
+        return P.gradient()
+    if terminal == "moments":
+        return P.moments(order=4)
+    if terminal == "hist":
+        return P.hist(16, range=(-4.0, 4.0))
+    W = rng.randn(9, 3).astype(np.float32)
+    return pipe(x).bank(3, W).cov()
+
+
+def _tree_equal(a, b, exact=True):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        if exact:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        else:
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=1e-5, atol=1e-5)
+
+
+def _run_killed(tp, kill_after, **kw):
+    """Run until the simulated crash; the kill must actually fire."""
+    with pytest.raises(StreamKilled):
+        tp.run(faults=FaultInjector(kill_after=kill_after), **kw)
+
+
+def _journal_done(dir_):
+    done = set()
+    with open(os.path.join(dir_, JOURNAL_NAME)) as f:
+        for line in f:
+            rec = json.loads(line)
+            if "done" in rec:
+                done.add(rec["done"])
+    return done
+
+
+# -- the kill-and-resume property --------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    terminal=st.sampled_from(TERMINALS),
+    tiles=st.sampled_from([(3, 2), (2, 3), (4, 1), (2, 2)]),
+    method=st.sampled_from(["lax", "materialize"]),
+    kill_at=st.integers(min_value=0, max_value=5),
+    every=st.integers(min_value=1, max_value=3),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_kill_and_resume_is_bit_identical(terminal, tiles, method,
+                                          kill_at, every, seed,
+                                          tmp_path_factory):
+    """Interrupt after k of n tiles, resume, compare against the
+    uninterrupted run: bit-identical on lax/materialize."""
+    P = _graph(terminal, seed=seed % 7)
+    d = str(tmp_path_factory.mktemp("stream"))
+    out_kw = {}
+    if terminal == "array":
+        out_kw["out_path"] = os.path.join(d, "out.npy")
+    ref_tp = plan_tiled(P, tiles=tiles, method=method)
+    ref = ref_tp.run()
+    kill = min(kill_at, ref_tp.num_tiles - 1)
+
+    tp = plan_tiled(P, tiles=tiles, method=method)
+    _run_killed(tp, kill, checkpoint_dir=d, checkpoint_every=every,
+                **out_kw)
+    res = tp.run(checkpoint_dir=d, checkpoint_every=every, **out_kw)
+    if terminal == "array":
+        np.testing.assert_array_equal(np.asarray(res), np.asarray(ref))
+    else:
+        _tree_equal(ref, res, exact=True)
+
+
+def test_kill_and_resume_fused_allclose(tmp_path):
+    """The fused path re-associates float math, so resume promises
+    allclose (the merge tree is still exact; the per-tile kernels are
+    not bit-stable vs lax)."""
+    P = _graph("moments")
+    ref = plan_tiled(P, tiles=(3, 2), method="fused").run()
+    tp = plan_tiled(P, tiles=(3, 2), method="fused")
+    _run_killed(tp, 2, checkpoint_dir=str(tmp_path), checkpoint_every=2)
+    res = tp.run(checkpoint_dir=str(tmp_path), checkpoint_every=2)
+    _tree_equal(ref, res, exact=False)
+
+
+def test_resume_skips_durable_tiles(tmp_path):
+    """The resumed process computes ONLY what the journal does not
+    already cover (counted by a fresh injector's device entries)."""
+    P = _graph("moments")
+    tp = plan_tiled(P, tiles=(3, 2), method="lax")
+    _run_killed(tp, 4, checkpoint_dir=str(tmp_path), checkpoint_every=2)
+    # reduction durability = last committed snapshot (cadence 2 -> 4 tiles)
+    counter = FaultInjector()  # no specs: pure compute-entry counter
+    res = tp.run(checkpoint_dir=str(tmp_path), checkpoint_every=2,
+                 faults=counter)
+    assert counter._compute_entries == tp.num_tiles - 4
+    _tree_equal(plan_tiled(P, tiles=(3, 2), method="lax").run(), res)
+
+
+def test_completed_journal_computes_nothing(tmp_path):
+    P = _graph("array")
+    pth = os.path.join(str(tmp_path), "o.npy")
+    tp = plan_tiled(P, tiles=(2, 2), method="lax")
+    ref = tp.run(checkpoint_dir=str(tmp_path), out_path=pth)
+    counter = FaultInjector()
+    res = tp.run(checkpoint_dir=str(tmp_path), out_path=pth,
+                 faults=counter)
+    assert counter._compute_entries == 0  # fully durable: zero recompute
+    np.testing.assert_array_equal(np.asarray(res), np.asarray(ref))
+
+
+def test_array_done_set_matches_placed_tiles(tmp_path):
+    """Journal 'done' lines are written at host placement, so after a
+    kill the done set is a subset of dispatched tiles and the resumed
+    union covers everything exactly once."""
+    P = _graph("array")
+    pth = os.path.join(str(tmp_path), "o.npy")
+    tp = plan_tiled(P, tiles=(3, 2), method="lax")
+    _run_killed(tp, 4, checkpoint_dir=str(tmp_path), out_path=pth)
+    done = _journal_done(str(tmp_path))
+    assert len(done) <= 4  # placement lags dispatch (staged writeback)
+    counter = FaultInjector()
+    tp.run(checkpoint_dir=str(tmp_path), out_path=pth, faults=counter)
+    assert counter._compute_entries == tp.num_tiles - len(done)
+    assert _journal_done(str(tmp_path)) == set(range(tp.num_tiles))
+
+
+def test_resume_dir_alias(tmp_path):
+    P = _graph("moments")
+    tp = plan_tiled(P, tiles=(3, 2), method="lax")
+    _run_killed(tp, 3, checkpoint_dir=str(tmp_path))
+    res = tp.run(resume_dir=str(tmp_path))  # read-side spelling
+    _tree_equal(plan_tiled(P, tiles=(3, 2), method="lax").run(), res)
+    with pytest.raises(ValueError, match="alias"):
+        tp.run(checkpoint_dir=str(tmp_path), resume_dir=str(tmp_path) + "x")
+
+
+def test_checkpointed_array_stream_needs_persistent_output(tmp_path):
+    P = _graph("array")
+    tp = plan_tiled(P, tiles=(2, 2), method="lax")
+    with pytest.raises(ValueError, match="persistent"):
+        tp.run(checkpoint_dir=str(tmp_path))
+    # out= (caller-owned arena) qualifies
+    out = np.empty(tp.out_shape, tp.out_dtype)
+    tp.run(checkpoint_dir=str(tmp_path), out=out)
+
+
+def test_memmap_resume_does_not_truncate(tmp_path):
+    """Resume must reopen the memmap r+ — a w+ reopen would zero the
+    durable tiles the journal promises are done."""
+    P = _graph("array")
+    pth = os.path.join(str(tmp_path), "o.npy")
+    ref = plan_tiled(P, tiles=(3, 2), method="lax").run()
+    tp = plan_tiled(P, tiles=(3, 2), method="lax")
+    _run_killed(tp, 5, checkpoint_dir=str(tmp_path), out_path=pth)
+    done = _journal_done(str(tmp_path))
+    assert done  # some tiles became durable before the crash
+    before = np.array(np.load(pth, mmap_mode="r"))
+    res = tp.run(checkpoint_dir=str(tmp_path), out_path=pth)
+    np.testing.assert_array_equal(np.asarray(res), np.asarray(ref))
+    # durable regions were preserved verbatim, not recomputed from zeros
+    for i in sorted(done):
+        s = tp.specs[i]
+        box = tuple(slice(a, b) for a, b in zip(s.out_lo, s.out_hi))
+        np.testing.assert_array_equal(np.asarray(res)[box], before[box])
+
+
+def test_memmap_resume_rejects_replaced_file(tmp_path):
+    P = _graph("array")
+    pth = os.path.join(str(tmp_path), "o.npy")
+    tp = plan_tiled(P, tiles=(3, 2), method="lax")
+    _run_killed(tp, 3, checkpoint_dir=str(tmp_path), out_path=pth)
+    np.save(pth, np.zeros((3, 3), np.float64))  # someone swapped the file
+    with pytest.raises(ValueError, match="replaced"):
+        tp.run(checkpoint_dir=str(tmp_path), out_path=pth)
+
+
+# -- fingerprint invalidation ------------------------------------------------
+
+
+@pytest.mark.parametrize("other", [
+    lambda P: plan_tiled(P, tiles=(2, 2), method="lax"),       # tiling
+    lambda P: plan_tiled(P, tiles=(3, 2), method="lax",
+                         pad_value="reflect"),                 # pad mode
+    lambda P: plan_tiled(P, tiles=(3, 2), method="lax",
+                         out_dtype="float16"),                 # dtype
+])
+def test_stale_fingerprint_refuses_resume(tmp_path, other):
+    P = _graph("array")
+    pth = os.path.join(str(tmp_path), "o.npy")
+    tp = plan_tiled(P, tiles=(3, 2), method="lax")
+    _run_killed(tp, 3, checkpoint_dir=str(tmp_path), out_path=pth)
+    with pytest.raises(ValueError, match="stale|fingerprint"):
+        other(P).run(checkpoint_dir=str(tmp_path), out_path=pth)
+
+
+def test_different_graph_refuses_resume(tmp_path):
+    tp = plan_tiled(_graph("moments"), tiles=(3, 2), method="lax")
+    _run_killed(tp, 3, checkpoint_dir=str(tmp_path))
+    tp2 = plan_tiled(_graph("hist"), tiles=(3, 2), method="lax")
+    with pytest.raises(ValueError, match="stale|fingerprint"):
+        tp2.run(checkpoint_dir=str(tmp_path))
+
+
+def test_non_journal_file_refuses_append(tmp_path):
+    with open(os.path.join(str(tmp_path), JOURNAL_NAME), "w") as f:
+        f.write('{"kind": "something-else"}\n')
+    tp = plan_tiled(_graph("moments"), tiles=(3, 2), method="lax")
+    with pytest.raises(ValueError, match="journal"):
+        tp.run(checkpoint_dir=str(tmp_path))
+
+
+def test_torn_journal_tail_is_dropped(tmp_path):
+    """A crash mid-append leaves a partial last line; resume parses the
+    good prefix, truncates the tear, and continues."""
+    P = _graph("moments")
+    tp = plan_tiled(P, tiles=(3, 2), method="lax")
+    _run_killed(tp, 4, checkpoint_dir=str(tmp_path), checkpoint_every=2)
+    jpath = os.path.join(str(tmp_path), JOURNAL_NAME)
+    with open(jpath, "a") as f:
+        f.write('{"done": 5')  # no closing brace, no newline
+    res = tp.run(checkpoint_dir=str(tmp_path), checkpoint_every=2)
+    _tree_equal(plan_tiled(P, tiles=(3, 2), method="lax").run(), res)
+    with open(jpath) as f:  # the tear did not corrupt later appends
+        for line in f:
+            json.loads(line)
+
+
+def test_fingerprint_is_stable_and_discriminating():
+    P = _graph("moments")
+    a = plan_tiled(P, tiles=(3, 2), method="lax")
+    b = plan_tiled(P, tiles=(3, 2), method="lax")
+    assert a.fingerprint() == b.fingerprint()
+    c = plan_tiled(P, tiles=(3, 2), method="lax", pad_value=0.0)
+    assert a.fingerprint() != c.fingerprint()
+    d = plan_tiled(P, tiles=(3, 2), method="lax", order="scan")
+    assert a.fingerprint() != d.fingerprint()  # stream order is identity
+
+
+# -- snapshot discipline -----------------------------------------------------
+
+
+def test_only_latest_snapshot_is_kept(tmp_path):
+    P = _graph("moments")
+    tp = plan_tiled(P, tiles=(3, 2), method="lax")
+    tp.run(checkpoint_dir=str(tmp_path), checkpoint_every=1)
+    snaps = [d for d in os.listdir(str(tmp_path)) if d.startswith("snap_")]
+    assert len(snaps) == 1  # every-tile cadence, but older snaps pruned
+    assert os.path.exists(
+        os.path.join(str(tmp_path), snaps[0], "_COMMITTED"))
+
+
+def test_uncommitted_snapshot_is_ignored(tmp_path):
+    P = _graph("moments")
+    tp = plan_tiled(P, tiles=(3, 2), method="lax")
+    _run_killed(tp, 4, checkpoint_dir=str(tmp_path), checkpoint_every=2)
+    # forge a LATER snapshot that never committed (crash mid-write)
+    fake = os.path.join(str(tmp_path), "snap_000000099")
+    os.makedirs(fake)
+    with open(os.path.join(fake, "META.json"), "w") as f:
+        f.write("{")
+    res = tp.run(checkpoint_dir=str(tmp_path), checkpoint_every=2)
+    _tree_equal(plan_tiled(P, tiles=(3, 2), method="lax").run(), res)
+
+
+def test_quarantined_tiles_reattempted_on_resume(tmp_path):
+    """Quarantine is per-run, not per-journal: the next process may not
+    share the fault, so resume retries what the last run gave up on."""
+    P = _graph("moments")
+    ref = plan_tiled(P, tiles=(3, 2), method="lax").run()
+    tp = plan_tiled(P, tiles=(3, 2), method="lax")
+    inj = FaultInjector((FaultSpec("device", "permanent", rate=0.3),),
+                        seed=1)
+    with pytest.raises(StreamFaultError):
+        tp.run(checkpoint_dir=str(tmp_path), faults=inj)
+    n_bad = len(tp.fault_report.records)
+    assert n_bad > 0
+    # new process, fault gone: only healthy-run leftovers + quarantined
+    res = tp.run(checkpoint_dir=str(tmp_path))
+    assert not tp.fault_report.records
+    _tree_equal(ref, res, exact=False)  # merge order differs: allclose
+
+
+def test_stream_checkpoint_unit_roundtrip(tmp_path):
+    """StreamCheckpoint alone: journal + snapshot round-trip for each
+    reduction kind, including aux metadata."""
+    from repro.stats.cov import CovState
+    from repro.stats.hist import Histogram
+    from repro.stats.moments import MomentState
+
+    states = [
+        (0, MomentState(jnp.float32(4.0), jnp.float32(1.0),
+                        jnp.float32(2.0), jnp.float32(0.5),
+                        jnp.float32(3.0), order=4)),
+        (1, Histogram(jnp.arange(8, dtype=jnp.float32), -2.0, 2.0)),
+        (2, CovState(jnp.float32(5.0), jnp.ones(3, jnp.float32),
+                     jnp.eye(3, dtype=jnp.float32))),
+    ]
+    ck = StreamCheckpoint(str(tmp_path), fingerprint="abc", num_tiles=9,
+                          out_kind="moments", every=2)
+    assert ck.load() is None
+    for i in range(7):
+        ck.tile_done(i)
+    ck.snapshot(range(7), states)
+    ck.close()
+
+    ck2 = StreamCheckpoint(str(tmp_path), fingerprint="abc", num_tiles=9,
+                           out_kind="moments", every=2)
+    rs = ck2.load()
+    ck2.close()
+    assert rs.done == frozenset(range(7)) and not rs.complete
+    assert [lvl for lvl, _ in rs.entries] == [0, 1, 2]
+    m = rs.entries[0][1]
+    assert isinstance(m, MomentState) and m.order == 4
+    h = rs.entries[1][1]
+    assert isinstance(h, Histogram) and (h.lo, h.hi) == (-2.0, 2.0)
+    np.testing.assert_array_equal(np.asarray(h.counts), np.arange(8.0))
+    c = rs.entries[2][1]
+    assert isinstance(c, CovState)
+    np.testing.assert_array_equal(np.asarray(c.comoment), np.eye(3))
+
+
+def test_checkpoint_overhead_journal_only_io(tmp_path):
+    """The journal write path does no per-tile fsync (cadence-bounded):
+    a full run appends exactly header + dones + snapshots + complete."""
+    P = _graph("moments")
+    tp = plan_tiled(P, tiles=(3, 2), method="lax")
+    tp.run(checkpoint_dir=str(tmp_path), checkpoint_every=3)
+    with open(os.path.join(str(tmp_path), JOURNAL_NAME)) as f:
+        kinds = [next(iter(json.loads(ln))) for ln in f]
+    n = tp.num_tiles
+    assert kinds[0] == "kind" and kinds.count("done") == n
+    # cadence snapshots only at *interior* boundaries: the final-tile
+    # boundary and the success path are elided — on full coverage the
+    # `complete` marker is the durable truth and a tail snapshot would
+    # never be read (it also kept the ckpt-overhead row from parity)
+    assert kinds.count("snapshot") == (n - 1) // 3
+    assert kinds[-1] == "complete"

@@ -1,0 +1,272 @@
+"""Chaos harness for the crash-only tiled stream (DESIGN.md §13).
+
+CI's chaos job runs this over a small seed matrix; each invocation
+drives one seeded fault scenario end-to-end against small tiled
+programs (a map pipeline and a reduction pipeline) and checks the
+recovery invariants the suite pins:
+
+- ``transient``  — seeded transient faults at all three boundaries
+  (read / device / writeback); the bounded per-tile retry must absorb
+  every one of them, the result must be **bit-identical** to the
+  fault-free run (method="lax"), and the cost must show up in
+  ``FaultReport.retried`` rather than in coverage.
+- ``permanent``  — seeded permanent faults; ``strict=True`` must raise
+  :class:`~repro.pipe.tiled.StreamFaultError`, ``strict=False`` must
+  return the partial result, and every element *outside* the report's
+  uncovered-region mask must equal the fault-free reference.
+- ``kill``       — :class:`~repro.runtime.faults.StreamKilled` fired
+  after ``k`` tiles (``k`` varies with the seed) with a checkpoint dir;
+  re-running with the same dir must resume from the journal and finish
+  bit-identical to the uninterrupted run, for both the memmap output
+  and the reduction-snapshot paths.
+
+One ``FaultReport`` JSON is written per (scenario, program, seed) into
+``--out-dir`` — CI uploads the directory as an artifact, so a red chaos
+leg ships the exact quarantine records and seeds needed to reproduce it
+locally (injection is a pure function of the seed).  Exit is non-zero
+if any invariant fails; failures are collected across the whole matrix
+first so the artifacts are complete either way.
+
+    PYTHONPATH=src python tools/chaos.py --scenario transient \
+        --seeds 0 1 2 --out-dir chaos-reports
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.pipe import pipe, plan_tiled
+from repro.pipe.tiled import StreamFaultError
+from repro.runtime.faults import (
+    SITES,
+    FaultInjector,
+    FaultSpec,
+    StreamKilled,
+)
+
+SCENARIOS = ("transient", "permanent", "kill")
+
+#: small but multi-tile: enough tiles that every seed hits some of them
+SHAPE = (18, 14, 10)
+TILES = (3, 2, 1)
+
+
+def _vol(seed=0):
+    return jnp.asarray(
+        np.random.RandomState(seed).randn(*SHAPE).astype(np.float32))
+
+
+def _map_plan():
+    """Array-output program: gradient magnitude lands on the out grid."""
+    P = pipe(_vol(0)).gaussian(1.0, op_shape=3).gradient()
+    return plan_tiled(P, tiles=TILES, method="lax")
+
+
+def _reduce_plan():
+    """Reduction program: the binary-counter moments fold."""
+    P = pipe(_vol(0)).gaussian(1.0, op_shape=3).moments(order=2)
+    return plan_tiled(P, tiles=TILES, method="lax")
+
+
+def _tree_bit_identical(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class Verdict:
+    """One scenario run's invariant checklist, JSON-serializable."""
+
+    def __init__(self, scenario, program, seed):
+        self.scenario = scenario
+        self.program = program
+        self.seed = seed
+        self.checks = []
+        self.report = None
+
+    def check(self, name, fn):
+        """Run one invariant; record pass/fail without stopping the
+        matrix (CI wants every artifact, not the first failure)."""
+        try:
+            fn()
+            self.checks.append({"name": name, "ok": True})
+        except Exception as e:  # noqa: BLE001 — verdicts must be complete
+            self.checks.append({"name": name, "ok": False,
+                                "error": f"{type(e).__name__}: {e}"})
+
+    @property
+    def ok(self):
+        return all(c["ok"] for c in self.checks)
+
+    def write(self, out_dir):
+        payload = {
+            "scenario": self.scenario,
+            "program": self.program,
+            "seed": self.seed,
+            "ok": self.ok,
+            "checks": self.checks,
+            "fault_report": (json.loads(self.report.to_json())
+                             if self.report is not None else None),
+        }
+        path = os.path.join(
+            out_dir,
+            f"chaos_{self.scenario}_{self.program}_seed{self.seed}.json")
+        with open(path, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        return path
+
+
+# -- scenarios ---------------------------------------------------------------
+
+
+def run_transient(seed):
+    specs = tuple(FaultSpec(site, "transient", rate=0.4, failures=2)
+                  for site in SITES)
+    out = []
+    for program, make in (("map", _map_plan), ("reduce", _reduce_plan)):
+        v = Verdict("transient", program, seed)
+        ref = make().run()
+        tp = make()
+        res = tp.run(faults=FaultInjector(specs, seed=seed), max_retries=3)
+        v.report = tp.fault_report
+        v.check("faults-actually-fired",
+                lambda r=tp.fault_report: _require(r.retried > 0,
+                                                   "no transient fired"))
+        v.check("all-absorbed-no-quarantine",
+                lambda r=tp.fault_report: _require(not r.records,
+                                                   f"quarantined {r.records}"))
+        v.check("bit-identical-to-fault-free",
+                lambda a=ref, b=res: _tree_bit_identical(a, b))
+        out.append(v)
+    return out
+
+
+def run_permanent(seed):
+    specs = (FaultSpec("device", "permanent", rate=0.35),)
+    v = Verdict("permanent", "map", seed)
+    ref = np.asarray(_map_plan().run())
+
+    tp = _map_plan()
+    v.check("strict-raises-StreamFaultError",
+            lambda: _expect(StreamFaultError, tp.run,
+                            faults=FaultInjector(specs, seed=seed)))
+
+    tp2 = _map_plan()
+    res = tp2.run(faults=FaultInjector(specs, seed=seed), strict=False)
+    rep = tp2.fault_report
+    v.report = rep
+    v.check("some-tiles-quarantined",
+            lambda: _require(rep.records, "seed hit no tile"))
+    v.check("mask-matches-quarantine-boxes",
+            lambda: _require(
+                rep.uncovered_mask().sum() == sum(
+                    int(np.prod([b - a for a, b
+                                 in zip(r["out_lo"], r["out_hi"])]))
+                    for r in rep.records),
+                "mask area != union of quarantined boxes"))
+    v.check("covered-region-bit-identical",
+            lambda: np.testing.assert_array_equal(
+                np.asarray(res)[~rep.uncovered_mask()],
+                ref[~rep.uncovered_mask()]))
+    return [v]
+
+
+def run_kill(seed):
+    out = []
+    n = _map_plan().num_tiles
+    k = 1 + seed % (n - 1)  # kill point varies with the seed
+    with tempfile.TemporaryDirectory() as td:
+        # map program: the memmap output is the durable artifact
+        v = Verdict("kill", "map", seed)
+        ref = np.asarray(_map_plan().run())
+        pth = os.path.join(td, "out.npy")
+        tp = _map_plan()
+        v.check("kill-fires-mid-stream",
+                lambda: _expect(StreamKilled, tp.run,
+                                faults=FaultInjector(kill_after=k),
+                                checkpoint_dir=os.path.join(td, "m"),
+                                checkpoint_every=4, out_path=pth))
+        tp2 = _map_plan()
+        res = tp2.run(checkpoint_dir=os.path.join(td, "m"),
+                      checkpoint_every=4, out_path=pth)
+        v.report = tp2.fault_report
+        v.check("resumed-map-bit-identical",
+                lambda: np.testing.assert_array_equal(np.asarray(res), ref))
+        out.append(v)
+
+        # reduction program: the fold snapshot is the durable artifact
+        v = Verdict("kill", "reduce", seed)
+        ref = _reduce_plan().run()
+        tp = _reduce_plan()
+        v.check("kill-fires-mid-stream",
+                lambda: _expect(StreamKilled, tp.run,
+                                faults=FaultInjector(kill_after=k),
+                                checkpoint_dir=os.path.join(td, "r"),
+                                checkpoint_every=2))
+        tp2 = _reduce_plan()
+        res = tp2.run(checkpoint_dir=os.path.join(td, "r"),
+                      checkpoint_every=2)
+        v.report = tp2.fault_report
+        v.check("resumed-fold-bit-identical",
+                lambda: _tree_bit_identical(ref, res))
+        out.append(v)
+    return out
+
+
+def _require(cond, msg):
+    if not cond:
+        raise AssertionError(msg)
+
+
+def _expect(exc, fn, **kw):
+    try:
+        fn(**kw)
+    except exc:
+        return
+    raise AssertionError(f"expected {exc.__name__} was not raised")
+
+
+RUNNERS = {"transient": run_transient, "permanent": run_permanent,
+           "kill": run_kill}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scenario", choices=SCENARIOS, required=True)
+    ap.add_argument("--seeds", type=int, nargs="+", default=[0, 1, 2])
+    ap.add_argument("--out-dir", default="chaos-reports")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    failed = 0
+    for seed in args.seeds:
+        for v in RUNNERS[args.scenario](seed):
+            path = v.write(args.out_dir)
+            status = "ok  " if v.ok else "FAIL"
+            print(f"{status} {args.scenario}/{v.program} seed={seed} "
+                  f"-> {path}")
+            for c in v.checks:
+                mark = "+" if c["ok"] else "!"
+                line = f"   {mark} {c['name']}"
+                if not c["ok"]:
+                    line += f": {c['error']}"
+                print(line)
+            failed += 0 if v.ok else 1
+    if failed:
+        print(f"\nchaos: {failed} scenario run(s) violated invariants "
+              f"(reports in {args.out_dir}/)")
+        return 1
+    print(f"\nchaos: all {args.scenario} invariants held "
+          f"(seeds {args.seeds})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
