@@ -55,6 +55,7 @@ GATED_PREFIXES = (
     "tiled/stream-var",    # out-of-core stream vs naive per-tile eager loop
     "tiled/assemble",      # tiled array assembly vs the in-memory run
     "tiled/ckpt-overhead",  # journaled stream vs the unjournaled stream
+    "tiled/trace-overhead",  # traced stream vs the recorder switched off
 )
 
 #: absolute factor floors, by gated prefix: the fresh run must meet these
@@ -73,6 +74,13 @@ GATED_FLOORS = {
     # stream, but by construction right at 5% of the ~90ms --quick
     # stream.  Quick rows are still drift-gated vs their baseline.
     "tiled/ckpt-overhead/64x96x96": 0.95,
+    # the §14 tracer promises ≤5% overhead while recording (a span is
+    # two clock reads + one ring append per tile stage).  Like the ckpt
+    # row the floor pins to the full shape: per-span cost is fixed, so
+    # it amortizes against the full-shape stream but sits near the
+    # noise floor of the ~90ms --quick stream.  Quick rows are still
+    # drift-gated vs their baseline.
+    "tiled/trace-overhead/64x96x96": 0.95,
 }
 
 #: one-sided measurement-resolution allowance on absolute floors.  Parity

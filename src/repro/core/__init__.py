@@ -32,6 +32,7 @@ from repro.core.plan import (
     clear_plan_cache,
     get_bank_plan,
     get_plan,
+    plan_cache_reset,
     plan_cache_stats,
 )
 from repro.core.partition import (
@@ -62,6 +63,7 @@ __all__ = [
     "get_plan",
     "get_bank_plan",
     "plan_cache_stats",
+    "plan_cache_reset",
     "clear_plan_cache",
     "MeltMatrix",
     "melt",

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.grid import QuasiGrid, make_quasi_grid, normalize_pad_value
+from repro.obs.trace import span as _span
 
 __all__ = ["MeltMatrix", "melt", "unmelt", "melt_rows_for_slab", "pad_array",
            "melt_call_count"]
@@ -121,17 +122,19 @@ def melt(
     """
     global _MELT_CALLS
     _MELT_CALLS += 1
-    if grid is None:
-        spatial = x.shape[1:] if batched else x.shape
-        grid = make_quasi_grid(spatial, op_shape, stride, padding, dilation)
-    xp = _pad(x, grid, pad_value, batched=batched)
-    base = jnp.asarray(grid.base_flat_indices())  # (rows,)
-    offs = jnp.asarray(grid.flat_offsets())  # (cols,)
-    idx = base[:, None] + offs[None, :]  # (rows, cols)
-    if batched:
-        flat = xp.reshape(xp.shape[0], -1)
-        return MeltMatrix(data=flat[:, idx], grid=grid)
-    return MeltMatrix(data=xp.reshape(-1)[idx], grid=grid)
+    with _span("melt/materialize", batched=batched):
+        if grid is None:
+            spatial = x.shape[1:] if batched else x.shape
+            grid = make_quasi_grid(spatial, op_shape, stride, padding,
+                                   dilation)
+        xp = _pad(x, grid, pad_value, batched=batched)
+        base = jnp.asarray(grid.base_flat_indices())  # (rows,)
+        offs = jnp.asarray(grid.flat_offsets())  # (cols,)
+        idx = base[:, None] + offs[None, :]  # (rows, cols)
+        if batched:
+            flat = xp.reshape(xp.shape[0], -1)
+            return MeltMatrix(data=flat[:, idx], grid=grid)
+        return MeltMatrix(data=xp.reshape(-1)[idx], grid=grid)
 
 
 def unmelt(

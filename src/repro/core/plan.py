@@ -39,6 +39,7 @@ from repro.core.grid import (
     normalize_pad_value,
     normalize_tuple,
 )
+from repro.obs.trace import TRACER as _TRACER, span as _span
 
 __all__ = [
     "ExecOptions",
@@ -55,6 +56,7 @@ __all__ = [
     "normalize_axes",
     "separable_eligible",
     "plan_cache_stats",
+    "plan_cache_reset",
     "clear_plan_cache",
     "plan_fingerprint",
     "METHODS",
@@ -168,6 +170,18 @@ def separable_profitable(op_shape) -> bool:
     return numel >= 4 * sum(op_shape)
 
 
+def _plan_kind(key: tuple) -> str:
+    """Which plan family a cache key belongs to (for the per-kind stats
+    breakdown).  Non-stencil kinds tag key[0] with a string; bare stencil
+    keys start with the input-shape tuple."""
+    tag = key[0]
+    if tag == "tiled":
+        return "tile"
+    if tag in ("bank", "stats", "pipe"):
+        return tag
+    return "stencil"
+
+
 def _intern(key: tuple, build):
     """Lock/build/insert dance shared by every plan kind.
 
@@ -181,7 +195,8 @@ def _intern(key: tuple, build):
             plan._hits += 1
             _GLOBAL["hits"] += 1
             return plan
-    plan = build()
+    with _span("plan/build", kind=_plan_kind(key)):
+        plan = build()
     with _LOCK:
         existing = _CACHE.get(key)
         if existing is not None:
@@ -259,9 +274,16 @@ class StencilPlan:
 
         return jax.jit(run)
 
+    #: plan family tag carried into ``plan/exec`` span attrs
+    kind = "stencil"
+
     def __call__(self, x: jax.Array, weights: jax.Array) -> jax.Array:
         self._calls += 1
-        return self._exec(x, weights)
+        if not _TRACER.enabled:
+            return self._exec(x, weights)
+        # cold == this dispatch pays trace + compile, not just a jit hit
+        with _span("plan/exec", kind=self.kind, cold=self._traces == 0):
+            return self._exec(x, weights)
 
     def stats(self) -> Dict[str, int]:
         """Per-plan counters: cache ``hits``, executor ``calls``, ``traces``."""
@@ -314,6 +336,7 @@ class BankPlan(StencilPlan):
     """
 
     __slots__ = ("K", "separable")
+    kind = "bank"
 
     def __init__(self, key, in_shape, op_shape, stride, padding, dilation,
                  pad_value, method, dtype, batched, grid, K: int,
@@ -466,9 +489,14 @@ class StatsPlan:
 
         return jax.jit(run)
 
+    kind = "stats"
+
     def __call__(self, x: jax.Array):
         self._calls += 1
-        return self._exec(x)
+        if not _TRACER.enabled:
+            return self._exec(x)
+        with _span("plan/exec", kind=self.kind, cold=self._traces == 0):
+            return self._exec(x)
 
     def stats(self) -> Dict[str, int]:
         return {"hits": self._hits, "calls": self._calls,
@@ -556,9 +584,14 @@ class PipePlan:
                 f" passes={self.passes}, method={self.opts.method!r}, "
                 f"batched={self.opts.batched})")
 
+    kind = "pipe"
+
     def __call__(self, x: jax.Array):
         self._calls += 1
-        return self._exec(x)
+        if not _TRACER.enabled:
+            return self._exec(x)
+        with _span("plan/exec", kind=self.kind, cold=self._traces == 0):
+            return self._exec(x)
 
     def stats(self) -> Dict[str, int]:
         return {"hits": self._hits, "calls": self._calls,
@@ -599,6 +632,7 @@ class TilePlan(PipePlan):
     """
 
     __slots__ = ("spec", "tile_batch", "out_shape", "out_dtype")
+    kind = "tile"
 
     def __init__(self, key, in_shape, dtype, opts, steps, passes, melt_calls,
                  run_fn, spec=None, tile_batch: int = 0, out_shape=None,
@@ -655,10 +689,27 @@ def plan_fingerprint(*parts) -> str:
     return hashlib.sha256(canon(parts).encode()).hexdigest()[:24]
 
 
-def plan_cache_stats() -> Dict[str, int]:
-    """Process-wide counters: ``size``, ``hits``, ``misses``, ``evictions``."""
+def plan_cache_stats() -> Dict[str, object]:
+    """Process-wide counters: ``size``, ``hits``, ``misses``, ``evictions``,
+    plus a per-kind resident-plan breakdown under ``"kinds"`` (how many of
+    the ``size`` plans are stencil / bank / stats / pipe / tile)."""
     with _LOCK:
-        return {"size": len(_CACHE), **_GLOBAL}
+        kinds = {"stencil": 0, "bank": 0, "stats": 0, "pipe": 0, "tile": 0}
+        for key in _CACHE:
+            kinds[_plan_kind(key)] += 1
+        return {"size": len(_CACHE), **_GLOBAL, "kinds": kinds}
+
+
+def plan_cache_reset() -> None:
+    """Zero the global hit/miss/eviction counters, keeping resident plans.
+
+    Tests (and ``obs``-driven A/B runs) that only need a clean counter
+    baseline use this instead of :func:`clear_plan_cache` — dropping the
+    plans themselves would force re-traces and re-compiles the measurement
+    doesn't want to pay."""
+    with _LOCK:
+        for k in _GLOBAL:
+            _GLOBAL[k] = 0
 
 
 def clear_plan_cache() -> None:

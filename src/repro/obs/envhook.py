@@ -1,0 +1,84 @@
+"""``REPRO_TRACE=path.json`` — capture a trace with zero code changes.
+
+Benchmarks, the CI chaos job, and ad-hoc repro runs should be traceable
+without editing call sites: setting ``REPRO_TRACE`` makes every
+trace-aware entry point (``Pipe.run``, ``TiledProgram.run`` /
+``run_tiled``) enable the global tracer on first use and register an
+``atexit`` writer that exports the merged Chrome-trace JSON (metrics
+snapshot included) to the named path when the process exits.
+
+    REPRO_TRACE=trace.json PYTHONPATH=src \
+        python -m benchmarks.tiled --quick
+    # -> trace.json, loadable in chrome://tracing / ui.perfetto.dev
+
+The hook arms at most once per process (the first entry-point call that
+sees the variable set); :func:`flush` writes the current buffers
+immediately — ``tools/trace_check.py`` and tests use it instead of
+waiting for interpreter exit.  An export that fails at interpreter
+shutdown must never turn a successful run into a failure, so the atexit
+writer swallows its own errors (stderr note only); :func:`flush` raises
+normally.
+"""
+from __future__ import annotations
+
+import atexit
+import os
+import sys
+from typing import Optional
+
+from repro.obs import export as _export
+from repro.obs import trace as _trace
+
+__all__ = ["ENV_VAR", "maybe_start", "flush", "active_path"]
+
+ENV_VAR = "REPRO_TRACE"
+
+_armed: dict = {"path": None}
+
+
+def active_path() -> Optional[str]:
+    """The armed export path, or None when the hook is not active."""
+    return _armed["path"]
+
+
+def maybe_start() -> Optional[str]:
+    """Arm the env-var hook if ``REPRO_TRACE`` is set (idempotent).
+
+    Called by the trace-aware entry points at the top of each run; when
+    the variable is unset this is one ``os.environ`` lookup.  Returns
+    the armed path (or None).
+    """
+    if _armed["path"] is not None:
+        return _armed["path"]
+    path = os.environ.get(ENV_VAR)
+    if not path:
+        return None
+    _armed["path"] = path
+    _trace.enable()
+    atexit.register(_atexit_write)
+    return path
+
+
+def _atexit_write() -> None:
+    if _armed["path"] is None:  # pragma: no cover — disarmed in tests
+        return
+    try:
+        _export.write_chrome_trace(_armed["path"])
+    except Exception as e:  # noqa: BLE001 — shutdown must not fail the run
+        print(f"REPRO_TRACE: could not write {_armed['path']}: {e}",
+              file=sys.stderr)
+
+
+def flush() -> Optional[str]:
+    """Export the current buffers to the armed path *now* (or no-op when
+    the hook is not armed).  Unlike the atexit writer this raises on
+    I/O errors — a caller asking explicitly wants to know."""
+    if _armed["path"] is None:
+        return None
+    return _export.write_chrome_trace(_armed["path"])
+
+
+def _disarm_for_tests() -> None:
+    """Reset hook state (tests only; atexit registration is sticky but
+    the writer no-ops once disarmed)."""
+    _armed["path"] = None

@@ -1,0 +1,246 @@
+"""Named counters / gauges / fixed-bucket histograms — one registry (§14).
+
+The engine's introspection used to be scattered ad-hoc state:
+``plan_cache_stats()`` dicts, ``melt_call_count()``,
+``TiledProgram.writeback_stats`` / ``liveness_stats``,
+``FaultReport.retried``.  This registry is the one place such counters
+land so ``obs.snapshot()`` can return the whole engine state as a plain
+dict.  Three metric kinds, mirroring what the engine actually reports:
+
+- :class:`Counter`   — monotone event counts (tiles retried, beats);
+- :class:`Gauge`     — last-observed values (writeback staged depth,
+  stale-host count);
+- :class:`Histogram` — fixed-bucket latency/size distributions.  Like
+  the PR-3 ``repro.stats.hist.Histogram`` it is *mergeable*: two
+  histograms over the same bucket edges merge associatively and
+  commutatively (counts add, extrema min/max), so per-thread or
+  per-process metric state folds the same way streamed moments do —
+  pinned by the ``_prop`` merge-algebra property tests.
+
+Everything is plain Python + a per-registry lock (metric updates are
+per-tile / per-run, never per-element, so a lock is cheap); no jax, no
+numpy — importable from anywhere in the engine without cycles.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "REGISTRY",
+    "counter",
+    "gauge",
+    "histogram",
+    "snapshot",
+    "reset",
+    "DEFAULT_EDGES_MS",
+]
+
+#: default latency bucket edges (milliseconds), log-spaced 0.1ms..10s
+DEFAULT_EDGES_MS = (0.1, 0.3, 1.0, 3.0, 10.0, 30.0, 100.0, 300.0,
+                    1000.0, 3000.0, 10000.0)
+
+
+class Counter:
+    """A monotone event count."""
+
+    __slots__ = ("_lock", "value")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        with self._lock:
+            self.value += n
+
+    def snapshot(self):
+        return self.value
+
+
+class Gauge:
+    """The last observed value (None until first ``set``)."""
+
+    __slots__ = ("_lock", "value")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.value = None
+
+    def set(self, v) -> None:
+        with self._lock:
+            self.value = v
+
+    def max(self, v) -> None:
+        """Keep the running maximum (high-water gauges)."""
+        with self._lock:
+            self.value = v if self.value is None else max(self.value, v)
+
+    def snapshot(self):
+        return self.value
+
+
+class Histogram:
+    """Fixed-bucket histogram: ``len(edges) + 1`` bins (the last is the
+    overflow bin ``>= edges[-1]``), plus count/total/min/max.
+
+    Bucket ``i`` counts observations in ``[edges[i-1], edges[i])`` with
+    ``edges[-1] = -inf`` implied; the edges are part of the metric's
+    identity — :meth:`merge` refuses mismatched grids exactly like the
+    streaming-stats merge algebra does.
+    """
+
+    __slots__ = ("_lock", "edges", "buckets", "count", "total",
+                 "vmin", "vmax")
+
+    def __init__(self, edges: Sequence[float] = DEFAULT_EDGES_MS):
+        edges = tuple(float(e) for e in edges)
+        if len(edges) < 1:
+            raise ValueError("histogram needs at least one bucket edge")
+        if any(b <= a for a, b in zip(edges, edges[1:])):
+            raise ValueError(f"bucket edges must be strictly increasing, "
+                             f"got {edges}")
+        self._lock = threading.Lock()
+        self.edges = edges
+        self.buckets = [0] * (len(edges) + 1)
+        self.count = 0
+        self.total = 0.0
+        self.vmin = math.inf
+        self.vmax = -math.inf
+
+    def _bucket(self, v: float) -> int:
+        # linear scan: edge lists are ~a dozen entries and observe() is
+        # per-tile/per-run, never per-element
+        for i, e in enumerate(self.edges):
+            if v < e:
+                return i
+        return len(self.edges)
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        with self._lock:
+            self.buckets[self._bucket(v)] += 1
+            self.count += 1
+            self.total += v
+            self.vmin = min(self.vmin, v)
+            self.vmax = max(self.vmax, v)
+
+    def merge(self, other: "Histogram") -> "Histogram":
+        """A new histogram holding both sides' observations.
+
+        Associative and commutative (counts add, extrema min/max), and
+        it validates the bucket grid — merging histograms over
+        different edges is a category error, same as the stats engine's
+        ``merge_histograms``."""
+        if not isinstance(other, Histogram):
+            raise TypeError(f"can only merge Histogram, got "
+                            f"{type(other).__name__}")
+        if self.edges != other.edges:
+            raise ValueError(
+                f"cannot merge histograms over different bucket edges: "
+                f"{self.edges} vs {other.edges}")
+        out = Histogram(self.edges)
+        out.buckets = [a + b for a, b in zip(self.buckets, other.buckets)]
+        out.count = self.count + other.count
+        out.total = self.total + other.total
+        out.vmin = min(self.vmin, other.vmin)
+        out.vmax = max(self.vmax, other.vmax)
+        return out
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "edges": list(self.edges),
+                "buckets": list(self.buckets),
+                "count": self.count,
+                "total": self.total,
+                "min": None if self.count == 0 else self.vmin,
+                "max": None if self.count == 0 else self.vmax,
+                "mean": (self.total / self.count) if self.count else None,
+            }
+
+
+class MetricsRegistry:
+    """Get-or-create registry of named metrics.
+
+    Names are slash-separated like span names (``stream/retried``).  A
+    name is bound to one metric kind for the registry's lifetime —
+    re-requesting it with a different kind raises instead of silently
+    shadowing someone else's counter.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._metrics: Dict[str, object] = {}
+
+    def _get(self, name: str, kind, make):
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = self._metrics[name] = make()
+            elif not isinstance(m, kind):
+                raise TypeError(
+                    f"metric {name!r} is a {type(m).__name__}, not a "
+                    f"{kind.__name__}; pick a different name")
+            return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge, Gauge)
+
+    def histogram(self, name: str,
+                  edges: Optional[Sequence[float]] = None) -> Histogram:
+        h = self._get(name, Histogram,
+                      lambda: Histogram(edges if edges is not None
+                                        else DEFAULT_EDGES_MS))
+        if edges is not None and h.edges != tuple(float(e) for e in edges):
+            raise ValueError(
+                f"histogram {name!r} already registered with edges "
+                f"{h.edges}; cannot re-register with {tuple(edges)}")
+        return h
+
+    def names(self) -> Tuple[str, ...]:
+        with self._lock:
+            return tuple(sorted(self._metrics))
+
+    def snapshot(self) -> dict:
+        """Every metric's current value as a plain (JSON-able) dict."""
+        with self._lock:
+            items = list(self._metrics.items())
+        return {name: m.snapshot() for name, m in sorted(items)}
+
+    def reset(self) -> None:
+        """Drop every registered metric (tests / fresh runs)."""
+        with self._lock:
+            self._metrics.clear()
+
+
+#: the process-global registry every engine site reports through
+REGISTRY = MetricsRegistry()
+
+
+def counter(name: str) -> Counter:
+    return REGISTRY.counter(name)
+
+
+def gauge(name: str) -> Gauge:
+    return REGISTRY.gauge(name)
+
+
+def histogram(name: str, edges=None) -> Histogram:
+    return REGISTRY.histogram(name, edges)
+
+
+def snapshot() -> dict:
+    return REGISTRY.snapshot()
+
+
+def reset() -> None:
+    REGISTRY.reset()

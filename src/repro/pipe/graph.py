@@ -342,7 +342,7 @@ class Pipe:
     def run(self, method: str = "auto", pad_value="edge", out_dtype=None,
             *, tiles=None, memory_budget=None, tile_order: str = "hilbert",
             mesh=None, axis_name=None, prefetch: bool = True, out=None,
-            out_path=None):
+            out_path=None, trace=None):
         """Compile through the planner and execute.
 
         Single-op graphs lower straight onto the legacy plan kinds
@@ -363,7 +363,13 @@ class Pipe:
         a caller-supplied arena and ``out_path=`` into a ``.npy`` memmap
         on disk (results larger than RAM).  ``mesh``/``axis_name`` shard
         the tile stream across devices.
+
+        ``trace=`` observes the run (DESIGN.md §14): ``None`` defers to
+        the ``REPRO_TRACE`` env var, ``True`` records spans into
+        ``repro.obs``'s global tracer, a path additionally exports the
+        Chrome-trace JSON there, ``False`` is a hard off.
         """
+        from repro.obs import trace_scope
         from repro.pipe import compile as _compile
 
         if tiles is not None or memory_budget is not None:
@@ -374,7 +380,7 @@ class Pipe:
                              pad_value=pad_value, out_dtype=out_dtype,
                              order=tile_order, mesh=mesh,
                              axis_name=axis_name, prefetch=prefetch,
-                             out=out, out_path=out_path)
+                             out=out, out_path=out_path, trace=trace)
         if mesh is not None or axis_name is not None:
             raise ValueError("mesh=/axis_name= shard the *tiled* stream; "
                              "pass tiles= or memory_budget= too (or use "
@@ -389,8 +395,9 @@ class Pipe:
         if out is not None or out_path is not None:
             raise ValueError("out=/out_path= assemble the *tiled* array "
                              "output; pass tiles= or memory_budget= too")
-        return _compile.run(self, method=method, pad_value=pad_value,
-                            out_dtype=out_dtype)
+        with trace_scope(trace):
+            return _compile.run(self, method=method, pad_value=pad_value,
+                                out_dtype=out_dtype)
 
     def plan_tiled(self, *, tiles=None, memory_budget=None,
                    method: str = "auto", pad_value="edge", out_dtype=None,

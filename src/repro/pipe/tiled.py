@@ -77,6 +77,10 @@ from repro.pipe.fuse import (
     ZscoreStep,
     build_program,
 )
+from repro.obs import trace_scope as _trace_scope
+from repro.obs.metrics import counter as _counter, gauge as _gauge, \
+    histogram as _histogram
+from repro.obs.trace import instant as _instant, span as _span
 from repro.pipe.graph import MomentsOp, Pipe
 from repro.runtime.faults import NO_FAULTS, PermanentFault, TransientFault
 from repro.runtime.stream_ckpt import StreamCheckpoint
@@ -508,20 +512,24 @@ class _WritebackStream:
         self.placed += 1
 
     def _drain_one(self):
-        specs, tile = self._staged.pop(0)
-        host = self._host_view(tile)
-        grouped = isinstance(specs, tuple)  # stacked same-class group
-        for j, s in enumerate(specs if grouped else (specs,)):
-            h = host[j] if grouped else host
-            if self._guard is not None:
-                ok = self._guard(s, lambda s=s, h=h: self._place(s, h))
-            else:
-                self._place(s, h)
-                ok = True
-            if ok and self._on_placed is not None:
-                self._on_placed(s)
+        specs, tile, tag = self._staged.pop(0)
+        with _span("tile/writeback", tile=tag,
+                   staged=len(self._staged) + 1):
+            host = self._host_view(tile)
+            grouped = isinstance(specs, tuple)  # stacked same-class group
+            for j, s in enumerate(specs if grouped else (specs,)):
+                h = host[j] if grouped else host
+                if self._guard is not None:
+                    ok = self._guard(s, lambda s=s, h=h: self._place(s, h))
+                else:
+                    self._place(s, h)
+                    ok = True
+                if ok and self._on_placed is not None:
+                    self._on_placed(s)
 
-    def stage(self, specs, tile):
+    def stage(self, specs, tile, tag=None):
+        """Queue one result (``tag`` labels its trace span — the stream
+        index, or None for untagged group drains)."""
         if np.dtype(tile.dtype) != self._dtype:
             raise AssertionError(
                 f"internal: tile executor emitted dtype {tile.dtype}, "
@@ -531,7 +539,7 @@ class _WritebackStream:
             tile.copy_to_host_async()
         except (AttributeError, NotImplementedError):
             pass  # plain arrays (tests) / backends without async D2H
-        self._staged.append((specs, tile))
+        self._staged.append((specs, tile, tag))
         self.max_staged = max(self.max_staged, len(self._staged))
         while len(self._staged) > self._depth - 1:
             self._drain_one()
@@ -690,7 +698,8 @@ class TiledProgram:
             prefetch: bool = True, out=None, out_path=None, *,
             checkpoint_dir=None, resume_dir=None, checkpoint_every: int = 8,
             faults=None, max_retries: int = 3, retry_backoff: float = 0.0,
-            strict: bool = True, heartbeat=None, straggler=None):
+            strict: bool = True, heartbeat=None, straggler=None,
+            trace=None):
         """Stream every tile; returns the merged reduction state, or the
         assembled output as a host-side ``np.ndarray`` (the out-of-core
         contract: the device only ever holds tiles).
@@ -731,7 +740,25 @@ class TiledProgram:
         tile-group dispatch into the runtime liveness monitors (slow
         groups are flagged and re-dispatched once); see
         ``repro.runtime.fault_tolerance``.
+
+        **Tracing** (DESIGN.md §14).  ``trace=None`` (default) defers to
+        the ``REPRO_TRACE`` env var; ``trace=True`` records into the
+        global tracer for this run; ``trace="path.json"`` additionally
+        exports the Chrome-trace JSON there when the run ends;
+        ``trace=False`` is a hard off.  Per-tile read / h2d / execute /
+        writeback / journal spans and fault instants land in per-thread
+        tracks; counters land in ``repro.obs`` metrics either way
+        (``obs.snapshot()`` reads them).
         """
+        with _trace_scope(trace):
+            return self._run(mesh, axis_name, prefetch, out, out_path,
+                             checkpoint_dir, resume_dir, checkpoint_every,
+                             faults, max_retries, retry_backoff, strict,
+                             heartbeat, straggler)
+
+    def _run(self, mesh, axis_name, prefetch, out, out_path,
+             checkpoint_dir, resume_dir, checkpoint_every, faults,
+             max_retries, retry_backoff, strict, heartbeat, straggler):
         if (mesh is None) != (axis_name is None):
             raise ValueError("pass mesh= and axis_name= together")
         if mesh is not None and self.graph.batched:
@@ -781,6 +808,8 @@ class TiledProgram:
                 "tile": int(idx), "out_lo": list(spec.out_lo),
                 "out_hi": list(spec.out_hi), "site": site, "fault": kind,
                 "attempts": int(attempts), "error": err})
+            _instant("fault/quarantine", tile=int(idx), site=site,
+                     kind=kind, attempts=int(attempts))
             if ckpt is not None:
                 ckpt.quarantine(idx, site, kind, attempts, err)
 
@@ -799,11 +828,15 @@ class TiledProgram:
                 except TransientFault as e:
                     tries += 1
                     retried += 1
+                    _instant("fault/transient", tile=int(idx), site=site,
+                             attempt=tries)
                     if tries > max_retries:
                         quarantine(idx, site, "transient", tries, str(e))
                         return False, None
                     if retry_backoff:
-                        time.sleep(retry_backoff * 2.0 ** (tries - 1))
+                        with _span("fault/backoff", tile=int(idx),
+                                   attempt=tries):
+                            time.sleep(retry_backoff * 2.0 ** (tries - 1))
                 except PermanentFault as e:
                     quarantine(idx, site, "permanent", tries + 1, str(e))
                     return False, None
@@ -836,16 +869,21 @@ class TiledProgram:
                 self.out_dtype, depth=2 if prefetch else 1,
                 guard=guard, on_placed=on_placed)
 
+        t_run0 = time.perf_counter()
         try:
-            if mesh is not None:
-                res = self._run_sharded(mesh, axis_name, push, result,
-                                        sink, heartbeat=heartbeat,
-                                        straggler=straggler)
-            else:
-                pending = [i for i in range(self.num_tiles)
-                           if i not in done]
-                res = self._run_stream(pending, prefetch, attempt, push,
-                                       sink, ckpt, fold, done)
+            with _span("stream/run", tiles=self.num_tiles,
+                       classes=self.num_classes,
+                       kind=self.program.out_kind,
+                       sharded=mesh is not None):
+                if mesh is not None:
+                    res = self._run_sharded(mesh, axis_name, push, result,
+                                            sink, heartbeat=heartbeat,
+                                            straggler=straggler)
+                else:
+                    pending = [i for i in range(self.num_tiles)
+                               if i not in done]
+                    res = self._run_stream(pending, prefetch, attempt, push,
+                                           sink, ckpt, fold, done)
             # end-of-stream durability: on full coverage the completion
             # marker alone is durable truth (resume short-circuits before
             # ever reading a snapshot), so the tail fold state is only
@@ -868,6 +906,21 @@ class TiledProgram:
         if sink is not None:
             self.writeback_stats.clear()
             self.writeback_stats.update(sink.stats())
+        # counters land in the obs registry whether or not tracing is on
+        # — this is what obs.snapshot() unifies
+        _counter("stream/runs").inc()
+        _counter("stream/tiles").inc(self.num_tiles - len(
+            self.fault_report.quarantined))
+        if retried:
+            _counter("stream/retried").inc(retried)
+        if records:
+            _counter("stream/quarantined").inc(len(records))
+        if sink is not None:
+            _gauge("stream/writeback_max_staged").max(sink.max_staged)
+        for k, v in self.liveness_stats.items():
+            _gauge(f"liveness/{k}").set(v)
+        _histogram("stream/run_ms").observe(
+            (time.perf_counter() - t_run0) * 1e3)
         if records and strict:
             raise StreamFaultError(self.fault_report)
         return res
@@ -880,10 +933,17 @@ class TiledProgram:
         ``pending`` is the stream order minus resumed-durable tiles."""
         specs = self.specs
 
+        def grab(i):
+            # the two halves of a fetch get their own spans: host-side
+            # patch slicing vs the H2D transfer dispatch
+            with _span("tile/read", tile=int(i)):
+                patch = self._read_patch(specs[i])
+            with _span("tile/h2d", tile=int(i)):
+                return jax.device_put(patch)
+
         def fetch(k):
             idx = pending[k]
-            ok, patch = attempt(idx, "read", lambda i=idx: jax.device_put(
-                self._read_patch(specs[i])))
+            ok, patch = attempt(idx, "read", lambda i=idx: grab(i))
             return patch if ok else None
 
         cur = fetch(0) if pending else None
@@ -893,22 +953,26 @@ class TiledProgram:
                    if prefetch and k + 1 < len(pending) else None)
             if cur is not None:  # read not quarantined
                 plan = self._plan_for(spec)
-                ok, tile = attempt(idx, "device", lambda c=cur: plan(c))
+                with _span("tile/execute", tile=int(idx)):
+                    ok, tile = attempt(idx, "device",
+                                       lambda c=cur: plan(c))
                 if ok:
                     if push is not None:
                         push(tile)
                         done.add(idx)
                         if ckpt is not None:
-                            ckpt.tile_done(idx)
-                            # the final-tile boundary is excluded: full
-                            # coverage is about to become a `complete`
-                            # marker, partial coverage gets its tail
-                            # snapshot from the quarantine path
-                            if (len(done) % ckpt.every == 0
-                                    and len(done) < self.num_tiles):
-                                ckpt.snapshot(done, fold.entries)
+                            with _span("tile/journal", tile=int(idx)):
+                                ckpt.tile_done(idx)
+                                # the final-tile boundary is excluded:
+                                # full coverage is about to become a
+                                # `complete` marker, partial coverage
+                                # gets its tail snapshot from the
+                                # quarantine path
+                                if (len(done) % ckpt.every == 0
+                                        and len(done) < self.num_tiles):
+                                    ckpt.snapshot(done, fold.entries)
                     else:
-                        sink.stage(spec, tile)
+                        sink.stage(spec, tile, tag=int(idx))
             if not prefetch and k + 1 < len(pending):
                 nxt = fetch(k + 1)
             cur = nxt
@@ -1009,9 +1073,11 @@ class TiledProgram:
                     stacked = pair[(i // ways) % 2]
                     for j, s in enumerate(group):
                         stacked[j] = self._read_patch(s)
-                dev = put_tile_batch(stacked, mesh, axis_name)
+                with _span("group/h2d", group=seq[0], size=ways):
+                    dev = put_tile_batch(stacked, mesh, axis_name)
                 plan = self._plan_for(group[0], stack=ways)
-                tile = observe(plan(dev), lambda p=plan, d=dev: p(d))
+                with _span("group/execute", group=seq[0], size=ways):
+                    tile = observe(plan(dev), lambda p=plan, d=dev: p(d))
                 if reduce_out:
                     if self.program.out_kind == "moments":
                         push(merge_along_axis(tile, axis=0))
@@ -1167,14 +1233,17 @@ def run_tiled(P: Pipe, *, tiles=None, memory_budget=None, method="auto",
               out_path=None, checkpoint_dir=None, resume_dir=None,
               checkpoint_every=8, faults=None, max_retries=3,
               retry_backoff=0.0, strict=True, heartbeat=None,
-              straggler=None):
+              straggler=None, trace=None):
     """Plan + run in one call (the ``Pipe.run(tiles=…)`` backend)."""
-    tp = plan_tiled(P, tiles=tiles, memory_budget=memory_budget,
-                    method=method, pad_value=pad_value, out_dtype=out_dtype,
-                    order=order)
-    return tp.run(mesh=mesh, axis_name=axis_name, prefetch=prefetch,
-                  out=out, out_path=out_path, checkpoint_dir=checkpoint_dir,
-                  resume_dir=resume_dir, checkpoint_every=checkpoint_every,
-                  faults=faults, max_retries=max_retries,
-                  retry_backoff=retry_backoff, strict=strict,
-                  heartbeat=heartbeat, straggler=straggler)
+    with _trace_scope(trace):
+        with _span("stream/plan"):
+            tp = plan_tiled(P, tiles=tiles, memory_budget=memory_budget,
+                            method=method, pad_value=pad_value,
+                            out_dtype=out_dtype, order=order)
+        return tp.run(mesh=mesh, axis_name=axis_name, prefetch=prefetch,
+                      out=out, out_path=out_path,
+                      checkpoint_dir=checkpoint_dir, resume_dir=resume_dir,
+                      checkpoint_every=checkpoint_every, faults=faults,
+                      max_retries=max_retries, retry_backoff=retry_backoff,
+                      strict=strict, heartbeat=heartbeat,
+                      straggler=straggler)

@@ -21,6 +21,7 @@ from collections import deque
 from typing import Callable, Optional
 
 from repro.checkpoint import checkpoint as ckpt
+from repro.obs.metrics import counter as _counter, gauge as _gauge
 
 
 class Heartbeat:
@@ -46,6 +47,7 @@ class Heartbeat:
         with open(tmp, "w") as f:
             json.dump({"t": time.time(), "step": step}, f)
         os.replace(tmp, path)
+        _counter("liveness/beats").inc()
 
     def stale_hosts(self, num_hosts: int, timeout_s: float = 60.0):
         now = time.time()
@@ -63,6 +65,8 @@ class Heartbeat:
                     stale.append(h)
             except json.JSONDecodeError:
                 stale.append(h)
+        # the staleness the monitor last saw — obs.snapshot() surfaces it
+        _gauge("liveness/stale_hosts").set(len(stale))
         return stale
 
 
@@ -81,6 +85,7 @@ class StragglerMonitor:
             med = sorted(self.times)[len(self.times) // 2]
             if dt > self.factor * med:
                 self.flagged.append((step, dt, med))
+                _counter("liveness/straggler_flagged").inc()
                 is_straggler = True
         self.times.append(dt)
         return is_straggler

@@ -40,6 +40,8 @@ import dataclasses
 import hashlib
 from typing import Optional, Tuple
 
+from repro.obs.trace import instant as _instant
+
 __all__ = [
     "SITES",
     "TransientFault",
@@ -172,14 +174,20 @@ class FaultInjector:
                     and not (self.kill_once and self._killed)
                     and self._compute_entries >= self.kill_after):
                 self._killed = True
+                _instant("fault/inject", site=site, tile=int(tile),
+                         kind="kill")
                 raise StreamKilled(self._compute_entries)
             self._compute_entries += 1
         spec = self.faults_at(site, tile)
         if spec is None:
             return
         if spec.kind == "permanent":
+            _instant("fault/inject", site=site, tile=int(tile),
+                     kind="permanent")
             raise PermanentFault(site, tile)
         if attempt < spec.failures:
+            _instant("fault/inject", site=site, tile=int(tile),
+                     kind="transient", attempt=int(attempt))
             raise TransientFault(site, tile, attempt)
 
 

@@ -73,6 +73,8 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from repro.obs.trace import span as _span
+
 __all__ = ["StreamCheckpoint", "ResumeState", "JOURNAL_NAME"]
 
 JOURNAL_NAME = "journal.jsonl"
@@ -285,13 +287,17 @@ class StreamCheckpoint:
                 return
             try:
                 if self._err is None:
+                    # spans land on this writer thread's own trace track
                     if job[0] == "write":
-                        self._jf.write(job[1])
-                        self._jf.flush()
+                        with _span("ckpt/append", bytes=len(job[1])):
+                            self._jf.write(job[1])
+                            self._jf.flush()
                     elif job[0] == "sync":
-                        os.fsync(self._jf.fileno())
+                        with _span("ckpt/fsync"):
+                            os.fsync(self._jf.fileno())
                     else:
-                        self._commit_snapshot(*job[1:])
+                        with _span("ckpt/snapshot"):
+                            self._commit_snapshot(*job[1:])
             except BaseException as e:  # latched, re-raised on caller
                 self._err = e
 

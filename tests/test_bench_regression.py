@@ -250,3 +250,35 @@ def test_ckpt_overhead_quick_shape_is_drift_gated_only(tmp_path):
     base, fresh = _ckpt_dirs(tmp_path, "32x48x48", 0.93, 0.90)
     failures, _ = compare(base, fresh, 0.25)
     assert not failures
+
+
+# -- the trace-overhead floor mirrors the ckpt one ------------------------
+
+
+def _trace_dirs(tmp_path, shape, base_parity, fresh_parity):
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    base.mkdir()
+    fresh.mkdir()
+    name = f"tiled/trace-overhead/{shape}/t16"
+    _write(str(base / "BENCH_tiled.json"),
+           {"rows": [_parity_row(name, 100.0, base_parity)]})
+    _write(str(fresh / "BENCH_tiled.json"),
+           {"rows": [_parity_row(name, 100.0, fresh_parity)]})
+    return str(base), str(fresh)
+
+
+def test_trace_overhead_floor_gates_the_full_shape(tmp_path):
+    # 0.90x breaks the DESIGN.md §14 <=5% tracing-overhead claim (0.95x
+    # floor) beyond the noise band, even inside the 25% drift tolerance
+    base, fresh = _trace_dirs(tmp_path, "64x96x96", 1.00, 0.90)
+    failures, _ = compare(base, fresh, 0.25)
+    assert any("below the absolute 0.95x floor" in f for f in failures)
+
+
+def test_trace_overhead_quick_shape_is_drift_gated_only(tmp_path):
+    # same amortization argument as the ckpt row: per-span cost is fixed,
+    # so the absolute floor only binds on the full-shape stream
+    base, fresh = _trace_dirs(tmp_path, "32x48x48", 0.93, 0.90)
+    failures, _ = compare(base, fresh, 0.25)
+    assert not failures

@@ -1,0 +1,452 @@
+"""The unified tracing + metrics layer (repro.obs, DESIGN.md §14).
+
+Four contracts, each pinned independently:
+
+- **Spans**: nesting depth, per-thread ring buffers merging into one
+  snapshot, drop-oldest under capacity pressure, the shared no-op
+  disabled path.
+- **Metrics**: the histogram merge algebra (associative + commutative
+  over a shared bucket grid, property-fuzzed through ``_prop``) and the
+  registry's name/kind discipline.
+- **Export**: Chrome trace_event schema — validated by the same
+  ``tools/trace_check.py`` CI runs — including the
+  writeback-overlaps-compute ordering invariant of a traced tiled
+  stream (and its *absence* in a synchronous one, so the check is known
+  to discriminate).
+- **Zero-perturbation**: tracing on vs off leaves every engine counter
+  (melt calls, plan-cache hits/misses) bit-identical, and the traced
+  stream's wall time stays within a loose smoke bound of the untraced
+  one (the strict 5% gate lives in benchmarks/tiled.py where reps are
+  controlled).
+"""
+import json
+import os
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from _prop import given, settings, strategies as st  # noqa: E402
+from repro import obs  # noqa: E402
+from repro.core import (  # noqa: E402
+    clear_plan_cache,
+    melt_call_count,
+    plan_cache_reset,
+    plan_cache_stats,
+)
+from repro.obs import envhook  # noqa: E402
+from repro.obs.metrics import Histogram, MetricsRegistry  # noqa: E402
+from repro.obs.trace import Tracer, _NULL  # noqa: E402
+from repro.pipe import pipe  # noqa: E402
+from tools.trace_check import check_overlap, check_schema  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """Every test starts and ends with a disabled, empty tracer and an
+    empty registry (both are process-global)."""
+    obs.TRACER.disable()
+    obs.TRACER.reset()
+    obs.REGISTRY.reset()
+    yield
+    obs.TRACER.disable()
+    obs.TRACER.reset()
+    obs.REGISTRY.reset()
+
+
+def _vol(rng, shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+@pytest.fixture
+def nrng():
+    return np.random.default_rng(0)
+
+
+# -- spans -------------------------------------------------------------------
+
+
+def test_span_nesting_depth_and_order():
+    with obs.tracing() as snap:
+        with obs.span("outer", k=1):
+            with obs.span("inner"):
+                with obs.span("leaf"):
+                    pass
+            with obs.span("inner2"):
+                pass
+        obs.instant("mark", x=2)
+    s = snap()
+    names = [e.name for e in s.events()]
+    # sorted by *start* time: outer opened first
+    assert names == ["outer", "inner", "leaf", "inner2", "mark"]
+    depth = {e.name: e.depth for e in s.events()}
+    assert depth == {"outer": 0, "inner": 1, "leaf": 2, "inner2": 1,
+                     "mark": 0}
+    (outer,) = s.named("outer")
+    (leaf,) = s.named("leaf")
+    assert outer.attrs == {"k": 1}
+    assert outer.ts <= leaf.ts
+    assert outer.ts + outer.dur >= leaf.ts + leaf.dur  # leaf inside outer
+    (mark,) = s.named("mark")
+    assert mark.dur is None and mark.attrs == {"x": 2}
+
+
+def test_thread_buffers_merge_into_one_snapshot():
+    with obs.tracing() as snap:
+        def emit(tag):
+            for i in range(5):
+                with obs.span(f"work/{tag}", i=i):
+                    pass
+
+        ts = [threading.Thread(target=emit, args=(t,), name=f"worker-{t}")
+              for t in range(3)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        emit("main")
+    s = snap()
+    assert len(s.threads) == 4  # 3 workers + main
+    by_name = {t.name: t for t in s.threads}
+    for tag in range(3):
+        track = by_name[f"worker-{tag}"]
+        assert [e.name for e in track.events] == [f"work/{tag}"] * 5
+        assert [e.attrs["i"] for e in track.events] == list(range(5))
+    assert len(s.events()) == 20
+    assert s.dropped == 0
+
+
+def test_ring_drops_oldest_and_counts():
+    tr = Tracer(capacity=4)
+    tr.enable()
+    for i in range(10):
+        tr.instant("e", i=i)
+    (track,) = tr.snapshot().threads
+    assert track.dropped == 6
+    assert [e.attrs["i"] for e in track.events] == [6, 7, 8, 9]  # newest
+    assert tr.snapshot().dropped == 6
+
+
+def test_disabled_tracer_is_shared_noop():
+    assert not obs.enabled()
+    cm = obs.span("anything", big=list(range(100)))
+    assert cm is _NULL
+    assert obs.span("other") is cm  # one shared instance, no allocation
+    with cm:
+        pass
+    obs.instant("dropped")
+    obs.TRACER.enable()
+    try:
+        assert obs.span("now-live") is not cm
+    finally:
+        obs.TRACER.disable()
+    assert all(len(t.events) == 0 for t in obs.TRACER.snapshot().threads
+               if t.name != "MainThread")
+
+
+def test_tracing_scope_restores_and_can_keep_buffers():
+    obs.TRACER.enable()
+    with obs.tracing(fresh=True):
+        with obs.span("inside"):
+            pass
+    assert obs.enabled()  # prior state (enabled) restored
+    obs.TRACER.disable()
+    with obs.tracing():
+        pass
+    assert not obs.enabled()
+
+
+# -- metrics -----------------------------------------------------------------
+
+_EDGES = (1.0, 2.0, 5.0)
+
+
+def _hist(values):
+    h = Histogram(_EDGES)
+    for v in values:
+        h.observe(v)
+    return h
+
+
+_vals = st.lists(st.floats(min_value=0.0, max_value=10.0), min_size=0,
+                 max_size=8)
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=_vals, b=_vals, c=_vals)
+def test_histogram_merge_algebra(a, b, c):
+    ha, hb, hc = _hist(a), _hist(b), _hist(c)
+    left = ha.merge(hb).merge(hc)
+    right = ha.merge(hb.merge(hc))
+    flat = _hist(a + b + c)
+    for m in (left, right):
+        assert m.buckets == flat.buckets
+        assert m.count == flat.count
+        assert m.total == pytest.approx(flat.total)
+        if flat.count:
+            assert m.vmin == flat.vmin and m.vmax == flat.vmax
+    # commutative too
+    assert hb.merge(ha).buckets == ha.merge(hb).buckets
+
+
+def test_histogram_merge_rejects_mismatched_grids():
+    with pytest.raises(ValueError, match="different bucket edges"):
+        Histogram((1.0, 2.0)).merge(Histogram((1.0, 3.0)))
+    with pytest.raises(TypeError, match="can only merge Histogram"):
+        Histogram((1.0,)).merge({"not": "a histogram"})
+    with pytest.raises(ValueError, match="strictly increasing"):
+        Histogram((2.0, 1.0))
+
+
+def test_registry_name_and_kind_discipline():
+    reg = MetricsRegistry()
+    c = reg.counter("stream/retried")
+    c.inc(2)
+    assert reg.counter("stream/retried") is c  # get-or-create
+    with pytest.raises(TypeError, match="is a Counter"):
+        reg.gauge("stream/retried")
+    h = reg.histogram("lat", edges=(1.0, 2.0))
+    assert reg.histogram("lat") is h
+    with pytest.raises(ValueError, match="already registered with edges"):
+        reg.histogram("lat", edges=(1.0, 3.0))
+    g = reg.gauge("depth")
+    g.max(3)
+    g.max(1)
+    snap = reg.snapshot()
+    assert snap["stream/retried"] == 2
+    assert snap["depth"] == 3
+    assert snap["lat"]["count"] == 0 and snap["lat"]["min"] is None
+    json.dumps(snap)  # snapshot must be JSON-able as-is
+    reg.reset()
+    assert reg.names() == ()
+
+
+# -- export + trace_check ----------------------------------------------------
+
+
+def test_chrome_trace_schema_and_tid_remap():
+    with obs.tracing() as snap:
+        with obs.span("a", tile=3):
+            pass
+        obs.instant("b")
+
+        t = threading.Thread(target=lambda: obs.instant("c"),
+                             name="side-thread")
+        t.start()
+        t.join()
+    payload = obs.chrome_trace(snap())
+    assert check_schema(payload) == []
+    evs = payload["traceEvents"]
+    tids = {e["tid"] for e in evs}
+    assert tids <= {0, 1}  # remapped to small first-seen ints
+    names = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert "side-thread" in names
+    (inst,) = [e for e in evs if e.get("name") == "b"]
+    assert inst["ph"] == "i" and inst["dur"] == 0.0 and inst["s"] == "t"
+    (span_ev,) = [e for e in evs if e.get("name") == "a"]
+    assert span_ev["ph"] == "X" and span_ev["dur"] >= 0.0
+    assert span_ev["args"] == {"tile": 3, "depth": 0}
+    assert payload["otherData"]["version"] == 1
+
+
+def test_check_schema_flags_violations():
+    bad = {"traceEvents": [
+        {"ph": "X", "name": "a", "ts": 0.0, "dur": 1.0, "pid": 1, "tid": 7},
+        {"ph": "Z", "name": "b"},
+        {"ph": "i", "ts": 0.0, "dur": 0, "pid": 1, "tid": 7, "name": 3},
+    ], "otherData": {"version": 1}}
+    errs = check_schema(bad)
+    assert any("unknown phase" in e for e in errs)
+    assert any("thread_name" in e for e in errs)  # tid 7 unnamed
+    assert any("field 'name'" in e for e in errs)
+
+
+def _traced_stream(nrng, prefetch):
+    x = _vol(nrng, (24, 20))
+    tp = (pipe(x).gaussian(1.0, op_shape=3).gradient()
+          .plan_tiled(tiles=(4, 3), method="lax"))
+    with obs.tracing() as snap:
+        tp.run(prefetch=prefetch, trace=True)
+    return obs.chrome_trace(snap())
+
+
+def test_traced_stream_exports_valid_overlapping_timeline(nrng):
+    clear_plan_cache()
+    payload = _traced_stream(nrng, prefetch=True)
+    assert check_schema(payload) == []
+    assert check_overlap(payload) == []  # writeback overlaps compute
+    names = {e["name"] for e in payload["traceEvents"] if e["ph"] == "X"}
+    assert {"stream/run", "tile/read", "tile/h2d", "tile/execute",
+            "tile/writeback", "plan/build", "plan/exec"} <= names
+    # counters rode along inside the export
+    m = payload["otherData"]["metrics"]
+    assert m["stream/tiles"] == 12
+    assert m["stream/writeback_max_staged"] == 2
+    assert m["stream/run_ms"]["count"] == 1
+
+
+def test_overlap_check_discriminates_synchronous_stream(nrng):
+    clear_plan_cache()
+    payload = _traced_stream(nrng, prefetch=False)
+    assert check_schema(payload) == []
+    assert check_overlap(payload) != []  # depth-1 writeback: no overlap
+
+
+def test_fault_instants_land_in_trace(nrng, tmp_path):
+    from repro.runtime.faults import FaultInjector, FaultSpec
+
+    x = _vol(nrng, (16, 12))
+    tp = (pipe(x).gaussian(1.0, op_shape=3).gradient().moments(order=2)
+          .plan_tiled(tiles=(2, 2), method="lax"))
+    inj = FaultInjector((FaultSpec("device", "transient", rate=1.0,
+                                   failures=1),), seed=3)
+    path = str(tmp_path / "fault.trace.json")
+    tp.run(faults=inj, max_retries=2, trace=path)
+    payload = json.load(open(path))
+    assert check_schema(payload) == []
+    names = [e["name"] for e in payload["traceEvents"] if e["ph"] == "i"]
+    assert "fault/inject" in names and "fault/transient" in names
+    assert payload["otherData"]["metrics"]["stream/retried"] >= 1
+    assert obs.snapshot()["metrics"]["stream/retried"] >= 1
+
+
+# -- zero-perturbation -------------------------------------------------------
+
+
+def _counted_run(nrng):
+    x = _vol(nrng, (20, 18))
+    tp = (pipe(x).gaussian(1.0, op_shape=3).gradient().moments(order=2)
+          .plan_tiled(tiles=(3, 2), method="materialize"))
+    m0, s0 = melt_call_count(), plan_cache_stats()
+    st_ = tp.run()
+    m1, s1 = melt_call_count(), plan_cache_stats()
+    return (m1 - m0,
+            {k: s1[k] - s0[k] for k in ("hits", "misses", "evictions")},
+            np.asarray(st_.mean))
+
+
+def test_tracing_does_not_perturb_engine_counters(nrng):
+    clear_plan_cache()
+    melt_off, cache_off, mean_off = _counted_run(nrng)
+    clear_plan_cache()
+    obs.TRACER.reset()
+    obs.TRACER.enable()
+    try:
+        melt_on, cache_on, mean_on = _counted_run(
+            np.random.default_rng(0))
+    finally:
+        obs.TRACER.disable()
+    assert melt_on == melt_off  # identical melt accounting on vs off
+    assert cache_on == cache_off  # identical plan-cache counters
+    np.testing.assert_array_equal(mean_on, mean_off)
+
+
+def test_traced_stream_overhead_smoke(nrng):
+    """Loose wall-clock smoke bound: the traced stream stays within 50%
+    of untraced on a noisy shared runner (bracketed median, best of 3
+    attempts).  The strict 5% gate is benchmarks/tiled.py's
+    ``trace-overhead`` row under the regression gate's absolute floor,
+    where rep counts and the runner are controlled."""
+    x = _vol(nrng, (32, 28))
+    tp = (pipe(x).gaussian(1.0, op_shape=3).gradient()
+          .plan_tiled(tiles=(4, 2), method="lax"))
+    tp.run()  # warm plans + executors
+
+    def rep(trace):
+        t0 = time.perf_counter()
+        tp.run(trace=trace)
+        return time.perf_counter() - t0
+
+    best = np.inf
+    for _ in range(3):
+        ratios = []
+        for _ in range(5):
+            off0 = rep(False)
+            on = rep(True)
+            off1 = rep(False)
+            ratios.append(on / ((off0 + off1) / 2))
+        best = min(best, float(np.median(ratios)))
+        obs.TRACER.reset()
+        if best <= 1.5:
+            break
+    assert best <= 1.5, (f"traced tiled stream {best:.2f}x untraced — "
+                         f"tracing is supposed to be ~free")
+
+
+# -- unification + env hook --------------------------------------------------
+
+
+def test_snapshot_unifies_engine_counters(nrng):
+    clear_plan_cache()
+    plan_cache_reset()
+    x = _vol(nrng, (16, 12))
+    (pipe(x).gaussian(1.0, op_shape=3).gradient()
+     .run(method="lax", tiles=(2, 2), trace=False))
+    snap = obs.snapshot()
+    assert set(snap) == {"plan_cache", "melt_calls", "metrics", "trace"}
+    assert snap["plan_cache"]["kinds"]["tile"] >= 1
+    assert snap["plan_cache"]["misses"] >= 1
+    assert isinstance(snap["melt_calls"], int)
+    assert snap["metrics"]["stream/runs"] == 1
+    assert snap["metrics"]["stream/tiles"] == 4
+    assert snap["metrics"]["stream/writeback_max_staged"] == 2
+    assert snap["trace"]["enabled"] is False
+    json.dumps(snap)  # one plain JSON-able dict, end to end
+
+
+def test_plan_cache_reset_keeps_plans(nrng):
+    clear_plan_cache()
+    x = _vol(nrng, (12, 10))
+    P = pipe(x).gaussian(1.0, op_shape=3).gradient()
+    P.run(method="lax")
+    s = plan_cache_stats()
+    assert s["size"] == 1 and s["misses"] == 1
+    plan_cache_reset()
+    s = plan_cache_stats()
+    assert s["size"] == 1  # plans survive
+    assert s["hits"] == s["misses"] == s["evictions"] == 0
+    P.run(method="lax")
+    assert plan_cache_stats()["hits"] == 1  # warm plan, clean counter
+
+
+def test_env_hook_arms_once_and_flushes(nrng, tmp_path, monkeypatch):
+    path = str(tmp_path / "env.trace.json")
+    monkeypatch.setattr(envhook, "_armed", {"path": None})
+    monkeypatch.setenv(envhook.ENV_VAR, path)
+    x = _vol(nrng, (12, 10))
+    P = pipe(x).gaussian(1.0, op_shape=3).gradient()
+    P.run(method="lax", tiles=(2, 1))  # trace=None → env hook arms
+    assert envhook.active_path() == path
+    assert obs.enabled()
+    assert envhook.maybe_start() == path  # idempotent
+    assert envhook.flush() == path
+    payload = json.load(open(path))
+    assert check_schema(payload) == []
+    assert any(e.get("name") == "tile/execute"
+               for e in payload["traceEvents"])
+
+
+def test_env_hook_noop_when_unset(monkeypatch):
+    monkeypatch.setattr(envhook, "_armed", {"path": None})
+    monkeypatch.delenv(envhook.ENV_VAR, raising=False)
+    assert envhook.maybe_start() is None
+    assert envhook.flush() is None
+    assert not obs.enabled()
+
+
+def test_trace_scope_path_exports_on_exit(nrng, tmp_path):
+    path = str(tmp_path / "scope.trace.json")
+    with obs.trace_scope(path):
+        with obs.span("scoped"):
+            pass
+    assert not obs.enabled()  # restored
+    payload = json.load(open(path))
+    assert check_schema(payload) == []
+    assert any(e.get("name") == "scoped" for e in payload["traceEvents"])

@@ -34,6 +34,7 @@ from repro.core import (
     gaussian_filter,
     gradient,
     melt_call_count,
+    plan_cache_reset,
     plan_cache_stats,
 )
 from repro.core.filters import difference_stencils, gaussian_weights
@@ -367,10 +368,13 @@ def test_mixed_plan_kinds_intern_side_by_side(fresh_cache, rng):
     P = pipe(x).gaussian(1.0, op_shape=3).gradient().moments(order=2)
     P.run(method="lax", pad_value="edge")                       # PipePlan
     assert plan_cache_stats()["size"] == 4
-    before = plan_cache_stats()["hits"]
+    assert plan_cache_stats()["kinds"] == {
+        "stencil": 1, "bank": 1, "stats": 1, "pipe": 1, "tile": 0}
+    plan_cache_reset()  # zero counters, keep the four warm plans
     for _ in range(3):
         P.run(method="lax", pad_value="edge")
-    assert plan_cache_stats()["hits"] == before + 3
+    assert plan_cache_stats()["hits"] == 3
+    assert plan_cache_stats()["misses"] == 0
     assert plan_cache_stats()["size"] == 4  # no new entries
 
 

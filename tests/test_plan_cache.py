@@ -101,7 +101,9 @@ def test_clear_resets_everything():
     get_plan((8, 9), jnp.float32, 3, 1, "same", 1, 0.0, "lax", False)
     clear_plan_cache()
     s = plan_cache_stats()
-    assert s == {"size": 0, "hits": 0, "misses": 0, "evictions": 0}
+    assert s == {"size": 0, "hits": 0, "misses": 0, "evictions": 0,
+                 "kinds": {"stencil": 0, "bank": 0, "stats": 0, "pipe": 0,
+                           "tile": 0}}
 
 
 def test_lru_eviction_bounds_cache(monkeypatch):

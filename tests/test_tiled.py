@@ -32,6 +32,7 @@ from repro.core import (
     apply_stencil,
     apply_stencil_bank,
     clear_plan_cache,
+    plan_cache_reset,
     melt_call_count,
     plan_cache_stats,
 )
@@ -179,11 +180,14 @@ def test_one_trace_per_tile_class_not_per_tile(fresh_cache, rng):
         plan = tp._plan_for(spec)
         assert isinstance(plan, TilePlan)
         assert plan.stats()["traces"] == 1  # one trace per class, ever
-    # second stream: all hits, zero new traces
-    before = plan_cache_stats()["misses"]
+    # second stream: all hits, zero new traces (counters zeroed in place —
+    # plan_cache_reset keeps the warm plans, unlike clear_plan_cache)
+    plan_cache_reset()
     tp.run()
     s2 = plan_cache_stats()
-    assert s2["misses"] == before
+    assert s2["misses"] == 0
+    assert s2["hits"] == tp.num_tiles
+    assert s2["kinds"]["tile"] == tp.num_classes
     assert all(tp._plan_for(sp).stats()["traces"] == 1
                for sp in {sp.class_key(): sp for sp in tp.specs}.values())
 

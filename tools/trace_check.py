@@ -1,0 +1,173 @@
+"""Validate a Chrome-trace JSON exported by ``repro.obs`` (CI gate).
+
+Two layers of checking over a ``repro.obs.export.chrome_trace`` file:
+
+**Schema** (always): the payload is the JSON-object trace_event format —
+``traceEvents`` list + ``otherData.version`` — and every non-metadata
+event carries the full ``name/ts/dur/pid/tid`` field set with the right
+types (instants included: they export with ``dur: 0``), ``ph`` is a
+known phase, and every referenced ``tid`` resolves to a ``thread_name``
+metadata event (so Perfetto renders named tracks, never bare ids).
+
+**Overlap** (``--require-overlap``): the pipeline invariant the async
+writeback exists to provide — some tile's device→host writeback drains
+*after* a later tile's compute was dispatched:
+
+    ∃ i ≠ j:  execute(i).ts < execute(j).ts < writeback(i).ts
+
+Host-side spans measure dispatch under JAX's async runtime, so this is
+an *ordering* proof, not a wall-clock one: the depth-2
+``_WritebackStream`` guarantees it (tile i drains only once tile i+1
+was staged), and a fully synchronous stream (``prefetch=False``)
+violates it — which is what makes the check discriminating.  CI runs it
+against the trace the tiled benchmark exports via ``REPRO_TRACE``.
+
+    python tools/trace_check.py trace.json [--require-overlap]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import numbers
+import sys
+
+#: the exporter schema this checker understands (repro.obs.export pins it)
+EXPECTED_VERSION = 1
+
+#: phases the exporter emits: complete spans, instants, metadata
+KNOWN_PHASES = ("X", "i", "M")
+
+
+def check_schema(payload: dict) -> list:
+    """Every violation as a message; an empty list means valid."""
+    errors = []
+    events = payload.get("traceEvents")
+    if not isinstance(events, list):
+        return ["traceEvents missing or not a list"]
+    version = payload.get("otherData", {}).get("version")
+    if version != EXPECTED_VERSION:
+        errors.append(f"otherData.version is {version!r}, expected "
+                      f"{EXPECTED_VERSION}")
+    named_tids = set()  # (pid, tid) pairs with a thread_name M event
+    for i, ev in enumerate(events):
+        ph = ev.get("ph")
+        if ph not in KNOWN_PHASES:
+            errors.append(f"event {i}: unknown phase {ph!r}")
+            continue
+        if ph == "M":
+            if ev.get("name") == "thread_name":
+                named_tids.add((ev.get("pid"), ev.get("tid")))
+            continue
+        for field, typ in (("name", str), ("ts", numbers.Real),
+                           ("dur", numbers.Real), ("pid", int),
+                           ("tid", int)):
+            if not isinstance(ev.get(field), typ):
+                errors.append(
+                    f"event {i} ({ev.get('name')!r}): field {field!r} "
+                    f"missing or not {typ.__name__}, got "
+                    f"{ev.get(field)!r}")
+    for i, ev in enumerate(events):
+        if ev.get("ph") in ("X", "i"):
+            ref = (ev.get("pid"), ev.get("tid"))
+            if ref not in named_tids:
+                errors.append(
+                    f"event {i} ({ev.get('name')!r}): tid {ev.get('tid')} "
+                    f"has no thread_name metadata event")
+    return errors
+
+
+def check_overlap(payload: dict) -> list:
+    """The writeback-overlaps-compute ordering invariant (see module
+    docstring); violations (or missing evidence) as messages.
+
+    A long-lived trace (a benchmark process under ``REPRO_TRACE``)
+    holds *many* streams back to back, and tile indices restart at 0
+    each run — so the witness is searched **per stream**: tile spans
+    are grouped into the ``stream/run`` span whose interval contains
+    them (every tile span nests inside exactly one), and the check
+    passes when *any* single stream witnesses the ordering.  Mixing
+    runs would both miss real overlap (a later run's execute
+    overwriting an earlier run's) and fabricate it (execute and
+    writeback of unrelated streams)."""
+    runs, spans = [], []
+    for ev in payload.get("traceEvents", ()):
+        if ev.get("ph") != "X":
+            continue
+        if ev.get("name") == "stream/run":
+            runs.append((ev["ts"], ev["ts"] + ev["dur"]))
+        tile = ev.get("args", {}).get("tile")
+        if tile is None:
+            continue
+        if ev["name"] in ("tile/execute", "tile/writeback"):
+            spans.append((ev["name"], tile, ev["ts"]))
+    if not runs:
+        # no stream/run envelope (hand-built or truncated trace): treat
+        # the whole timeline as one run rather than vacuously passing
+        runs = [(float("-inf"), float("inf"))]
+    total_wb, max_ex = 0, 0
+    for lo, hi in runs:
+        ex, wb = {}, {}
+        for name, tile, ts in spans:
+            if lo <= ts <= hi:
+                (ex if name == "tile/execute" else wb)[tile] = ts
+        total_wb += len(wb)
+        max_ex = max(max_ex, len(ex))
+        for i, w in wb.items():
+            if i not in ex:
+                continue
+            if any(ex[i] < e < w for j, e in ex.items() if j != i):
+                return []  # execute(i) < execute(j) < writeback(i)
+    if total_wb == 0:
+        return ["no tile/writeback spans in trace — was this an "
+                "array-output tiled run?"]
+    if max_ex < 2:
+        return [f"need >= 2 tile/execute spans in one stream to witness "
+                f"overlap, found at most {max_ex}"]
+    return [f"no compute/writeback overlap in any of the {len(runs)} "
+            f"stream run(s): every one of the {total_wb} writeback "
+            f"spans drained before any later tile's execute was "
+            f"dispatched (synchronous stream?)"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="Chrome-trace JSON from repro.obs")
+    ap.add_argument("--require-overlap", action="store_true",
+                    help="additionally require the writeback-overlaps-"
+                         "compute ordering invariant")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.trace) as fh:
+            payload = json.load(fh)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"trace check: cannot read {args.trace}: {e}")
+        return 1
+
+    errors = check_schema(payload)
+    if args.require_overlap and not errors:
+        errors += check_overlap(payload)
+
+    events = payload.get("traceEvents", [])
+    spans = sum(1 for e in events if isinstance(e, dict)
+                and e.get("ph") == "X")
+    threads = sum(1 for e in events if isinstance(e, dict)
+                  and e.get("ph") == "M"
+                  and e.get("name") == "thread_name")
+    dropped = payload.get("otherData", {}).get("dropped_events", 0)
+    print(f"{args.trace}: {len(events)} events ({spans} spans, "
+          f"{threads} thread tracks, {dropped} dropped)")
+    if errors:
+        print(f"\ntrace check FAILURES ({len(errors)}):")
+        for e in errors[:20]:
+            print(f"  {e}")
+        if len(errors) > 20:
+            print(f"  ... and {len(errors) - 20} more")
+        return 1
+    checks = "schema + overlap" if args.require_overlap else "schema"
+    print(f"trace check: ok ({checks})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
