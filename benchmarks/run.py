@@ -17,7 +17,8 @@ Sections:
   pipe/*      — lazy pipeline fusion (DESIGN.md §11)
   tiled/*     — out-of-core tiled streaming (DESIGN.md §12)
   model/*     — smoke-config step latencies per architecture family
-  serve/*     — prefill + decode latency (smoke config)
+  serve-lm/*  — LM prefill + decode latency (smoke config)
+  serve/*     — analytics serving tier: coalesced batched dispatch
 """
 from __future__ import annotations
 
@@ -107,15 +108,31 @@ def bench_serving(quick=False):
     B, S = 4, 64
     toks = jnp.zeros((B, S), jnp.int32)
     prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len=S + 32))
-    rows = [("serve/prefill", _time(prefill, params, {"tokens": toks}, reps=3),
+    rows = [("serve-lm/prefill",
+             _time(prefill, params, {"tokens": toks}, reps=3),
              f"B{B} S{S}")]
     _, caches = prefill(params, {"tokens": toks})
     dec = jax.jit(model.decode_step)
     tok = jnp.zeros((B,), jnp.int32)
     pos = jnp.full((B,), S, jnp.int32)
-    rows.append(("serve/decode_step",
+    rows.append(("serve-lm/decode_step",
                  _time(lambda: dec(params, tok, pos, caches), reps=5),
                  "one token, cached"))
+    return rows
+
+
+def bench_serve_tier(quick=False):
+    """Analytics serving rows: the shared headline + mixed-key rows from
+    benchmarks.serve (same service config, warmup and interleaved
+    timing — the smoke numbers can't drift from the gated benchmark)."""
+    from benchmarks.serve import headline_rows, mixed_key_row, \
+        tiled_concurrency_row
+
+    reps = 7 if quick else 11
+    rows, _speedup = headline_rows(reps)
+    rows.append(mixed_key_row(reps))
+    if not quick:
+        rows.append(tiled_concurrency_row())
     return rows
 
 
@@ -223,7 +240,7 @@ def main(argv=None):
     ap.add_argument("--sections", default=None,
                     help="comma-separated subset of "
                          "fig6,fig7,stencil,filters,bank,stats,pipe,"
-                         "tiled,model,serve")
+                         "tiled,model,serve-lm,serve")
     args = ap.parse_args(argv)
 
     from benchmarks import paper_figs
@@ -241,7 +258,8 @@ def main(argv=None):
         "pipe": lambda: bench_pipe(args.quick),
         "tiled": lambda: bench_tiled(args.quick),
         "model": lambda: bench_models(args.quick),
-        "serve": lambda: bench_serving(args.quick),
+        "serve-lm": lambda: bench_serving(args.quick),
+        "serve": lambda: bench_serve_tier(args.quick),
     }
     if args.sections:
         wanted = [s.strip() for s in args.sections.split(",") if s.strip()]

@@ -56,6 +56,7 @@ __all__ = [
     "normalize_axes",
     "separable_eligible",
     "plan_cache_stats",
+    "plan_cached",
     "plan_cache_reset",
     "clear_plan_cache",
     "plan_fingerprint",
@@ -71,6 +72,11 @@ PLAN_CACHE_CAPACITY = 256
 _CACHE: "OrderedDict[tuple, StencilPlan]" = OrderedDict()
 _LOCK = threading.Lock()
 _GLOBAL = {"hits": 0, "misses": 0, "evictions": 0}
+#: per-key once-build latches: the first caller to miss a key builds it;
+#: concurrent callers for the *same* key wait on its Event instead of
+#: tracing a duplicate plan (the cold-plan-stampede guard the serving
+#: tier relies on, DESIGN.md §15)
+_BUILDING: Dict[tuple, threading.Event] = {}
 
 
 def resolve_method(method: str) -> str:
@@ -101,6 +107,12 @@ class ExecOptions:
       hash into plan keys.
 
     Instances are frozen and hashable — a plan key can embed one directly.
+    Normalization runs in ``__post_init__``, so *direct* construction is
+    exactly as validated as :meth:`make`: a cached plan's stored options
+    can never hold a mutable or non-canonical value (a numpy ``pad_value``
+    array would otherwise alias the caller's buffer — mutating it after
+    plan build would silently change what the cache serves to every later
+    request hashing to the same key).
     """
 
     method: str = "auto"
@@ -108,21 +120,28 @@ class ExecOptions:
     batched: bool = False
     out_dtype: object = None
 
+    def __post_init__(self):
+        if not isinstance(self.method, str) or self.method not in METHODS:
+            raise ValueError(
+                f"unknown method {self.method!r}; valid choices: "
+                f"{', '.join(METHODS)}")
+        # frozen dataclass: normalized values go in via object.__setattr__
+        object.__setattr__(self, "pad_value",
+                           normalize_pad_value(self.pad_value))
+        object.__setattr__(self, "batched", bool(self.batched))
+        if self.out_dtype is not None:
+            try:
+                object.__setattr__(self, "out_dtype",
+                                   jnp.dtype(self.out_dtype).name)
+            except TypeError as e:
+                raise ValueError(
+                    f"out_dtype {self.out_dtype!r} is not a dtype: "
+                    f"{e}") from None
+
     @classmethod
     def make(cls, method: str = "auto", pad_value=0.0, batched: bool = False,
              out_dtype=None) -> "ExecOptions":
-        if not isinstance(method, str) or method not in METHODS:
-            raise ValueError(
-                f"unknown method {method!r}; valid choices: "
-                f"{', '.join(METHODS)}")
-        pv = normalize_pad_value(pad_value)
-        if out_dtype is not None:
-            try:
-                out_dtype = jnp.dtype(out_dtype).name
-            except TypeError as e:
-                raise ValueError(
-                    f"out_dtype {out_dtype!r} is not a dtype: {e}") from None
-        return cls(method=method, pad_value=pv, batched=bool(batched),
+        return cls(method=method, pad_value=pad_value, batched=batched,
                    out_dtype=out_dtype)
 
     @property
@@ -185,31 +204,54 @@ def _plan_kind(key: tuple) -> str:
 def _intern(key: tuple, build):
     """Lock/build/insert dance shared by every plan kind.
 
-    The build runs outside the lock (tracing can be slow); the
-    first-inserted plan is authoritative so counters stay on one object.
+    The build runs outside the lock (tracing can be slow), guarded by a
+    per-key once-build latch: under concurrent misses for the *same*
+    key, exactly one caller builds while the others wait on the key's
+    Event and then take the cache hit — a cold-plan stampede costs one
+    trace, not N (DESIGN.md §15).  If the build raises, the latch is
+    released and a waiter retries (becoming the builder itself), so a
+    transient build failure never wedges the key.
     """
+    while True:
+        with _LOCK:
+            plan = _CACHE.get(key)
+            if plan is not None:
+                _CACHE.move_to_end(key)
+                plan._hits += 1
+                _GLOBAL["hits"] += 1
+                return plan
+            ev = _BUILDING.get(key)
+            if ev is None:
+                ev = _BUILDING[key] = threading.Event()
+                break  # this thread builds
+        ev.wait()  # another thread is building this key; take its result
+    try:
+        with _span("plan/build", kind=_plan_kind(key)):
+            plan = build()
+    except BaseException:
+        with _LOCK:
+            _BUILDING.pop(key, None)
+        ev.set()
+        raise
     with _LOCK:
-        plan = _CACHE.get(key)
-        if plan is not None:
-            _CACHE.move_to_end(key)
-            plan._hits += 1
-            _GLOBAL["hits"] += 1
-            return plan
-    with _span("plan/build", kind=_plan_kind(key)):
-        plan = build()
-    with _LOCK:
-        existing = _CACHE.get(key)
-        if existing is not None:
-            _CACHE.move_to_end(key)
-            existing._hits += 1
-            _GLOBAL["hits"] += 1
-            return existing
         _CACHE[key] = plan
         _GLOBAL["misses"] += 1
         while len(_CACHE) > PLAN_CACHE_CAPACITY:
             _CACHE.popitem(last=False)  # least-recently used
             _GLOBAL["evictions"] += 1
+        _BUILDING.pop(key, None)
+    ev.set()
     return plan
+
+
+def plan_cached(key: tuple):
+    """The resident plan for ``key`` (or ``None``), without touching LRU
+    order or counters — the serving tier's warm/cold probe (a cold key
+    admits under the stampede policy; a warm one dispatches immediately)
+    and its warm-dispatch fast path (calling the probed plan skips the
+    per-call option/key re-derivation of the full run entry points)."""
+    with _LOCK:
+        return _CACHE.get(key)
 
 
 class StencilPlan:
@@ -224,7 +266,7 @@ class StencilPlan:
     __slots__ = (
         "key", "in_shape", "op_shape", "stride", "padding", "dilation",
         "pad_value", "method", "dtype", "batched", "grid",
-        "_exec", "_hits", "_calls", "_traces",
+        "_exec", "_hits", "_calls", "_traces", "_count_lock",
     )
 
     def __init__(self, key: tuple, in_shape, op_shape, stride, padding,
@@ -243,6 +285,9 @@ class StencilPlan:
         self._hits = 0
         self._calls = 0
         self._traces = 0
+        # per-plan counter guard: `n += 1` is a read-modify-write that
+        # loses increments under concurrent serving threads
+        self._count_lock = threading.Lock()
         self._exec = self._build_executor()
 
     # -- identity ----------------------------------------------------------
@@ -267,7 +312,8 @@ class StencilPlan:
         def run(x, weights):
             # Python side effect fires only while tracing — this IS the
             # retrace counter asserted by tests/test_plan_cache.py.
-            self._traces += 1
+            with self._count_lock:
+                self._traces += 1
             return engine.execute_stencil(
                 x, grid, weights, pad_value, method, batched
             )
@@ -278,7 +324,8 @@ class StencilPlan:
     kind = "stencil"
 
     def __call__(self, x: jax.Array, weights: jax.Array) -> jax.Array:
-        self._calls += 1
+        with self._count_lock:
+            self._calls += 1
         if not _TRACER.enabled:
             return self._exec(x, weights)
         # cold == this dispatch pays trace + compile, not just a jit hit
@@ -358,13 +405,15 @@ class BankPlan(StencilPlan):
         method, batched = self.method, self.batched
         if self.separable:
             def run(x, factors):
-                self._traces += 1
+                with self._count_lock:
+                    self._traces += 1
                 return engine.execute_separable_bank(
                     x, grid, factors, pad_value, method, batched
                 )
         else:
             def run(x, weight_matrix):
-                self._traces += 1
+                with self._count_lock:
+                    self._traces += 1
                 return engine.execute_stencil_bank(
                     x, grid, weight_matrix, pad_value, method, batched
                 )
@@ -451,7 +500,7 @@ class StatsPlan:
     """
 
     __slots__ = ("key", "in_shape", "axes", "dtype", "method", "order",
-                 "_exec", "_hits", "_calls", "_traces")
+                 "_exec", "_hits", "_calls", "_traces", "_count_lock")
 
     def __init__(self, key: tuple, in_shape, axes, dtype, method, order):
         self.key = key
@@ -463,6 +512,7 @@ class StatsPlan:
         self._hits = 0
         self._calls = 0
         self._traces = 0
+        self._count_lock = threading.Lock()
         self._exec = self._build_executor()
 
     def __hash__(self):
@@ -484,7 +534,8 @@ class StatsPlan:
         axes, method, order = self.axes, self.method, self.order
 
         def run(x):
-            self._traces += 1
+            with self._count_lock:
+                self._traces += 1
             return _moments.execute_moments(x, axes, method, order)
 
         return jax.jit(run)
@@ -492,7 +543,8 @@ class StatsPlan:
     kind = "stats"
 
     def __call__(self, x: jax.Array):
-        self._calls += 1
+        with self._count_lock:
+            self._calls += 1
         if not _TRACER.enabled:
             return self._exec(x)
         with _span("plan/exec", kind=self.kind, cold=self._traces == 0):
@@ -552,7 +604,8 @@ class PipePlan:
     """
 
     __slots__ = ("key", "in_shape", "dtype", "opts", "steps", "passes",
-                 "melt_calls", "_exec", "_hits", "_calls", "_traces")
+                 "melt_calls", "_exec", "_hits", "_calls", "_traces",
+                 "_count_lock")
 
     def __init__(self, key: tuple, in_shape, dtype, opts: ExecOptions,
                  steps, passes: int, melt_calls: int, run_fn):
@@ -566,9 +619,11 @@ class PipePlan:
         self._hits = 0
         self._calls = 0
         self._traces = 0
+        self._count_lock = threading.Lock()
 
         def run(x):
-            self._traces += 1  # fires only while tracing (retrace counter)
+            with self._count_lock:
+                self._traces += 1  # fires only while tracing
             return run_fn(x)
 
         self._exec = jax.jit(run)
@@ -587,7 +642,8 @@ class PipePlan:
     kind = "pipe"
 
     def __call__(self, x: jax.Array):
-        self._calls += 1
+        with self._count_lock:
+            self._calls += 1
         if not _TRACER.enabled:
             return self._exec(x)
         with _span("plan/exec", kind=self.kind, cold=self._traces == 0):

@@ -1,4 +1,8 @@
-"""Batched serving driver: prefill + decode loop with KV caches.
+"""Batched LM serving driver: prefill + decode loop with KV caches.
+
+This drives the *language-model* stack (``repro.models``).  Serving for
+compiled analytics pipe programs — request coalescing, admission
+control, load shedding — lives in :mod:`repro.serve` (DESIGN.md §15).
 
     PYTHONPATH=src python -m repro.launch.serve --arch hymba_1p5b --smoke \
         --batch 4 --prompt-len 64 --gen 32

@@ -55,7 +55,7 @@ from repro.pipe.graph import (
     PointwiseOp,
 )
 
-__all__ = ["run", "grad", "build_program_for"]
+__all__ = ["run", "grad", "build_program_for", "plan_key_for"]
 
 
 def _opts(method, pad_value, out_dtype, batched) -> ExecOptions:
@@ -213,6 +213,24 @@ def _run_program(x, program: PipelineProgram, opts: ExecOptions,
 def _plan_key(P: Pipe, opts: ExecOptions) -> tuple:
     return (tuple(P.x.shape), jnp.dtype(P.x.dtype).name, P.batched,
             opts.key(), P.signature())
+
+
+def plan_key_for(P: Pipe, method="auto", pad_value="edge",
+                 out_dtype=None) -> tuple:
+    """The cache key this pipeline would intern under — a hashable tuple
+    of (shape, dtype, batched, options, graph signature).
+
+    This is the serving tier's grouping key (``repro.serve``): two
+    requests with equal keys are guaranteed to compile to the same plan,
+    so they can be stacked into one ``pipe.batched`` dispatch and served
+    from a single interned executor.  Note the key embeds the *input
+    shape*, so a coalescer never has to re-check shape compatibility.
+    (Dispatching the compiled plan is already non-blocking — jax arrays
+    are futures; only ``block_until_ready``/host reads synchronize.)
+    """
+    opts = _opts(method, pad_value, out_dtype, P.batched)
+    _check_out_dtype(P, opts)
+    return ("pipe",) + _plan_key(P, opts)
 
 
 def _check_out_dtype(P: Pipe, opts: ExecOptions):

@@ -72,6 +72,11 @@ class LinearOp:
         if kind == "stencil" and W.shape[1] != 1:
             raise ValueError(".stencil takes one operator column; use "
                              ".bank for a (numel, K) matrix")
+        # private, read-only copy: the op's digest goes into the plan key,
+        # so a caller mutating their weight buffer after build must not
+        # desync the cached plan from the digest it was interned under
+        W = np.array(W, copy=True)
+        W.setflags(write=False)
         self.weights = W
         self.K = int(W.shape[1])
         self.stride = normalize_tuple(stride, rank, "stride")
@@ -128,7 +133,11 @@ class ZscoreOp:
         elif np.isscalar(sigma) and not isinstance(sigma, str):
             self.sigma = ssig = float(sigma)
         else:
-            self.sigma = np.asarray(sigma, np.float64)
+            # read-only copy, same contract as LinearOp.weights: the digest
+            # in the signature must stay true to the stored array
+            s = np.array(sigma, np.float64)
+            s.setflags(write=False)
+            self.sigma = s
             ssig = weight_digest(self.sigma)
         self._sig = ("zscore", self.window, wkind, ssig, self.eps)
 

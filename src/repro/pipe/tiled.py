@@ -45,6 +45,7 @@ coupling cost is the O(state) reduction merge.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
@@ -282,11 +283,10 @@ def _interior_patch_elems(out_shape, footprint, counts) -> int:
     return elems
 
 
-def _budget_tile_counts(out_shape, footprint, itemsize: int, batch: int,
-                        channels: int, budget: int,
-                        out_itemsize: int = 0) -> Tuple[int, ...]:
-    """Pick per-dim tile counts so an interior tile's working set fits the
-    byte budget.
+def _working_set_bytes(out_shape, footprint, counts, itemsize: int,
+                       batch: int, channels: int,
+                       out_itemsize: int = 0) -> float:
+    """One interior tile's estimated working set, in bytes.
 
     The estimate is deliberately simple and documented: patch bytes ×
     (2 + max(channels, 1)) for the padded copy and the widest
@@ -294,23 +294,33 @@ def _budget_tile_counts(out_shape, footprint, itemsize: int, batch: int,
     programs (``out_itemsize`` > 0) additionally stage the writeback:
     up to 2 cropped result tiles live awaiting their device→host copy
     (the double-buffered D2H mirror of the input prefetch), so the
-    estimate adds 2 × output-tile bytes.  Splits always go to the dim
-    with the largest current patch extent (keeps tiles chunky → fewest
-    shape classes, best halo-to-interior ratio).
+    estimate adds 2 × output-tile bytes.
     """
     overhead = 2.0 * (2 + max(channels, 1))
+    b = (_interior_patch_elems(out_shape, footprint, counts)
+         * max(1, batch) * itemsize * overhead)
+    if out_itemsize:
+        tile_out = 1
+        for n, k in zip(out_shape, counts):
+            tile_out *= -(-n // k)
+        b += (2 * tile_out * max(1, batch) * max(channels, 1)
+              * out_itemsize)
+    return b
+
+
+def _budget_tile_counts(out_shape, footprint, itemsize: int, batch: int,
+                        channels: int, budget: int,
+                        out_itemsize: int = 0) -> Tuple[int, ...]:
+    """Pick per-dim tile counts so an interior tile's working set
+    (:func:`_working_set_bytes`) fits the byte budget.  Splits always go
+    to the dim with the largest current patch extent (keeps tiles chunky
+    → fewest shape classes, best halo-to-interior ratio).
+    """
     counts = [1] * len(out_shape)
 
     def bytes_now():
-        b = (_interior_patch_elems(out_shape, footprint, counts)
-             * max(1, batch) * itemsize * overhead)
-        if out_itemsize:
-            tile_out = 1
-            for n, k in zip(out_shape, counts):
-                tile_out *= -(-n // k)
-            b += (2 * tile_out * max(1, batch) * max(channels, 1)
-                  * out_itemsize)
-        return b
+        return _working_set_bytes(out_shape, footprint, counts, itemsize,
+                                  batch, channels, out_itemsize)
 
     while bytes_now() > budget:
         splittable = [d for d in range(len(out_shape))
@@ -615,6 +625,23 @@ class TiledProgram:
             jnp.dtype(P.x.dtype).name, tuple(P.x.shape), self.tile_counts,
             tuple((s.out_lo, s.out_hi) for s in self.specs))
 
+    def working_set_bytes(self) -> int:
+        """This schedule's estimated peak working set (bytes) — the same
+        §12 estimate ``memory_budget=`` plans against, evaluated for the
+        tile counts this program actually has.  The serving tier's
+        admission controller reserves this many bytes from its shared
+        :class:`~repro.serve.admission.MemoryBudget` before letting a
+        stream start, so concurrent tiled requests cannot collectively
+        overshoot the host."""
+        P = self.graph
+        out_itemsize = (np.dtype(self.out_dtype).itemsize
+                        if self.out_dtype is not None else 0)
+        return int(_working_set_bytes(
+            self.program.out_shape, self.footprint, self.tile_counts,
+            jnp.dtype(P.x.dtype).itemsize,
+            P.x.shape[0] if P.batched else 1, self.program.channels,
+            out_itemsize=out_itemsize))
+
     # -- execution ---------------------------------------------------------
     def _plan_for(self, spec: TileSpec, stack: int = 0) -> TilePlan:
         P, opts, program = self.graph, self.opts, self.program
@@ -699,7 +726,7 @@ class TiledProgram:
             checkpoint_dir=None, resume_dir=None, checkpoint_every: int = 8,
             faults=None, max_retries: int = 3, retry_backoff: float = 0.0,
             strict: bool = True, heartbeat=None, straggler=None,
-            trace=None):
+            trace=None, budget=None):
         """Stream every tile; returns the merged reduction state, or the
         assembled output as a host-side ``np.ndarray`` (the out-of-core
         contract: the device only ever holds tiles).
@@ -749,8 +776,16 @@ class TiledProgram:
         writeback / journal spans and fault instants land in per-thread
         tracks; counters land in ``repro.obs`` metrics either way
         (``obs.snapshot()`` reads them).
+
+        ``budget=`` arbitrates *concurrent* streams: any object with a
+        ``reserve(nbytes)`` context manager (canonically
+        ``repro.serve.admission.MemoryBudget``) — the stream holds
+        :meth:`working_set_bytes` reserved for its whole duration, so a
+        shared budget caps the host's aggregate tiled working set.
         """
-        with _trace_scope(trace):
+        hold = (budget.reserve(self.working_set_bytes())
+                if budget is not None else contextlib.nullcontext())
+        with hold, _trace_scope(trace):
             return self._run(mesh, axis_name, prefetch, out, out_path,
                              checkpoint_dir, resume_dir, checkpoint_every,
                              faults, max_retries, retry_backoff, strict,
@@ -1233,7 +1268,7 @@ def run_tiled(P: Pipe, *, tiles=None, memory_budget=None, method="auto",
               out_path=None, checkpoint_dir=None, resume_dir=None,
               checkpoint_every=8, faults=None, max_retries=3,
               retry_backoff=0.0, strict=True, heartbeat=None,
-              straggler=None, trace=None):
+              straggler=None, trace=None, budget=None):
     """Plan + run in one call (the ``Pipe.run(tiles=…)`` backend)."""
     with _trace_scope(trace):
         with _span("stream/plan"):
@@ -1246,4 +1281,4 @@ def run_tiled(P: Pipe, *, tiles=None, memory_budget=None, method="auto",
                       checkpoint_every=checkpoint_every, faults=faults,
                       max_retries=max_retries, retry_backoff=retry_backoff,
                       strict=strict, heartbeat=heartbeat,
-                      straggler=straggler)
+                      straggler=straggler, budget=budget)

@@ -1,0 +1,54 @@
+"""``repro.serve`` — async batched analytics serving for pipe programs.
+
+The request-level tier above the plan cache (DESIGN.md §15): a
+:class:`PipeService` accepts compiled-pipe requests from many callers,
+coalesces same-plan-key requests into one ``pipe.batched`` dispatch
+(:mod:`repro.serve.coalesce`), admits work plan-cache-aware so cold-plan
+stampedes cannot serialize the worker pool
+(:mod:`repro.serve.admission`), and sheds load with per-tenant fairness
+when the bounded queue fills (:mod:`repro.serve.backpressure`).  A
+seeded open-loop load generator (:mod:`repro.serve.loadgen`) drives the
+whole stack and reports latency percentiles.
+
+Quickstart::
+
+    from repro.serve import PipeService, ServeConfig
+    from repro.pipe import pipe
+
+    svc = PipeService(ServeConfig(max_batch=8, max_wait_ms=2.0))
+    svc.warmup(pipe(x).gaussian(1.5).gradient())
+    t = svc.submit(pipe(x).gaussian(1.5).gradient(), tenant="alice")
+    y = t.result()        # == pipe(x).gaussian(1.5).gradient().run()
+    svc.close()           # drains in-flight work first
+
+High-rate callers should register the program once and submit data —
+per-request graph construction on the caller thread otherwise caps
+aggregate throughput::
+
+    prog = svc.register(pipe(x0).gaussian(1.5).gradient())
+    tickets = [prog.submit(x) for x in xs]   # data only, key cached
+"""
+from repro.serve.admission import (AdmissionController, ColdPlanOverload,
+                                   MemoryBudget)
+from repro.serve.backpressure import FairQueue, ShedError
+from repro.serve.coalesce import Coalescer, Request, execute_batch
+from repro.serve.loadgen import run_load
+from repro.serve.service import (PipeService, Program, ServeConfig,
+                                 ServiceClosed, Ticket)
+
+__all__ = [
+    "PipeService",
+    "Program",
+    "ServeConfig",
+    "Ticket",
+    "ServiceClosed",
+    "Coalescer",
+    "Request",
+    "execute_batch",
+    "AdmissionController",
+    "ColdPlanOverload",
+    "MemoryBudget",
+    "FairQueue",
+    "ShedError",
+    "run_load",
+]

@@ -1,0 +1,136 @@
+"""Plan-cache-aware admission control + the shared memory budget.
+
+Two gates stand between a closed batch and a worker (DESIGN.md §15):
+
+**Cold-plan admission.**  A batch whose executor is already compiled
+("warm") dispatches immediately — the plan cache serves it without
+tracing.  A *cold* batch costs a jit trace (tens of ms to seconds),
+so an unbounded stampede of distinct cold keys would serialize the
+whole worker pool behind the compiler.  The
+:class:`AdmissionController` caps concurrent cold builds at
+``max_cold``; same-key duplicates always ``"wait"`` (the plan cache's
+per-key build latch means the second caller would block on the first
+anyway), and over-cap distinct keys either ``"wait"`` (default) or
+``"reject"`` with :class:`ColdPlanOverload`.  Warmth is learned from
+releases and probed from the plan cache itself
+(:func:`repro.core.plan.plan_cached`), so a service restart against a
+warm process doesn't re-ramp.
+
+**Memory budget.**  Tiled requests hold a byte reservation sized by
+:meth:`TiledProgram.working_set_bytes
+<repro.pipe.tiled.TiledProgram.working_set_bytes>` for their whole
+stream, arbitrated by :class:`MemoryBudget` — a condition-variable
+byte semaphore, so concurrent out-of-core streams queue instead of
+collectively overshooting the host.  An oversized request (reservation
+larger than the whole budget) admits only when it would run alone —
+best effort beats deadlock.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+from repro.core.plan import plan_cached
+
+__all__ = ["ColdPlanOverload", "AdmissionController", "MemoryBudget"]
+
+
+class ColdPlanOverload(RuntimeError):
+    """Rejected: too many distinct cold plans compiling at once."""
+
+
+class AdmissionController:
+    """Caps concurrent cold-plan builds (loop-owned, unlocked).
+
+    Keys are opaque hashables; the service keys on ``(plan key, batch
+    size)`` because each distinct batch size traces its own stacked
+    executor.  ``cache_key`` (optional) is the key the dispatch interns
+    under in the process plan cache — when present and resident, the
+    batch is warm regardless of what this controller has seen.
+    """
+
+    def __init__(self, max_cold: int = 2, policy: str = "queue"):
+        if max_cold < 1:
+            raise ValueError(f"max_cold must be >= 1, got {max_cold}")
+        if policy not in ("queue", "reject"):
+            raise ValueError(f"unknown cold policy {policy!r}; expected "
+                             f"'queue' or 'reject'")
+        self.max_cold = int(max_cold)
+        self.policy = policy
+        self._warm = set()
+        self._building = set()
+
+    def is_warm(self, key, cache_key: Optional[tuple] = None) -> bool:
+        return (key in self._warm
+                or (cache_key is not None and plan_cached(cache_key)))
+
+    def try_acquire(self, key, cache_key: Optional[tuple] = None) -> str:
+        """``"run"`` (dispatch now — a cold grant holds a build slot
+        until :meth:`release`), ``"wait"`` (park; a release will re-pump)
+        or ``"reject"`` (fail with :class:`ColdPlanOverload`)."""
+        if self.is_warm(key, cache_key):
+            return "run"
+        if key in self._building:
+            # a worker is already tracing this exact key: the plan
+            # cache's build latch would block a second worker for
+            # nothing — park until the first release marks it warm
+            return "wait"
+        if len(self._building) < self.max_cold:
+            self._building.add(key)
+            return "run"
+        return "wait" if self.policy == "queue" else "reject"
+
+    def release(self, key) -> None:
+        """The dispatch finished (either way): the key is warm now —
+        even a failed run leaves the traced executor interned."""
+        self._building.discard(key)
+        self._warm.add(key)
+
+    def warm_keys(self) -> int:
+        return len(self._warm)
+
+
+class MemoryBudget:
+    """A byte semaphore arbitrating concurrent working sets.
+
+    Thread-safe (reservations are taken on worker threads).  ``reserve``
+    blocks until the bytes fit; reservations larger than the whole
+    budget admit only when nothing else holds (running alone is the
+    best a too-big request can get — refusing forever would turn a
+    sizing estimate into a deadlock).
+    """
+
+    def __init__(self, total: int):
+        if total < 1:
+            raise ValueError(f"budget must be >= 1 byte, got {total}")
+        self.total = int(total)
+        self.in_use = 0
+        self.peak = 0
+        self.waits = 0
+        self._cv = threading.Condition()
+
+    @contextlib.contextmanager
+    def reserve(self, nbytes: int, timeout: Optional[float] = None):
+        nbytes = int(nbytes)
+        if nbytes < 0:
+            raise ValueError(f"cannot reserve {nbytes} bytes")
+        with self._cv:
+            def fits():
+                return (self.in_use + nbytes <= self.total
+                        or (nbytes > self.total and self.in_use == 0))
+            if not fits():
+                self.waits += 1
+                if not self._cv.wait_for(fits, timeout=timeout):
+                    raise TimeoutError(
+                        f"memory budget: {nbytes} bytes not available "
+                        f"within {timeout}s ({self.in_use}/{self.total} "
+                        f"in use)")
+            self.in_use += nbytes
+            self.peak = max(self.peak, self.in_use)
+        try:
+            yield
+        finally:
+            with self._cv:
+                self.in_use -= nbytes
+                self._cv.notify_all()

@@ -1,0 +1,126 @@
+"""Bounded admission queue: load shedding + per-tenant fairness.
+
+The service's front door is a :class:`FairQueue` — one FIFO lane per
+tenant, drained round-robin, with a global depth bound and an optional
+per-tenant quota.  The structure is **not** thread-safe by design: it is
+owned by the service's event-loop thread and every mutation happens
+there (``call_soon_threadsafe`` is the only door in), which keeps the
+shed/fairness logic deterministic enough to unit-test with plain calls.
+
+Shedding policy, applied only when the *global* bound is hit:
+
+- ``"reject-new"`` — the arriving request is shed (:class:`ShedError`).
+- ``"shed-largest"`` — the *newest* request of the tenant with the
+  deepest backlog is displaced to make room (the arriving tenant's own
+  lane counts too, so a lone flooding tenant always sheds itself).
+  ``put`` returns the displaced item for the caller to fail.
+
+A tenant over its own quota is always a ``reject-new`` regardless of
+policy: the quota is the fairness contract — one tenant's burst must
+never displace another tenant's queued work.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict, deque
+from typing import Optional
+
+__all__ = ["ShedError", "FairQueue", "POLICIES"]
+
+POLICIES = ("reject-new", "shed-largest")
+
+
+class ShedError(RuntimeError):
+    """A request was dropped by backpressure; ``reason`` says why
+    (``"queue-full"`` or ``"tenant-quota"``)."""
+
+    def __init__(self, msg: str, reason: str):
+        super().__init__(msg)
+        self.reason = reason
+
+
+class FairQueue:
+    """Per-tenant FIFO lanes drained round-robin (loop-owned, unlocked)."""
+
+    def __init__(self, depth: int, tenant_quota: Optional[int] = None,
+                 policy: str = "reject-new"):
+        if depth < 1:
+            raise ValueError(f"queue depth must be >= 1, got {depth}")
+        if tenant_quota is not None and tenant_quota < 1:
+            raise ValueError(f"tenant_quota must be >= 1, got "
+                             f"{tenant_quota}")
+        if policy not in POLICIES:
+            raise ValueError(f"unknown shed policy {policy!r}; expected "
+                             f"one of {POLICIES}")
+        self.depth = int(depth)
+        self.tenant_quota = tenant_quota
+        self.policy = policy
+        #: insertion-ordered so round-robin order is deterministic
+        self._lanes: "OrderedDict[str, deque]" = OrderedDict()
+        self._len = 0
+        #: round-robin cursor: index into the lane key order
+        self._rr = 0
+
+    def __len__(self) -> int:
+        return self._len
+
+    def depths(self) -> dict:
+        """Per-tenant queued counts (observability)."""
+        return {t: len(q) for t, q in self._lanes.items() if q}
+
+    def put(self, item, tenant: str):
+        """Enqueue; returns a displaced item under ``shed-largest`` (the
+        caller fails its future), else ``None``.  Raises
+        :class:`ShedError` when the request itself is shed."""
+        lane = self._lanes.get(tenant)
+        if (self.tenant_quota is not None and lane is not None
+                and len(lane) >= self.tenant_quota):
+            raise ShedError(
+                f"tenant {tenant!r} is over its quota of "
+                f"{self.tenant_quota} queued requests", "tenant-quota")
+        displaced = None
+        if self._len >= self.depth:
+            if self.policy == "reject-new":
+                raise ShedError(
+                    f"queue full ({self.depth} requests)", "queue-full")
+            # shed-largest: displace the newest item of the deepest lane
+            # (ties break toward the arriving tenant so a flooder pays
+            # before anyone else does)
+            deepest = max(
+                (t for t, q in self._lanes.items() if q),
+                key=lambda t: (len(self._lanes[t]), t == tenant))
+            displaced = self._lanes[deepest].pop()
+            self._len -= 1
+        if lane is None:
+            lane = self._lanes[tenant] = deque()
+        lane.append(item)
+        self._len += 1
+        return displaced
+
+    def get(self):
+        """``(item, tenant)`` in round-robin tenant order; raises
+        ``IndexError`` when empty."""
+        if not self._len:
+            raise IndexError("get from an empty FairQueue")
+        keys = list(self._lanes)
+        for off in range(len(keys)):
+            t = keys[(self._rr + off) % len(keys)]
+            q = self._lanes[t]
+            if q:
+                self._rr = (self._rr + off + 1) % len(keys)
+                self._len -= 1
+                return q.popleft(), t
+        raise AssertionError("length/lane bookkeeping desynced")
+
+    def putback(self, item, tenant: str) -> None:
+        """Return an item to the *front* of its lane (an admission
+        "wait" verdict re-queues without losing FIFO position); never
+        sheds — the item was already admitted once."""
+        self._lanes.setdefault(tenant, deque()).appendleft(item)
+        self._len += 1
+
+    def drain(self):
+        """Pop everything (shutdown): ``[(item, tenant), ...]``."""
+        out = []
+        while self._len:
+            out.append(self.get())
+        return out

@@ -1,0 +1,314 @@
+"""Request coalescing: same-plan-key requests stack into one dispatch.
+
+The throughput lever of the serving tier (DESIGN.md §15): small-tile
+pipe programs are dispatch-bound, and PR 1 measured a single
+``pipe.batched`` call at B=8 running 3–6× faster than 8 sequential
+runs.  The :class:`Coalescer` holds an *open window* per plan key
+(:func:`repro.pipe.compile.plan_key_for` — equal keys guarantee equal
+shape, dtype, options, and graph, so stacking is always legal); a
+window closes into a :class:`Batch` when it reaches ``max_batch`` or
+its ``max_wait`` deadline expires, whichever comes first.
+
+Unstacking (:func:`execute_batch`) depends on the graph's terminal:
+
+- **array outputs** run the stacked input through the batched graph and
+  slice ``out[i]`` — *bit-identical* to the per-request run on both the
+  lax and materialize paths (the vmapped melt touches each item's values
+  in the same order as the unbatched one);
+- **moments** run batched natively (the reduction is per batch item by
+  contract) and slice the state leaves — equal to the direct run only
+  to float tolerance: the batched reduction folds chunks in a different
+  order, and the chunked-centered merge is not bitwise associative;
+- **hist / cov** reduce over *all* elements under ``batched`` (one
+  merged state), so the terminal is split off: the producer prefix runs
+  batched, and the terminal (:func:`~repro.stats.hist.histogram_fixed`
+  / :func:`~repro.stats.cov.channel_cov`) is ``vmap``-ed over the
+  stacked producer output, then sliced per request.
+
+Requests that cannot coalesce — already-batched graphs, tiled runs
+(``tiles=``/``memory_budget=``), empty-window shapes — form solo
+batches and flow through the same dispatch path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plan import ExecOptions, plan_cached
+from repro.pipe import compile as _compile
+from repro.pipe.graph import CovOp, HistOp, Pipe
+
+__all__ = ["Request", "Batch", "Coalescer", "coalescible", "begin_batch",
+           "execute_batch", "batch_cache_key"]
+
+
+@dataclasses.dataclass(eq=False)
+class Request:
+    """One submitted pipeline run, and where its answer goes.
+
+    Identity-compared (``eq=False``): requests live in deques the
+    service removes from by identity, and value equality over array
+    fields is both meaningless and ambiguous."""
+
+    id: int
+    pipe: Pipe
+    method: str
+    pad_value: object
+    out_dtype: object
+    tiles: object
+    memory_budget: Optional[int]
+    tenant: str
+    future: object  # concurrent.futures.Future
+    t_submit: float
+    #: grouping key — equal keys may stack (``None`` = never coalesce)
+    key: Optional[tuple]
+    #: wall-clock seconds from submit to resolution (set at completion)
+    latency: Optional[float] = None
+
+    @property
+    def coalescible(self) -> bool:
+        return self.key is not None
+
+
+@dataclasses.dataclass(eq=False)
+class Batch:
+    """A closed window: requests guaranteed mutually stackable.
+    Identity-compared, same as :class:`Request`."""
+
+    key: Optional[tuple]
+    requests: List[Request]
+
+    def __len__(self) -> int:
+        return len(self.requests)
+
+
+def coalescible(P: Pipe, tiles=None, memory_budget=None) -> bool:
+    """Whether a request may share a batch: unbatched graph, concrete
+    input, in-memory execution.  Tiled runs hold a memory reservation
+    sized to *their* plan and batched graphs already own the leading
+    axis — both dispatch solo."""
+    return (not P.batched
+            and tiles is None and memory_budget is None
+            and not isinstance(P.x, jax.core.Tracer))
+
+
+class Coalescer:
+    """Open windows keyed by plan key; pure data structure, loop-owned.
+
+    The clock is injected (``clock=time.monotonic`` by default) so the
+    window/deadline logic is unit-testable without sleeping.
+    """
+
+    def __init__(self, max_batch: int = 8, max_wait: float = 0.002,
+                 clock: Callable[[], float] = time.monotonic):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_wait < 0:
+            raise ValueError(f"max_wait must be >= 0, got {max_wait}")
+        self.max_batch = int(max_batch)
+        self.max_wait = float(max_wait)
+        self.clock = clock
+        #: key -> (deadline, [requests]); insertion-ordered so expiry
+        #: scans oldest-first
+        self._open: "OrderedDict[tuple, list]" = OrderedDict()
+        self._pending = 0
+
+    @property
+    def pending(self) -> int:
+        """Requests staged in open windows (not yet in any batch)."""
+        return self._pending
+
+    def has_open(self, key) -> bool:
+        return key is not None and key in self._open
+
+    def offer(self, req: Request) -> List[Batch]:
+        """Stage one request; returns the batches this arrival closed
+        (a full window, or a solo batch for non-coalescible work)."""
+        if not req.coalescible:
+            return [Batch(None, [req])]
+        entry = self._open.get(req.key)
+        if entry is None:
+            entry = self._open[req.key] = [self.clock() + self.max_wait, []]
+        entry[1].append(req)
+        self._pending += 1
+        if len(entry[1]) >= self.max_batch:
+            return [self._close(req.key)]
+        return []
+
+    def _close(self, key) -> Batch:
+        _, reqs = self._open.pop(key)
+        self._pending -= len(reqs)
+        return Batch(key, reqs)
+
+    def poll(self, now: Optional[float] = None) -> List[Batch]:
+        """Close every window whose deadline has passed."""
+        now = self.clock() if now is None else now
+        expired = [k for k, (dl, _) in self._open.items() if dl <= now]
+        return [self._close(k) for k in expired]
+
+    def next_deadline(self) -> Optional[float]:
+        """Earliest open-window deadline (``None`` when no windows)."""
+        return min((dl for dl, _ in self._open.values()), default=None)
+
+    def flush_all(self) -> List[Batch]:
+        """Close everything (drain-on-shutdown)."""
+        return [self._close(k) for k in list(self._open)]
+
+
+# -- batch execution ---------------------------------------------------------
+
+
+def _opts_of(req: Request, batched: bool) -> ExecOptions:
+    return ExecOptions.make(method=req.method, pad_value=req.pad_value,
+                            batched=batched, out_dtype=req.out_dtype)
+
+
+def batch_cache_key(reqs: List[Request]) -> Optional[tuple]:
+    """The plan-cache key a stacked dispatch of ``reqs`` interns under,
+    or ``None`` when the stacked run does not hit the pipe-plan cache
+    (single-op graphs lower onto the legacy plan kinds; split-terminal
+    graphs intern under their producer prefix).  The admission
+    controller probes this with :func:`repro.core.plan.plan_cached` to
+    tell a warm batched plan from a cold one it has never seen."""
+    r0 = reqs[0]
+    P = r0.pipe
+    if len(P.ops) < 2 or isinstance(P.ops[-1], (HistOp, CovOp)):
+        return None
+    opts = _opts_of(r0, batched=True)
+    shape = (len(reqs),) + tuple(P.x.shape)
+    return ("pipe", shape, jnp.dtype(P.x.dtype).name, True, opts.key(),
+            P.signature())
+
+
+def _slice_state(state, i: int):
+    return jax.tree_util.tree_map(lambda leaf: leaf[i], state)
+
+
+def _stack_inputs(reqs: List[Request]):
+    """One device transfer, not eight: stack host-side when every input
+    is a numpy array (the common serving case — ``jnp.stack`` over N
+    small device arrays costs N device_puts plus a concat and was
+    measured slower than the batched run it feeds)."""
+    arrs = [r.pipe.x for r in reqs]
+    if all(isinstance(a, np.ndarray) for a in arrs):
+        return jnp.asarray(np.stack(arrs))
+    return jnp.stack([jnp.asarray(a) for a in arrs])
+
+
+def begin_batch(reqs: List[Request], budget=None) -> Callable[[], list]:
+    """Dispatch phase of one batch: stack the inputs and *launch* the
+    device work without host synchronization; returns a zero-arg
+    ``collect`` whose call finishes the transfer and yields per-request
+    results in request order.
+
+    jax dispatch is asynchronous, so a worker holding several ready
+    batches begins them all back-to-back — the device pipelines the
+    stacked executions — before collecting any; this took ~15% off an
+    8-batch makespan vs dispatching-and-blocking one batch at a time
+    (``benchmarks/serve.py``).  Tiled streams synchronize internally,
+    so that path defers *everything* to ``collect`` — beginning it
+    eagerly would stall the group's remaining dispatches behind a
+    whole out-of-core stream.
+    """
+    if len(reqs) == 1:
+        r = reqs[0]
+        if r.tiles is not None or r.memory_budget is not None:
+            def collect_tiled():
+                from repro.pipe.tiled import run_tiled
+
+                return [jax.device_get(run_tiled(
+                    r.pipe, tiles=r.tiles, memory_budget=r.memory_budget,
+                    method=r.method, pad_value=r.pad_value,
+                    out_dtype=r.out_dtype, budget=budget))]
+            return collect_tiled
+        out = _compile.run(r.pipe, method=r.method, pad_value=r.pad_value,
+                           out_dtype=r.out_dtype)
+        return lambda: [jax.device_get(out)]
+
+    r0 = reqs[0]
+    P = r0.pipe
+    xs = _stack_inputs(reqs)
+    terminal = P.ops[-1] if P.ops else None
+    if isinstance(terminal, (HistOp, CovOp)):
+        # batched hist/cov merge the whole stack into ONE state — split
+        # the terminal off and vmap it over the batched producer output
+        producer = Pipe(xs, batched=True, ops=P.ops[:-1])
+        out = _compile.run(producer, method=r0.method,
+                           pad_value=r0.pad_value, out_dtype=r0.out_dtype)
+        if isinstance(terminal, HistOp):
+            counts = jax.vmap(lambda t: histogram_fixed_counts(
+                t, terminal.bins, terminal.lo, terminal.hi))(out)
+
+            def collect_hist():
+                h = np.asarray(counts)
+                from repro.stats.hist import Histogram
+
+                return [Histogram(h[i], terminal.lo, terminal.hi)
+                        for i in range(len(reqs))]
+            return collect_hist
+        from repro.stats.cov import channel_cov
+
+        state = jax.vmap(channel_cov)(out)
+
+        def collect_cov():
+            host = jax.device_get(state)
+            return [_slice_state(host, i) for i in range(len(reqs))]
+        return collect_cov
+    # warm fast path: the admission controller only dispatches batches
+    # whose plan is interned, so probe the cache directly and skip the
+    # per-call option/key/LRU work of compile.run (measured ~20% of a
+    # warm batch dispatch); any miss falls back to the full path
+    ck = batch_cache_key(reqs)
+    plan = plan_cached(ck) if ck is not None else None
+    if plan is not None:
+        out = plan(xs)
+    else:
+        stacked = Pipe(xs, batched=True, ops=P.ops)
+        out = _compile.run(stacked, method=r0.method,
+                           pad_value=r0.pad_value, out_dtype=r0.out_dtype)
+    if isinstance(out, jax.Array):
+        def collect_array():
+            host = np.asarray(out)
+            return [host[i] for i in range(len(reqs))]
+        return collect_array
+
+    def collect_state():
+        # moments state: leaves carry the leading batch axis
+        host = jax.device_get(out)
+        return [_slice_state(host, i) for i in range(len(reqs))]
+    return collect_state
+
+
+def execute_batch(reqs: List[Request], budget=None) -> list:
+    """Run one batch to completion; per-request results in request order.
+
+    ``begin_batch(reqs, budget)()`` — dispatch immediately followed by
+    collect.  **Results are host-side**: array outputs come back as
+    numpy arrays and state pytrees with numpy leaves (one
+    ``device_get`` per batch — per-item device slicing costs a dispatch
+    per request and was measured to eat the whole coalescing win; the
+    answer crosses a thread boundary to a waiting caller anyway).
+
+    Size-1 batches take the direct path (including tiled execution,
+    holding ``budget`` for the stream's working set); larger batches
+    stack inputs and unstack results per the terminal taxonomy in the
+    module docstring.  Raises on failure — the service fails every
+    future in the batch with the same exception (they shared one
+    dispatch, so they share its fate).
+    """
+    return begin_batch(reqs, budget)()
+
+
+def histogram_fixed_counts(t, bins, lo, hi):
+    """vmap-friendly face of :func:`repro.stats.hist.histogram_fixed`:
+    returns the counts array alone (the Histogram container's lo/hi are
+    static aux, rebuilt outside the vmap)."""
+    from repro.stats.hist import histogram_fixed
+
+    return histogram_fixed(t, bins, lo, hi).counts

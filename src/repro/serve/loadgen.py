@@ -1,0 +1,187 @@
+"""Seeded multi-tenant open-loop load generator + latency report.
+
+Open-loop means arrivals come from a fixed schedule (exponential
+inter-arrivals at ``rate`` req/s from a seeded generator), not from
+completions — the canonical way to measure a service's latency under
+load, because a closed loop self-throttles exactly when the service
+degrades (coordinated omission).  Tenants round-robin over the
+arrival sequence; the plan-key mix is the adversarial knob:
+
+- ``"same"``   — every request shares one plan key (best case: windows
+  fill to ``max_batch``);
+- ``"mixed"``  — ``distinct`` different keys interleaved (windows fill
+  slower; coalescing still wins within each key);
+- ``"churn"``  — every request a fresh plan key (worst case: nothing
+  coalesces and the plan cache takes a compile per request — this is
+  what the admission controller's cold cap is for).
+
+The report is one JSON-able dict: counts (served / shed / failed),
+throughput, latency percentiles, coalesce ratio, per-tenant totals,
+and a ``verified`` block — ``verify`` sampled requests are re-run
+directly through ``Pipe.run`` and compared **bit-identically** (the
+generator's graphs are array-valued, where the serving tier's equality
+contract is exact).
+
+CLI::
+
+    PYTHONPATH=src python -m repro.serve.loadgen --smoke
+
+exits nonzero if verification fails or if any request was shed below
+the shedding threshold (requests ≤ queue capacity must never drop —
+the zero-drop guarantee the bench gate also asserts).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.pipe.graph import pipe
+from repro.serve.backpressure import ShedError
+from repro.serve.service import PipeService, ServeConfig
+
+__all__ = ["run_load", "main"]
+
+MIXES = ("same", "mixed", "churn")
+
+
+def _graph(x, sigma: float):
+    """The generator's workload: smooth → all first partials (array
+    output, multi-stage, so it interns one PipePlan per sigma)."""
+    return pipe(x).gaussian(sigma, op_shape=5).gradient()
+
+
+def run_load(service: Optional[PipeService] = None, *, n: int = 64,
+             rate: float = 2000.0, tenants: int = 2, mix: str = "same",
+             distinct: int = 4, shape=(32, 32), seed: int = 0,
+             verify: int = 8, warm: bool = True,
+             config: Optional[ServeConfig] = None) -> dict:
+    """Drive ``n`` requests through a service and report.
+
+    Owns the service lifecycle when ``service=None`` (builds one from
+    ``config``, drains and closes it at the end); a caller-provided
+    service is left open.  Deterministic for a fixed seed up to
+    scheduling: the arrival schedule, input arrays and key mix all come
+    from ``np.random.default_rng(seed)``.
+    """
+    if mix not in MIXES:
+        raise ValueError(f"unknown mix {mix!r}; expected one of {MIXES}")
+    if n < 1:
+        raise ValueError(f"need n >= 1 requests, got {n}")
+    rng = np.random.default_rng(seed)
+    xs = rng.normal(size=(n,) + tuple(shape)).astype(np.float32)
+    gaps = rng.exponential(1.0 / rate, size=n)
+    if mix == "same":
+        sigmas = np.full(n, 1.5)
+    elif mix == "mixed":
+        sigmas = 1.0 + 0.25 * rng.integers(0, distinct, size=n)
+    else:  # churn: a fresh plan key per request
+        sigmas = 1.0 + 0.01 * np.arange(1, n + 1)
+
+    own = service is None
+    svc = service if service is not None else PipeService(config)
+    try:
+        if warm and mix != "churn":
+            for s in sorted(set(float(v) for v in sigmas)):
+                svc.warmup(_graph(xs[0], s))
+        t0 = time.monotonic()
+        due = t0
+        tickets = []
+        for i in range(n):
+            due += gaps[i]
+            pause = due - time.monotonic()
+            if pause > 0:
+                time.sleep(pause)  # open loop: fixed schedule
+            tickets.append(svc.submit(
+                _graph(xs[i], float(sigmas[i])),
+                tenant=f"tenant-{i % max(1, tenants)}"))
+        served, shed, failed = [], 0, 0
+        per_tenant: dict = {}
+        for i, t in enumerate(tickets):
+            exc = t.exception()
+            bucket = per_tenant.setdefault(t.tenant,
+                                           {"served": 0, "dropped": 0})
+            if exc is None:
+                served.append(i)
+                bucket["served"] += 1
+            else:
+                bucket["dropped"] += 1
+                if isinstance(exc, ShedError):
+                    shed += 1
+                else:
+                    failed += 1
+        elapsed = time.monotonic() - t0
+
+        lat = np.array([tickets[i].latency for i in served], np.float64)
+        pct = (lambda q: float(np.percentile(lat * 1e3, q))
+               if len(lat) else float("nan"))
+        stats = svc.stats()
+
+        verified = ok = 0
+        if verify and served:
+            for i in rng.choice(served, size=min(verify, len(served)),
+                                replace=False):
+                want = np.asarray(_graph(xs[i], float(sigmas[i])).run())
+                got = np.asarray(tickets[i].result())
+                verified += 1
+                ok += int(np.array_equal(want, got))
+        return {
+            "n": n, "mix": mix, "rate_rps": rate, "tenants": tenants,
+            "seed": seed,
+            "served": len(served), "shed": shed, "failed": failed,
+            "elapsed_s": round(elapsed, 4),
+            "throughput_rps": round(len(served) / max(elapsed, 1e-9), 1),
+            "latency_ms": {"p50": round(pct(50), 3),
+                           "p90": round(pct(90), 3),
+                           "p99": round(pct(99), 3)},
+            "queue_capacity": svc.config.queue_depth,
+            "warm_keys": stats.get("warm_keys", 0),
+            "per_tenant": per_tenant,
+            "verified": verified, "verify_ok": ok,
+        }
+    finally:
+        if own:
+            svc.close()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small deterministic run with hard assertions "
+                    "(CI): zero sheds below capacity + bit-identical "
+                    "verification")
+    ap.add_argument("-n", type=int, default=64)
+    ap.add_argument("--rate", type=float, default=2000.0)
+    ap.add_argument("--mix", choices=MIXES, default="same")
+    ap.add_argument("--tenants", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--verify", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    n = 32 if args.smoke else args.n
+    report = run_load(n=n, rate=args.rate, mix=args.mix,
+                      tenants=args.tenants, seed=args.seed,
+                      verify=args.verify,
+                      config=ServeConfig(queue_depth=max(256, n)))
+    print(json.dumps(report, indent=2))
+    failures = []
+    if report["verified"] and report["verify_ok"] != report["verified"]:
+        failures.append(f"verification: {report['verify_ok']}/"
+                        f"{report['verified']} bit-identical")
+    if report["n"] <= report["queue_capacity"] and report["shed"]:
+        failures.append(f"{report['shed']} requests shed below the "
+                        f"shedding threshold (capacity "
+                        f"{report['queue_capacity']})")
+    if report["failed"]:
+        failures.append(f"{report['failed']} requests failed")
+    for f in failures:
+        print(f"FAIL: {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,597 @@
+"""The :class:`PipeService` — submit/await serving of pipe programs.
+
+Concurrency model (DESIGN.md §15): one asyncio event loop runs in a
+dedicated daemon thread and **owns every piece of mutable state** —
+the :class:`~repro.serve.backpressure.FairQueue`, the
+:class:`~repro.serve.coalesce.Coalescer`'s open windows, the
+:class:`~repro.serve.admission.AdmissionController`, the ready deque
+and the in-flight count.  Caller threads only ever
+``call_soon_threadsafe`` into the loop; batch execution happens on a
+``ThreadPoolExecutor`` of ``workers`` threads (jax dispatch releases
+the GIL, so workers overlap).  A finished batch resolves its tickets
+directly on the worker thread — callers wake immediately — while the
+bookkeeping (in-flight count, admission release, next pump) hops back
+onto the loop.  No state needs a lock, and the pump logic stays
+sequential enough to reason about.
+
+The pump, run on every arrival / window expiry / completion:
+
+1. close expired coalescing windows into ready batches;
+2. drain the fair queue into the coalescer while the staging area has
+   room (``(2 × workers + dispatch_ahead) × max_batch`` — enough to
+   keep windows filling ahead of the dispatch slots without unbounded
+   staging);
+3. while a dispatch slot is free (``workers + dispatch_ahead`` — the
+   ahead slots keep the executor's own queue primed so a freeing
+   worker never waits out the completion's hop through the loop),
+   pick the first *admissible* ready batch (cold-plan verdicts per
+   :class:`AdmissionController`: parked batches stay ready and re-try
+   on the next completion); the picks dispatch as at most ``workers``
+   *groups*, each group one executor task that **begins every batch
+   before collecting any** so the device pipelines the stacked
+   executions (:func:`~repro.serve.coalesce.begin_batch`);
+4. re-arm the single timer for the earliest remaining window deadline.
+
+Metrics ride the PR-8 registry: counters ``serve/submitted``,
+``serve/served``, ``serve/shed``, ``serve/failed``,
+``serve/rejected_cold``, ``serve/batches``, ``serve/coalesced``;
+gauges ``serve/queue_depth``, ``serve/inflight``; histograms
+``serve/latency_ms`` (default ms edges) and ``serve/batch_size``.
+Each dispatched batch runs under a ``serve/batch`` span.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import itertools
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.obs.metrics import counter as _counter, gauge as _gauge, \
+    histogram as _histogram
+from repro.obs.trace import span as _span
+from repro.pipe import compile as _compile
+from repro.pipe.graph import Pipe
+from repro.serve.admission import AdmissionController, ColdPlanOverload, \
+    MemoryBudget
+from repro.serve.backpressure import FairQueue, ShedError
+from repro.serve.coalesce import Batch, Coalescer, Request, \
+    batch_cache_key, begin_batch, coalescible, execute_batch
+
+__all__ = ["ServeConfig", "PipeService", "Program", "Ticket",
+           "ServiceClosed"]
+
+#: serve/batch_size histogram edges (counts, not ms)
+BATCH_SIZE_EDGES = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0)
+
+
+class ServiceClosed(RuntimeError):
+    """Submitted to (or pending in) a service that has shut down."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Serving knobs; every field has a sane small-deployment default."""
+
+    #: coalescing window cap — PR 1 measured B=8 at 3–6x over 8 solo runs
+    max_batch: int = 8
+    #: how long the first request of a window waits for company
+    max_wait_ms: float = 2.0
+    #: global bound on queued (not yet staged) requests
+    queue_depth: int = 256
+    #: per-tenant queued-request cap (None = no per-tenant cap)
+    tenant_quota: Optional[int] = None
+    #: executor threads — each runs one batch at a time
+    workers: int = 2
+    #: ready batches dispatched into the executor *beyond* the worker
+    #: count, so a freeing worker starts the next batch immediately
+    #: instead of idling while the completion hops through the event
+    #: loop (a ~100-300µs bubble per batch that adds up at high rate),
+    #: and so one pump can hand a worker a whole *group* of batches to
+    #: begin back-to-back before collecting any (the device pipelines
+    #: them).  Counts toward the in-flight capacity the shed threshold
+    #: sees; staging scales with it so the extra slots have ready work.
+    dispatch_ahead: int = 1
+    #: concurrent *distinct* cold-plan traces allowed
+    max_cold_plans: int = 2
+    #: over-cap cold batches: "queue" (park) or "reject" (fail fast)
+    cold_policy: str = "queue"
+    #: full-queue policy: "reject-new" or "shed-largest"
+    shed_policy: str = "reject-new"
+    #: shared byte budget for concurrent tiled streams (None = unmetered)
+    memory_budget: Optional[int] = None
+
+
+class Ticket:
+    """The caller's handle: a thin veneer over the request's future."""
+
+    __slots__ = ("_req",)
+
+    def __init__(self, req: Request):
+        self._req = req
+
+    @property
+    def id(self) -> int:
+        return self._req.id
+
+    @property
+    def tenant(self) -> str:
+        return self._req.tenant
+
+    @property
+    def latency(self) -> Optional[float]:
+        """Submit→resolve seconds (None until served)."""
+        return self._req.latency
+
+    def done(self) -> bool:
+        return self._req.future.done()
+
+    def result(self, timeout: Optional[float] = None):
+        return self._req.future.result(timeout)
+
+    def exception(self, timeout: Optional[float] = None):
+        return self._req.future.exception(timeout)
+
+
+class Program:
+    """A registered pipe program: graph captured once, data per request.
+
+    Created by :meth:`PipeService.register`.  ``submit(x)`` binds one
+    input array to the captured op chain and enqueues it — the serving
+    analogue of holding a compiled model and sending it data.  Per-shape
+    plan keys are computed once and cached, so the per-request cost is a
+    dict probe plus the enqueue, not graph construction + key hashing
+    (which dominates the caller thread when every request rebuilds its
+    graph).  Thread-safe: the key cache is a plain dict mutated only by
+    whole-entry assignment.
+    """
+
+    __slots__ = ("_svc", "ops", "method", "pad_value", "out_dtype", "_keys")
+
+    def __init__(self, svc: "PipeService", ops: tuple, method: str,
+                 pad_value, out_dtype):
+        self._svc = svc
+        self.ops = tuple(ops)
+        self.method = method
+        self.pad_value = pad_value
+        self.out_dtype = out_dtype
+        self._keys: dict = {}
+
+    def submit(self, x, *, tenant: str = "default") -> Ticket:
+        """Enqueue the registered program over ``x``; returns a
+        :class:`Ticket`.  Coalesces with any same-key request, including
+        graph-carrying :meth:`PipeService.submit` calls — the plan key,
+        not the submission path, decides batchability."""
+        if isinstance(x, jax.core.Tracer):
+            raise ValueError(
+                "PipeService serves concrete inputs; a traced pipeline "
+                "belongs inside its own jit, not on the request path")
+        if not hasattr(x, "shape") or not hasattr(x, "dtype"):
+            x = jnp.asarray(x)
+        P = Pipe(x, batched=False, ops=self.ops)
+        sig = (tuple(x.shape), str(x.dtype))
+        key = self._keys.get(sig)
+        if key is None:
+            key = _compile.plan_key_for(P, method=self.method,
+                                        pad_value=self.pad_value,
+                                        out_dtype=self.out_dtype)
+            self._keys[sig] = key
+        return self._svc._enqueue(P, self.method, self.pad_value,
+                                  self.out_dtype, None, None,
+                                  str(tenant), key)
+
+
+class PipeService:
+    """Accepts pipe-program requests and serves them batched.
+
+    ``execute=`` is the test seam: a callable ``(requests, budget) ->
+    results`` replacing :func:`repro.serve.coalesce.execute_batch` on
+    the worker threads (e.g. an artificially slow executor to exercise
+    shedding).  ``clock=`` feeds the coalescer's window deadlines.
+    """
+
+    def __init__(self, config: Optional[ServeConfig] = None, *,
+                 execute=None, clock=time.monotonic):
+        cfg = config if config is not None else ServeConfig()
+        if cfg.workers < 1:
+            raise ValueError(f"workers must be >= 1, got {cfg.workers}")
+        if cfg.dispatch_ahead < 0:
+            raise ValueError(f"dispatch_ahead must be >= 0, "
+                             f"got {cfg.dispatch_ahead}")
+        self.config = cfg
+        self._clock = clock
+        self._execute = execute if execute is not None else execute_batch
+        # custom executors have no dispatch/collect split — defer the
+        # whole call to the collect phase so the one-call-per-batch
+        # test seam keeps its shape
+        self._begin = (begin_batch if execute is None
+                       else lambda reqs, budget: lambda: execute(reqs, budget))
+        self.budget = (MemoryBudget(cfg.memory_budget)
+                       if cfg.memory_budget is not None else None)
+
+        # loop-owned state (every mutation happens on the loop thread)
+        self._queue = FairQueue(cfg.queue_depth, cfg.tenant_quota,
+                                cfg.shed_policy)
+        self._coal = Coalescer(cfg.max_batch, cfg.max_wait_ms / 1e3, clock)
+        self._admission = AdmissionController(cfg.max_cold_plans,
+                                              cfg.cold_policy)
+        self._ready: "deque[Batch]" = deque()
+        self._inflight = 0
+        self._outstanding = 0
+        self._draining = False
+        self._drained: Optional[threading.Event] = None
+        self._timer = None
+        #: submit → loop handoff: callers append (GIL-atomic) and wake
+        #: the loop only when no drain is already scheduled, so a burst
+        #: of submits costs one wakeup + one pump, not one per request
+        self._pending: "deque[Request]" = deque()
+        self._ingest_scheduled = False
+
+        self._ids = itertools.count()
+        self._closed = False
+        self._terminated = False
+        self._pool = ThreadPoolExecutor(max_workers=cfg.workers,
+                                        thread_name_prefix="repro-serve")
+        self._loop = asyncio.new_event_loop()
+        self._thread = threading.Thread(target=self._loop.run_forever,
+                                        name="repro-serve-loop", daemon=True)
+        self._thread.start()
+
+    # -- client API --------------------------------------------------------
+    def submit(self, P: Pipe, *, method: str = "auto", pad_value="edge",
+               out_dtype=None, tiles=None, memory_budget=None,
+               tenant: str = "default") -> Ticket:
+        """Enqueue one pipeline run; returns immediately with a
+        :class:`Ticket` whose ``result()`` blocks for the answer.
+
+        Validation (bad options, ``out_dtype`` on a state terminal,
+        tracer inputs) raises *here*, synchronously.  Backpressure
+        verdicts are asynchronous by nature — a shed request's ticket
+        raises :class:`~repro.serve.backpressure.ShedError`, a cold-plan
+        rejection :class:`~repro.serve.admission.ColdPlanOverload`.
+
+        The same ``(graph, shape, dtype, options)`` submitted while a
+        coalescing window is open joins it and shares one batched
+        dispatch; array-valued results are bit-identical to
+        ``P.run(...)``, ``moments`` states match to float tolerance
+        (DESIGN.md §15 records why).
+        """
+        if isinstance(P.x, jax.core.Tracer):
+            raise ValueError(
+                "PipeService serves concrete inputs; a traced pipeline "
+                "belongs inside its own jit, not on the request path")
+        if tiles is not None and memory_budget is not None:
+            raise ValueError("pass at most one of tiles= / "
+                             "memory_budget= per request")
+        # full validation in the caller's thread — plan_key_for builds
+        # the (normalized) options and runs the out_dtype/terminal check
+        key = _compile.plan_key_for(P, method=method, pad_value=pad_value,
+                                    out_dtype=out_dtype)
+        if not coalescible(P, tiles, memory_budget):
+            key = None
+        return self._enqueue(P, method, pad_value, out_dtype, tiles,
+                             memory_budget, str(tenant), key)
+
+    def register(self, P: Pipe, *, method: str = "auto", pad_value="edge",
+                 out_dtype=None) -> Program:
+        """Capture ``P``'s op chain as a :class:`Program` whose
+        ``submit(x)`` binds data only.  The template's input supplies
+        nothing but validation fodder; each submitted array may have any
+        shape/dtype the graph accepts (per-shape plan keys are cached).
+        Validation of the option set against the graph happens here,
+        synchronously — a bad ``out_dtype``/terminal combination never
+        reaches the request path."""
+        if self._closed:
+            raise ServiceClosed("register on a closed PipeService")
+        if P.batched:
+            raise ValueError("register takes an unbatched template graph "
+                             "(the service stacks the batch axis itself)")
+        _compile.plan_key_for(P, method=method, pad_value=pad_value,
+                              out_dtype=out_dtype)
+        return Program(self, P.ops, method, pad_value, out_dtype)
+
+    def _enqueue(self, P: Pipe, method, pad_value, out_dtype, tiles,
+                 memory_budget, tenant: str, key) -> Ticket:
+        if self._closed:
+            raise ServiceClosed("submit on a closed PipeService")
+        req = Request(id=next(self._ids), pipe=P, method=method,
+                      pad_value=pad_value, out_dtype=out_dtype,
+                      tiles=tiles, memory_budget=memory_budget,
+                      tenant=tenant, future=Future(),
+                      t_submit=self._clock(), key=key)
+        _counter("serve/submitted").inc()
+        self._pending.append(req)
+        if not self._ingest_scheduled:
+            # the drain resets the flag BEFORE popping, so a caller that
+            # reads a stale True has appended to a deque the in-progress
+            # drain is still emptying — no request is ever stranded
+            self._ingest_scheduled = True
+            self._loop.call_soon_threadsafe(self._drain_pending)
+        return Ticket(req)
+
+    def warmup(self, P: Pipe, batch_sizes: Optional[Tuple[int, ...]] = None,
+               *, method: str = "auto", pad_value="edge",
+               out_dtype=None) -> int:
+        """Pre-trace ``P``'s executors at the given batch sizes (default
+        solo + ``max_batch``) by running zeros of the template's shape
+        through the real batch path, then mark those keys warm for
+        admission.  Returns the number of executors traced.  Synchronous
+        — call before opening the doors, so the first real requests hit
+        compiled plans."""
+        if P.batched:
+            raise ValueError("warmup takes an unbatched template graph "
+                             "(the service stacks the batch axis itself)")
+        key = _compile.plan_key_for(P, method=method, pad_value=pad_value,
+                                    out_dtype=out_dtype)
+        sizes = sorted({int(b) for b in
+                        (batch_sizes if batch_sizes is not None
+                         else (1, self.config.max_batch))})
+        if any(b < 1 for b in sizes):
+            raise ValueError(f"batch sizes must be >= 1, got {sizes}")
+        zeros = jnp.zeros(tuple(P.x.shape), jnp.dtype(P.x.dtype))
+        P0 = Pipe(zeros, batched=False, ops=P.ops)
+        for B in sizes:
+            reqs = [Request(id=-1, pipe=P0, method=method,
+                            pad_value=pad_value, out_dtype=out_dtype,
+                            tiles=None, memory_budget=None,
+                            tenant="warmup", future=Future(),
+                            t_submit=self._clock(), key=key)
+                    for _ in range(B)]
+            with _span("serve/warmup", batch=B):
+                self._execute(reqs, self.budget)
+            akey = (key, B)
+            self._loop.call_soon_threadsafe(self._admission.release, akey)
+        _counter("serve/warmed").inc(len(sizes))
+        return len(sizes)
+
+    def stats(self) -> dict:
+        """A loop-consistent snapshot of the service's moving parts."""
+        box, got = {}, threading.Event()
+
+        def grab():
+            box.update(
+                queue_depth=len(self._queue),
+                queued_by_tenant=self._queue.depths(),
+                staged=self._coal.pending,
+                ready_batches=len(self._ready),
+                inflight=self._inflight,
+                outstanding=self._outstanding,
+                warm_keys=self._admission.warm_keys(),
+                closed=self._closed)
+            got.set()
+
+        self._loop.call_soon_threadsafe(grab)
+        got.wait(5.0)
+        if self.budget is not None:
+            box["budget"] = {"total": self.budget.total,
+                             "in_use": self.budget.in_use,
+                             "peak": self.budget.peak,
+                             "waits": self.budget.waits}
+        return box
+
+    def close(self, drain: bool = True,
+              timeout: Optional[float] = None) -> None:
+        """Shut down.  ``drain=True`` (default) first serves everything
+        already accepted — queued, staged in open windows, and in flight
+        — then stops; ``drain=False`` fails all pending tickets with
+        :class:`ServiceClosed` (in-flight batches still finish).  New
+        ``submit`` calls raise immediately either way.  Idempotent."""
+        if self._terminated:
+            return
+        self._closed = True
+        done = threading.Event()
+        self._loop.call_soon_threadsafe(self._begin_close, drain, done)
+        done.wait(timeout)
+        self._terminated = True
+        self._loop.call_soon_threadsafe(self._loop.stop)
+        self._thread.join(timeout if timeout is not None else 30.0)
+        self._pool.shutdown(wait=True)
+        self._loop.close()
+
+    def __enter__(self) -> "PipeService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(drain=exc == (None, None, None))
+
+    # -- loop side ---------------------------------------------------------
+    def _drain_pending(self) -> None:
+        self._ingest_scheduled = False
+        ingested = False
+        while self._pending:
+            req = self._pending.popleft()
+            if len(self._queue) >= self.config.queue_depth:
+                # a burst larger than the queue: give staging/dispatch a
+                # chance to absorb before shedding, exactly as if the
+                # requests had arrived one pump apart
+                self._pump()
+            self._ingest(req)
+            ingested = True
+        if ingested:
+            self._pump()
+
+    def _ingest(self, req: Request) -> None:
+        if self._draining:
+            req.future.set_exception(
+                ServiceClosed("service closed while request in transit"))
+            return
+        try:
+            displaced = self._queue.put(req, req.tenant)
+        except ShedError as e:
+            _counter("serve/shed").inc()
+            req.future.set_exception(e)
+            return
+        self._outstanding += 1
+        if displaced is not None:
+            self._outstanding -= 1
+            _counter("serve/shed").inc()
+            displaced.future.set_exception(ShedError(
+                f"displaced by a newer request under shed-largest "
+                f"(queue depth {self._queue.depth})", "queue-full"))
+
+    def _staged(self) -> int:
+        """Requests past the queue but not yet dispatched: open windows
+        plus closed-but-undispatched batches.  The staging cap counts
+        BOTH — otherwise small-window configs would leak the whole
+        queue into the unbounded ready deque and the shed threshold
+        would never be reached."""
+        return self._coal.pending + sum(len(b) for b in self._ready)
+
+    def _pump(self) -> None:
+        now = self._clock()
+        self._ready.extend(self._coal.poll(now))
+        # stage: keep the coalescer fed, but bounded — the queue is the
+        # backpressure surface, not the staging area.  The ahead slots
+        # need ready batches to prime, so staging scales with them.
+        cap = ((2 * self.config.workers + self.config.dispatch_ahead)
+               * self.config.max_batch)
+        while len(self._queue) and self._staged() < cap:
+            req, _tenant = self._queue.get()
+            self._ready.extend(self._coal.offer(req))
+        if self._draining:
+            # no point waiting out window deadlines during drain
+            self._ready.extend(self._coal.flush_all())
+        _gauge("serve/queue_depth").set(len(self._queue))
+
+        slots = self.config.workers + self.config.dispatch_ahead
+        picked = []
+        while self._inflight + len(picked) < slots and self._ready:
+            choice = None
+            for b in list(self._ready):
+                akey = (b.key, len(b)) if b.key is not None else None
+                if akey is None:
+                    choice = (b, None)
+                    break
+                verdict = self._admission.try_acquire(
+                    akey, batch_cache_key(b.requests))
+                if verdict == "run":
+                    choice = (b, akey)
+                    break
+                if verdict == "reject":
+                    self._ready.remove(b)
+                    self._outstanding -= len(b)
+                    _counter("serve/rejected_cold").inc(len(b))
+                    err = ColdPlanOverload(
+                        f"{self._admission.max_cold} cold plans already "
+                        f"compiling; retry once the service warms")
+                    for r in b.requests:
+                        r.future.set_exception(err)
+                # "wait": parked in ready until a release re-pumps
+            if choice is None:
+                break
+            self._ready.remove(choice[0])
+            picked.append(choice)
+        self._dispatch(picked)
+
+        self._arm_timer()
+        if (self._draining and self._drained is not None
+                and self._outstanding == 0):
+            self._drained.set()
+
+    def _arm_timer(self) -> None:
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+        dl = self._coal.next_deadline()
+        if dl is not None:
+            delay = max(0.0, dl - self._clock())
+            self._timer = self._loop.call_later(delay, self._on_timer)
+
+    def _on_timer(self) -> None:
+        self._timer = None
+        self._pump()
+
+    def _dispatch(self, picked) -> None:
+        """Send this pump's admitted ``(batch, akey)`` picks to the
+        executor, split round-robin into at most ``workers`` groups —
+        each group is ONE executor task whose worker *begins* every
+        batch before collecting any, so the device pipelines the
+        dispatches (:func:`~repro.serve.coalesce.begin_batch`)."""
+        if not picked:
+            return
+        for b, _akey in picked:
+            self._inflight += 1
+            _counter("serve/batches").inc()
+            if len(b) > 1:
+                _counter("serve/coalesced").inc(len(b) - 1)
+            _histogram("serve/batch_size", BATCH_SIZE_EDGES).observe(len(b))
+        _gauge("serve/inflight").set(self._inflight)
+        ngroups = min(len(picked), self.config.workers)
+        for i in range(ngroups):
+            self._pool.submit(self._run_group, picked[i::ngroups])
+
+    def _run_group(self, group) -> None:  # worker thread
+        """Begin every batch in the group (async dispatch — device
+        work for batch *i+1* launches while batch *i* still computes),
+        then collect and complete each in begin order.  Tickets resolve
+        right here on the worker: a caller blocked in ``Ticket.result``
+        wakes the moment its batch finishes, without waiting for the
+        completion to hop through the event loop first.  The loop-owned
+        bookkeeping (in-flight count, admission release, next pump) is
+        scheduled *before* the futures resolve, so anything a woken
+        caller then schedules onto the loop (``stats()``, ``close()``)
+        is ordered after it.  Metric objects are internally locked —
+        safe off-loop."""
+        begun = []
+        for b, akey in group:
+            try:
+                begun.append((b, akey, self._begin(b.requests, self.budget),
+                              None))
+            except BaseException as e:  # noqa: BLE001 — routed to tickets
+                begun.append((b, akey, None, e))
+        for b, akey, collect, error in begun:
+            if error is None:
+                try:
+                    with _span("serve/batch", size=len(b),
+                               coalesced=int(b.key is not None)):
+                        results = collect()
+                except BaseException as e:  # noqa: BLE001 — to tickets
+                    error = e
+            self._loop.call_soon_threadsafe(self._complete, b, akey)
+            if error is not None:
+                _counter("serve/failed").inc(len(b))
+                for r in b.requests:
+                    r.future.set_exception(error)
+                continue
+            now = self._clock()
+            lat_ms = _histogram("serve/latency_ms")
+            _counter("serve/served").inc(len(b))
+            for r, res in zip(b.requests, results):
+                r.latency = now - r.t_submit
+                lat_ms.observe(r.latency * 1e3)
+                r.future.set_result(res)
+
+    def _complete(self, b: Batch, akey) -> None:
+        self._inflight -= 1
+        _gauge("serve/inflight").set(self._inflight)
+        if akey is not None:
+            # even a failed dispatch leaves the executor interned — the
+            # plan cache built it before the run could fail
+            self._admission.release(akey)
+        self._outstanding -= len(b)
+        self._pump()
+
+    def _begin_close(self, drain: bool, done: threading.Event) -> None:
+        # in-transit submits first: accept them ahead of the drain flag
+        # so a ticket handed out before close() is served, not orphaned
+        while self._pending:
+            self._ingest(self._pending.popleft())
+        self._draining = True
+        self._drained = done
+        if not drain:
+            err = ServiceClosed("service closed without draining")
+            for req, _tenant in self._queue.drain():
+                self._outstanding -= 1
+                req.future.set_exception(err)
+            for b in (self._coal.flush_all() + list(self._ready)):
+                self._outstanding -= len(b)
+                for r in b.requests:
+                    r.future.set_exception(err)
+            self._ready.clear()
+        self._pump()

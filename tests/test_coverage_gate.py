@@ -51,7 +51,8 @@ def test_gate_passes_on_source_relative_report(tmp_path):
     body = (_cls("pipe/a.py", {i: 1 for i in range(1, 20)})
             + _cls("stats/b.py", {i: 1 for i in range(1, 20)})
             + _cls("runtime/c.py", {i: 1 for i in range(1, 20)})
-            + _cls("obs/d.py", {i: 1 for i in range(1, 20)}))
+            + _cls("obs/d.py", {i: 1 for i in range(1, 20)})
+            + _cls("serve/e.py", {i: 1 for i in range(1, 20)}))
     xml = _xml(tmp_path, body, sources=["/ci/src/repro"])
     assert main(["--xml", xml]) == 0
 
@@ -60,7 +61,8 @@ def test_gate_passes_above_floor(tmp_path):
     body = (_cls("src/repro/pipe/a.py", {i: 1 for i in range(1, 20)})
             + _cls("src/repro/stats/b.py", {i: 1 for i in range(1, 20)})
             + _cls("src/repro/runtime/c.py", {i: 1 for i in range(1, 20)})
-            + _cls("src/repro/obs/d.py", {i: 1 for i in range(1, 20)}))
+            + _cls("src/repro/obs/d.py", {i: 1 for i in range(1, 20)})
+            + _cls("src/repro/serve/e.py", {i: 1 for i in range(1, 20)}))
     xml = _xml(tmp_path, body)
     assert main(["--xml", xml]) == 0
 
@@ -69,7 +71,8 @@ def test_gate_fails_below_floor(tmp_path):
     body = (_cls("src/repro/pipe/a.py", {1: 1, 2: 0, 3: 0, 4: 0})
             + _cls("src/repro/stats/b.py", {i: 1 for i in range(1, 10)})
             + _cls("src/repro/runtime/c.py", {i: 1 for i in range(1, 10)})
-            + _cls("src/repro/obs/d.py", {i: 1 for i in range(1, 10)}))
+            + _cls("src/repro/obs/d.py", {i: 1 for i in range(1, 10)})
+            + _cls("src/repro/serve/e.py", {i: 1 for i in range(1, 10)}))
     xml = _xml(tmp_path, body)
     assert main(["--xml", xml]) == 1
 
@@ -91,7 +94,8 @@ def test_floor_override(tmp_path):
     body = (_cls("src/repro/pipe/a.py", {1: 1, 2: 1, 3: 0, 4: 0})  # 50%
             + _cls("src/repro/stats/b.py", {i: 1 for i in range(1, 10)})
             + _cls("src/repro/runtime/c.py", {i: 1 for i in range(1, 10)})
-            + _cls("src/repro/obs/d.py", {i: 1 for i in range(1, 10)}))
+            + _cls("src/repro/obs/d.py", {i: 1 for i in range(1, 10)})
+            + _cls("src/repro/serve/e.py", {i: 1 for i in range(1, 10)}))
     xml = _xml(tmp_path, body)
     assert main(["--xml", xml, "--floor", "repro/pipe/=40"]) == 0
     assert main(["--xml", xml, "--floor", "repro/pipe/=60"]) == 1

@@ -645,3 +645,37 @@ def test_pipe_run_rejects_mesh_without_tiles(rng):
     with pytest.raises(ValueError, match="tiled"):
         pipe(x).gaussian(1.0, op_shape=3).run(mesh=object(),
                                               axis_name="t")
+
+
+def test_linear_op_weights_frozen_copy():
+    """Mutating the caller's weight buffer after building a graph must
+    not desync a cached plan from the digest it interned under: ops take
+    a private read-only copy (PR-9 aliasing fix)."""
+    import numpy as np
+
+    from repro.pipe.graph import pipe
+
+    x = np.zeros((8, 8), np.float32)
+    src = np.ones((25,), np.float32)
+    P = pipe(x).stencil(5, src)
+    sig_before = P.signature()
+    src[:] = 99.0
+    op = P.ops[0]
+    assert float(op.weights[0, 0]) == 1.0
+    assert not op.weights.flags.writeable
+    assert P.signature() == sig_before
+    with np.testing.assert_raises(ValueError):
+        op.weights[0, 0] = 5.0
+
+
+def test_zscore_sigma_frozen_copy():
+    import numpy as np
+
+    from repro.pipe.graph import pipe
+
+    x = np.zeros((8, 8), np.float32)
+    sig = np.array([1.0, 2.0])
+    P = pipe(x).zscore(5, weights="gaussian", sigma=sig)
+    sig[:] = 7.0
+    assert float(P.ops[0].sigma[0]) == 1.0
+    assert not P.ops[0].sigma.flags.writeable

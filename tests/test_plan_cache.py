@@ -137,3 +137,121 @@ def test_traced_inputs_bypass_cache():
 
     f(x)
     assert plan_cache_stats()["size"] == 0
+
+
+def test_concurrent_interning_builds_each_key_once():
+    """N threads hammering overlapping keys: the per-key build latch must
+    yield exactly one build per distinct key, with hits + misses adding
+    up and no counter updates lost (the PR-9 thread-safety contract the
+    serving tier depends on)."""
+    import threading
+
+    from repro.core.plan import _intern
+
+    n_threads, n_keys, rounds = 8, 4, 25
+    builds = {k: 0 for k in range(n_keys)}
+    build_lock = threading.Lock()
+
+    class Dummy:
+        _hits = 0
+
+    def make_build(k):
+        def build():
+            with build_lock:
+                builds[k] += 1
+            return Dummy()
+        return build
+
+    start = threading.Barrier(n_threads)
+    errors = []
+
+    def worker(tid):
+        try:
+            start.wait()
+            for r in range(rounds):
+                k = (tid + r) % n_keys
+                _intern(("stress", k), make_build(k))
+        except BaseException as e:  # pragma: no cover - diagnostic
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30.0)
+    assert not errors
+    assert all(b == 1 for b in builds.values()), builds
+    s = plan_cache_stats()
+    assert s["misses"] == n_keys
+    assert s["hits"] == n_threads * rounds - n_keys
+
+
+def test_concurrent_builder_failure_hands_latch_to_waiter():
+    """A builder that raises must release the per-key latch so a waiting
+    thread retries the build instead of hanging forever."""
+    import threading
+
+    from repro.core.plan import _intern
+
+    attempts = []
+    gate = threading.Event()
+
+    class Dummy:
+        _hits = 0
+
+    def flaky_build():
+        attempts.append(threading.current_thread().name)
+        if len(attempts) == 1:
+            gate.set()           # let the second thread pile on
+            raise RuntimeError("injected build failure")
+        return Dummy()
+
+    results, errors = [], []
+
+    def first():
+        try:
+            _intern(("flaky",), flaky_build)
+        except RuntimeError as e:
+            errors.append(e)
+
+    def second():
+        gate.wait(10.0)
+        results.append(_intern(("flaky",), flaky_build))
+
+    t1 = threading.Thread(target=first, name="t1")
+    t2 = threading.Thread(target=second, name="t2")
+    t1.start(); t2.start()
+    t1.join(30.0); t2.join(30.0)
+    assert len(errors) == 1 and "injected" in str(errors[0])
+    assert len(results) == 1 and len(attempts) == 2
+
+
+def test_plan_cached_probe_does_not_touch_lru_or_counters():
+    from repro.core.plan import plan_cached
+
+    p = get_plan((8, 9), jnp.float32, 3, 1, "same", 1, 0.0, "lax", False)
+    key = p.key
+    before = plan_cache_stats()
+    assert plan_cached(key) is p
+    assert plan_cached(("nope",)) is None
+    assert plan_cache_stats() == before
+
+
+def test_exec_options_normalize_on_direct_construction():
+    """Direct construction must be exactly as validated/canonical as
+    ExecOptions.make — a cached plan's stored options can never hold a
+    non-normalized value (the PR-9 aliasing fix)."""
+    from repro.core.plan import ExecOptions
+
+    a = ExecOptions(pad_value=0)
+    b = ExecOptions.make(pad_value=0.0)
+    assert a == b and hash(a) == hash(b)
+    assert ExecOptions(out_dtype=np.float32).out_dtype == "float32"
+    assert ExecOptions(batched=1).batched is True
+    with pytest.raises(ValueError, match="unknown method"):
+        ExecOptions(method="nope")
+    with pytest.raises(ValueError, match="not a dtype"):
+        ExecOptions(out_dtype=object())
+    with pytest.raises(ValueError):
+        ExecOptions(pad_value="not-a-mode")

@@ -1,0 +1,742 @@
+"""repro.serve: coalescing, admission, backpressure, the service loop.
+
+Unit layers (Coalescer / FairQueue / AdmissionController / MemoryBudget)
+are plain data structures tested with a fake clock — no sleeping, no
+threads.  The PipeService end-to-end tests run the real loop + worker
+pool on small graphs; the equality contract is asserted exactly as
+DESIGN.md §15 states it: array outputs bit-identical to direct
+``Pipe.run``, moments states allclose (batched folding reorders the
+chunked-centered merge), hist counts bit-identical (integer-valued
+float32 sums).
+"""
+import json
+import threading
+import time
+from concurrent.futures import Future
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.plan import clear_plan_cache
+from repro.pipe.graph import Pipe, pipe
+from repro.serve.admission import (AdmissionController, ColdPlanOverload,
+                                   MemoryBudget)
+from repro.serve.backpressure import FairQueue, ShedError
+from repro.serve.coalesce import (Batch, Coalescer, Request, coalescible,
+                                  execute_batch)
+from repro.serve.service import PipeService, ServeConfig, ServiceClosed
+
+
+@pytest.fixture(autouse=True)
+def fresh_cache():
+    clear_plan_cache()
+    yield
+    clear_plan_cache()
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def _req(key=("k",), rid=0, pipe_=None, **kw):
+    """A minimal Request for data-structure tests (no execution)."""
+    defaults = dict(method="auto", pad_value="edge", out_dtype=None,
+                    tiles=None, memory_budget=None, tenant="t",
+                    future=Future(), t_submit=0.0)
+    defaults.update(kw)
+    return Request(id=rid, pipe=pipe_, key=key, **defaults)
+
+
+def _exec_req(P, **kw):
+    """A Request wired for real execution through execute_batch."""
+    return _req(key=("x",), pipe_=P, **kw)
+
+
+# -- Coalescer ---------------------------------------------------------------
+
+
+def test_window_fills_to_cap_and_closes():
+    clk = FakeClock()
+    c = Coalescer(max_batch=3, max_wait=1.0, clock=clk)
+    assert c.offer(_req(rid=0)) == []
+    assert c.offer(_req(rid=1)) == []
+    assert c.pending == 2 and c.has_open(("k",))
+    (b,) = c.offer(_req(rid=2))
+    assert len(b) == 3 and b.key == ("k",)
+    assert c.pending == 0 and not c.has_open(("k",))
+
+
+def test_window_deadline_expires_via_poll():
+    clk = FakeClock(10.0)
+    c = Coalescer(max_batch=8, max_wait=0.5, clock=clk)
+    c.offer(_req(rid=0))
+    assert c.next_deadline() == 10.5
+    assert c.poll(10.4) == []
+    clk.t = 10.6
+    (b,) = c.poll()
+    assert [r.id for r in b.requests] == [0]
+    assert c.next_deadline() is None
+
+
+def test_deadline_set_by_first_request_of_window():
+    clk = FakeClock()
+    c = Coalescer(max_batch=8, max_wait=1.0, clock=clk)
+    c.offer(_req(rid=0))
+    clk.t = 0.9
+    c.offer(_req(rid=1))  # joins; does NOT extend the deadline
+    assert c.next_deadline() == 1.0
+    (b,) = c.poll(1.0)
+    assert len(b) == 2
+
+
+def test_distinct_keys_get_distinct_windows():
+    clk = FakeClock()
+    c = Coalescer(max_batch=2, max_wait=1.0, clock=clk)
+    c.offer(_req(key=("a",), rid=0))
+    c.offer(_req(key=("b",), rid=1))
+    assert c.pending == 2
+    (b,) = c.offer(_req(key=("a",), rid=2))
+    assert b.key == ("a",) and [r.id for r in b.requests] == [0, 2]
+    assert c.has_open(("b",))
+
+
+def test_non_coalescible_request_dispatches_solo():
+    c = Coalescer(max_batch=8, max_wait=1.0, clock=FakeClock())
+    (b,) = c.offer(_req(key=None, rid=7))
+    assert b.key is None and len(b) == 1
+    assert c.pending == 0
+
+
+def test_flush_all_closes_every_window():
+    c = Coalescer(max_batch=8, max_wait=1.0, clock=FakeClock())
+    c.offer(_req(key=("a",)))
+    c.offer(_req(key=("b",)))
+    bs = c.flush_all()
+    assert sorted(b.key for b in bs) == [("a",), ("b",)]
+    assert c.pending == 0 and c.next_deadline() is None
+
+
+def test_coalescible_predicate():
+    x = np.zeros((4, 4), np.float32)
+    P = pipe(x).gaussian(1.0, op_shape=3)
+    assert coalescible(P)
+    assert not coalescible(Pipe(np.zeros((2, 4, 4), np.float32), True,
+                                P.ops))
+    assert not coalescible(P, tiles=2)
+    assert not coalescible(P, memory_budget=1 << 20)
+
+
+# -- execute_batch unstacking ------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["lax", "materialize"])
+def test_batched_arrays_bit_identical(method):
+    xs = [_rng(i).normal(size=(16, 16)).astype(np.float32)
+          for i in range(4)]
+    reqs = [_exec_req(pipe(x).gaussian(1.0, op_shape=3).gradient(),
+                      method=method) for x in xs]
+    outs = execute_batch(reqs)
+    for x, o in zip(xs, outs):
+        direct = pipe(x).gaussian(1.0, op_shape=3).gradient().run(
+            method=method)
+        assert np.array_equal(np.asarray(direct), np.asarray(o))
+
+
+def test_batched_moments_allclose_and_sliced():
+    xs = [_rng(i).normal(size=(16, 16)).astype(np.float32)
+          for i in range(3)]
+    reqs = [_exec_req(pipe(x).gaussian(1.0, op_shape=3).moments())
+            for x in xs]
+    outs = execute_batch(reqs)
+    for x, st in zip(xs, outs):
+        direct = pipe(x).gaussian(1.0, op_shape=3).moments().run()
+        assert np.asarray(st.count).shape == np.asarray(direct.count).shape
+        np.testing.assert_allclose(np.asarray(st.mean),
+                                   np.asarray(direct.mean), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(st.m2),
+                                   np.asarray(direct.m2), rtol=1e-4)
+
+
+def test_batched_hist_counts_bit_identical():
+    xs = [_rng(i).normal(size=(16, 16)).astype(np.float32)
+          for i in range(3)]
+    reqs = [_exec_req(pipe(x).gaussian(1.0, op_shape=3)
+                      .hist(16, range=(-3, 3))) for x in xs]
+    outs = execute_batch(reqs)
+    for x, h in zip(xs, outs):
+        direct = pipe(x).gaussian(1.0, op_shape=3).hist(
+            16, range=(-3, 3)).run()
+        # histogram counts are small-integer-valued f32 sums of the SAME
+        # values — bit-identical even through the vmapped terminal
+        assert np.array_equal(np.asarray(direct.counts),
+                              np.asarray(h.counts))
+        assert (h.lo, h.hi) == (direct.lo, direct.hi)
+
+
+def test_batched_cov_sliced_per_request():
+    xs = [_rng(i).normal(size=(12, 12)).astype(np.float32)
+          for i in range(3)]
+    reqs = [_exec_req(pipe(x).gradient().cov()) for x in xs]
+    outs = execute_batch(reqs)
+    for x, st in zip(xs, outs):
+        direct = pipe(x).gradient().cov().run()
+        np.testing.assert_allclose(np.asarray(st.comoment),
+                                   np.asarray(direct.comoment),
+                                   rtol=1e-4, atol=1e-4)
+        assert float(st.count) == float(direct.count)
+
+
+def test_single_request_takes_direct_path():
+    x = _rng().normal(size=(16, 16)).astype(np.float32)
+    (out,) = execute_batch([_exec_req(pipe(x).gaussian(1.0, op_shape=3))])
+    assert np.array_equal(
+        np.asarray(pipe(x).gaussian(1.0, op_shape=3).run()),
+        np.asarray(out))
+
+
+def test_single_tiled_request_reserves_budget():
+    x = _rng().normal(size=(32, 32)).astype(np.float32)
+    P = pipe(x).gaussian(1.0, op_shape=3)
+    budget = MemoryBudget(1 << 30)
+    req = _req(key=None, pipe_=P, tiles=2)
+    (out,) = execute_batch([req], budget=budget)
+    assert np.array_equal(np.asarray(P.run()), np.asarray(out))
+    assert budget.in_use == 0 and budget.peak > 0
+
+
+# -- FairQueue ---------------------------------------------------------------
+
+
+def test_fair_queue_round_robin_across_tenants():
+    q = FairQueue(depth=16)
+    for i in range(3):
+        q.put(("a", i), "alice")
+    for i in range(3):
+        q.put(("b", i), "bob")
+    order = [q.get() for _ in range(6)]
+    assert [t for _, t in order] == ["alice", "bob"] * 3
+    assert [v for (_, v), _ in order] == [0, 0, 1, 1, 2, 2]
+
+
+def test_fair_queue_depth_sheds_reject_new():
+    q = FairQueue(depth=2)
+    q.put(1, "a")
+    q.put(2, "b")
+    with pytest.raises(ShedError) as ei:
+        q.put(3, "c")
+    assert ei.value.reason == "queue-full"
+    assert len(q) == 2
+
+
+def test_fair_queue_tenant_quota_rejects_regardless_of_policy():
+    q = FairQueue(depth=16, tenant_quota=2, policy="shed-largest")
+    q.put(1, "flood")
+    q.put(2, "flood")
+    with pytest.raises(ShedError) as ei:
+        q.put(3, "flood")
+    assert ei.value.reason == "tenant-quota"
+
+
+def test_fair_queue_shed_largest_displaces_deepest_lane():
+    q = FairQueue(depth=3, policy="shed-largest")
+    q.put("f1", "flood")
+    q.put("f2", "flood")
+    q.put("v1", "victimless")
+    displaced = q.put("v2", "late-tenant")
+    assert displaced == "f2"  # newest item of the deepest lane
+    assert len(q) == 3
+    assert q.depths() == {"flood": 1, "victimless": 1, "late-tenant": 1}
+
+
+def test_fair_queue_shed_largest_flooder_shed_itself():
+    q = FairQueue(depth=2, policy="shed-largest")
+    q.put("f1", "flood")
+    q.put("f2", "flood")
+    displaced = q.put("f3", "flood")
+    assert displaced == "f2"
+    items = [q.get()[0] for _ in range(2)]
+    assert items == ["f1", "f3"]
+
+
+def test_fair_queue_putback_preserves_fifo_front():
+    q = FairQueue(depth=8)
+    q.put(1, "a")
+    q.put(2, "a")
+    item, t = q.get()
+    q.putback(item, t)
+    assert q.get() == (1, "a")
+    assert q.get() == (2, "a")
+
+
+def test_fair_queue_drain_and_validation():
+    q = FairQueue(depth=4)
+    q.put(1, "a")
+    q.put(2, "b")
+    assert q.drain() == [(1, "a"), (2, "b")]
+    assert len(q) == 0
+    with pytest.raises(IndexError):
+        q.get()
+    with pytest.raises(ValueError):
+        FairQueue(depth=0)
+    with pytest.raises(ValueError):
+        FairQueue(depth=4, policy="nope")
+
+
+# -- AdmissionController -----------------------------------------------------
+
+
+def test_admission_warm_key_runs_immediately():
+    a = AdmissionController(max_cold=1)
+    assert a.try_acquire("k1") == "run"   # takes the cold slot
+    a.release("k1")
+    assert a.try_acquire("k1") == "run"   # warm now — no slot needed
+    assert a.try_acquire("k2") == "run"   # slot free again
+
+
+def test_admission_same_cold_key_waits():
+    a = AdmissionController(max_cold=2)
+    assert a.try_acquire("k") == "run"
+    assert a.try_acquire("k") == "wait"   # duplicate build would block
+    a.release("k")
+    assert a.try_acquire("k") == "run"
+
+
+def test_admission_over_cap_queue_vs_reject():
+    a = AdmissionController(max_cold=1, policy="queue")
+    a.try_acquire("k1")
+    assert a.try_acquire("k2") == "wait"
+    r = AdmissionController(max_cold=1, policy="reject")
+    r.try_acquire("k1")
+    assert r.try_acquire("k2") == "reject"
+
+
+def test_admission_plan_cache_probe():
+    from repro.core.plan import get_plan
+
+    p = get_plan((8, 9), jnp.float32, 3, 1, "same", 1, 0.0, "lax", False)
+    a = AdmissionController(max_cold=1)
+    a.try_acquire("other")  # slot taken
+    # a key whose executor is already interned is warm via the probe
+    assert a.try_acquire("k", cache_key=p.key) == "run"
+    assert a.try_acquire("k2", cache_key=("missing",)) == "wait"
+
+
+# -- MemoryBudget ------------------------------------------------------------
+
+
+def test_memory_budget_accounting_and_peak():
+    b = MemoryBudget(100)
+    with b.reserve(60):
+        assert b.in_use == 60
+        with b.reserve(40):
+            assert b.in_use == 100
+    assert b.in_use == 0 and b.peak == 100 and b.waits == 0
+
+
+def test_memory_budget_blocks_until_release():
+    b = MemoryBudget(100)
+    order = []
+    entered = threading.Event()
+    release = threading.Event()
+
+    def holder():
+        with b.reserve(80):
+            entered.set()
+            release.wait(10.0)
+        order.append("released")
+
+    def waiter():
+        entered.wait(10.0)
+        with b.reserve(50):
+            order.append("acquired")
+
+    th, tw = threading.Thread(target=holder), threading.Thread(target=waiter)
+    th.start(); tw.start()
+    time.sleep(0.05)
+    assert order == []  # waiter must be blocked
+    release.set()
+    th.join(10.0); tw.join(10.0)
+    assert order == ["released", "acquired"]
+    assert b.waits == 1 and b.in_use == 0
+
+
+def test_memory_budget_timeout():
+    b = MemoryBudget(100)
+    with b.reserve(100):
+        with pytest.raises(TimeoutError):
+            with b.reserve(1, timeout=0.01):
+                pass
+    assert b.in_use == 0
+
+
+def test_memory_budget_oversized_admits_only_alone():
+    b = MemoryBudget(100)
+    with b.reserve(150):  # alone: best effort beats deadlock
+        assert b.in_use == 150
+        with pytest.raises(TimeoutError):
+            with b.reserve(1, timeout=0.01):
+                pass
+    assert b.in_use == 0
+
+
+# -- PipeService end-to-end --------------------------------------------------
+
+
+def _svc(**kw):
+    return PipeService(ServeConfig(**kw))
+
+
+def test_service_coalesces_and_serves_bit_identical():
+    xs = [_rng(i).normal(size=(16, 16)).astype(np.float32)
+          for i in range(8)]
+    g = lambda x: pipe(x).gaussian(1.0, op_shape=3).gradient()
+    svc = _svc(max_batch=8, max_wait_ms=50.0)
+    try:
+        svc.warmup(g(xs[0]))
+        tickets = [svc.submit(g(x)) for x in xs]
+        for x, t in zip(xs, tickets):
+            assert np.array_equal(np.asarray(g(x).run()),
+                                  np.asarray(t.result(60)))
+            assert t.latency is not None and t.latency >= 0
+        st = svc.stats()
+        assert st["outstanding"] == 0 and st["warm_keys"] >= 2
+    finally:
+        svc.close()
+
+
+def test_service_moments_allclose():
+    xs = [_rng(i).normal(size=(16, 16)).astype(np.float32)
+          for i in range(4)]
+    g = lambda x: pipe(x).gaussian(1.0, op_shape=3).moments()
+    svc = _svc(max_batch=4, max_wait_ms=50.0)
+    try:
+        tickets = [svc.submit(g(x)) for x in xs]
+        for x, t in zip(xs, tickets):
+            direct = g(x).run()
+            st = t.result(60)
+            np.testing.assert_allclose(np.asarray(st.mean),
+                                       np.asarray(direct.mean), rtol=1e-5)
+    finally:
+        svc.close()
+
+
+def test_service_sheds_above_threshold_and_serves_below():
+    """workers=1 + a gated executor: capacity = dispatch slots
+    (workers 1 + dispatch_ahead 0 = 1) + staging(2) + queue(2); the
+    requests beyond that shed, everything else serves."""
+    started = threading.Event()
+    release = threading.Event()
+
+    def gated(reqs, budget):
+        started.set()
+        assert release.wait(30.0)
+        return execute_batch(reqs, budget)
+
+    x = _rng().normal(size=(8, 8)).astype(np.float32)
+    g = lambda: pipe(x).gaussian(1.0, op_shape=3)
+    svc = PipeService(ServeConfig(max_batch=1, max_wait_ms=0.0, workers=1,
+                                  dispatch_ahead=0, queue_depth=2),
+                      execute=gated)
+    try:
+        tickets = [svc.submit(g()) for _ in range(5)]  # fills capacity
+        assert started.wait(30.0)
+        shed_ticket = svc.submit(g())                  # over threshold
+        with pytest.raises(ShedError):
+            shed_ticket.result(30)
+        release.set()
+        for t in tickets:                              # zero drops below
+            assert t.exception(60) is None
+    finally:
+        release.set()
+        svc.close()
+
+
+def test_service_drain_on_close_serves_everything_queued():
+    xs = [_rng(i).normal(size=(12, 12)).astype(np.float32)
+          for i in range(6)]
+    g = lambda x: pipe(x).gaussian(1.0, op_shape=3)
+    svc = _svc(max_batch=8, max_wait_ms=10_000.0)  # window would wait 10s
+    tickets = [svc.submit(g(x)) for x in xs]
+    svc.close(drain=True, timeout=120.0)           # must flush, not wait
+    for x, t in zip(xs, tickets):
+        assert np.array_equal(np.asarray(g(x).run()),
+                              np.asarray(t.result(1)))
+
+
+def test_service_close_without_drain_fails_pending():
+    x = _rng().normal(size=(8, 8)).astype(np.float32)
+    svc = _svc(max_batch=8, max_wait_ms=10_000.0, workers=1)
+    t = svc.submit(pipe(x).gaussian(1.0, op_shape=3))
+    svc.close(drain=False, timeout=60.0)
+    assert isinstance(t.exception(30), ServiceClosed)
+
+
+def test_submit_after_close_raises():
+    svc = _svc()
+    svc.close()
+    x = np.zeros((4, 4), np.float32)
+    with pytest.raises(ServiceClosed):
+        svc.submit(pipe(x).gaussian(1.0, op_shape=3))
+    svc.close()  # idempotent
+
+
+def test_submit_validates_synchronously():
+    svc = _svc()
+    try:
+        x = np.zeros((8, 8), np.float32)
+        with pytest.raises(ValueError, match="out_dtype"):
+            svc.submit(pipe(x).moments(), out_dtype=np.float64)
+        with pytest.raises(ValueError, match="unknown method"):
+            svc.submit(pipe(x).gaussian(1.0, op_shape=3), method="nope")
+        with pytest.raises(ValueError, match="at most one"):
+            svc.submit(pipe(x).gaussian(1.0, op_shape=3), tiles=2,
+                       memory_budget=1 << 20)
+        with pytest.raises(ValueError, match="concrete"):
+            import jax
+
+            jax.jit(lambda v: svc.submit(pipe(v).gaussian(
+                1.0, op_shape=3)))(x)
+    finally:
+        svc.close()
+
+
+def test_service_tiled_request_under_shared_budget():
+    x = _rng().normal(size=(48, 48)).astype(np.float32)
+    P = pipe(x).gaussian(1.0, op_shape=3)
+    svc = _svc(memory_budget=1 << 30, max_wait_ms=1.0)
+    try:
+        t = svc.submit(P, tiles=2)
+        assert np.array_equal(np.asarray(P.run()), np.asarray(t.result(60)))
+        assert svc.budget.peak > 0 and svc.budget.in_use == 0
+    finally:
+        svc.close()
+
+
+def test_warmup_pretraces_and_marks_admission_warm():
+    x = np.zeros((16, 16), np.float32)
+    P = pipe(x).gaussian(1.0, op_shape=3).gradient()
+    svc = _svc(max_batch=4)
+    try:
+        assert svc.warmup(P) == 2  # B=1 and B=max_batch
+        st = svc.stats()
+        assert st["warm_keys"] == 2
+        with pytest.raises(ValueError, match="unbatched"):
+            svc.warmup(Pipe(np.zeros((2, 16, 16), np.float32), True, P.ops))
+    finally:
+        svc.close()
+
+
+def test_cold_plan_reject_policy_fails_fast():
+    """With reject policy and one cold slot, a second distinct cold key
+    arriving while the first still compiles gets ColdPlanOverload."""
+    started = threading.Event()
+    release = threading.Event()
+
+    def gated(reqs, budget):
+        started.set()
+        assert release.wait(30.0)
+        return execute_batch(reqs, budget)
+
+    xs = _rng().normal(size=(2, 8, 8)).astype(np.float32)
+    svc = PipeService(ServeConfig(max_batch=1, max_wait_ms=0.0, workers=2,
+                                  max_cold_plans=1, cold_policy="reject"),
+                      execute=gated)
+    try:
+        t1 = svc.submit(pipe(xs[0]).gaussian(1.0, op_shape=3))
+        assert started.wait(30.0)
+        t2 = svc.submit(pipe(xs[1]).gaussian(1.5, op_shape=5))
+        with pytest.raises(ColdPlanOverload):
+            t2.result(30)
+        release.set()
+        assert t1.exception(60) is None
+    finally:
+        release.set()
+        svc.close()
+
+
+def test_serve_metrics_land_in_obs_snapshot():
+    from repro import obs
+
+    x = _rng().normal(size=(8, 8)).astype(np.float32)
+    svc = _svc(max_wait_ms=1.0)
+    try:
+        svc.submit(pipe(x).gaussian(1.0, op_shape=3)).result(60)
+    finally:
+        svc.close()
+    m = obs.snapshot()["metrics"]
+    assert m["serve/submitted"] >= 1 and m["serve/served"] >= 1
+    assert m["serve/latency_ms"]["count"] >= 1
+    assert m["serve/batch_size"]["count"] >= 1
+
+
+def test_loadgen_report_zero_drops_and_verified():
+    from repro.serve.loadgen import run_load
+
+    report = run_load(n=12, rate=5000.0, mix="mixed", distinct=2,
+                      tenants=2, seed=1, verify=4, shape=(16, 16),
+                      config=ServeConfig(max_batch=4, max_wait_ms=5.0,
+                                         queue_depth=64))
+    assert report["served"] == 12 and report["shed"] == 0
+    assert report["failed"] == 0
+    assert report["verify_ok"] == report["verified"] == 4
+    assert report["latency_ms"]["p99"] >= report["latency_ms"]["p50"]
+    assert set(report["per_tenant"]) == {"tenant-0", "tenant-1"}
+
+
+def test_loadgen_churn_mix_exercises_cold_path():
+    from repro.serve.loadgen import run_load
+
+    report = run_load(n=6, rate=5000.0, mix="churn", tenants=1, seed=2,
+                      verify=2, shape=(12, 12),
+                      config=ServeConfig(max_batch=4, max_wait_ms=2.0,
+                                         queue_depth=64, max_cold_plans=2))
+    assert report["served"] == 6 and report["shed"] == 0
+    assert report["verify_ok"] == report["verified"] == 2
+
+
+# -- registered programs -----------------------------------------------------
+
+
+def test_register_program_bit_identical_and_key_cached():
+    xs = [_rng(i).normal(size=(16, 16)).astype(np.float32)
+          for i in range(8)]
+    g = lambda x: pipe(x).gaussian(1.0, op_shape=3).gradient()
+    svc = _svc(max_batch=8, max_wait_ms=50.0)
+    try:
+        svc.warmup(g(xs[0]))
+        prog = svc.register(g(xs[0]))
+        tickets = [prog.submit(x) for x in xs]
+        for x, t in zip(xs, tickets):
+            assert np.array_equal(np.asarray(g(x).run()),
+                                  np.asarray(t.result(60)))
+        # one shape seen -> one cached plan key
+        assert len(prog._keys) == 1
+        # a second shape recomputes and serves correctly
+        y = _rng(99).normal(size=(20, 20)).astype(np.float32)
+        assert np.array_equal(np.asarray(g(y).run()),
+                              np.asarray(prog.submit(y).result(60)))
+        assert len(prog._keys) == 2
+    finally:
+        svc.close()
+
+
+def test_register_and_graph_submission_share_one_window():
+    """The plan key decides batchability, not the submission path: a
+    registered submit and a graph-carrying submit of the same program
+    land in the same coalescing window."""
+    sizes = []
+
+    def gated(reqs, budget):
+        sizes.append(len(reqs))
+        return [np.asarray(r.pipe.x) for r in reqs]
+
+    x = _rng(0).normal(size=(8, 8)).astype(np.float32)
+    g = lambda a: pipe(a).gaussian(1.0, op_shape=3).gradient()
+    svc = PipeService(ServeConfig(max_batch=2, max_wait_ms=200.0,
+                                  workers=1), execute=gated)
+    try:
+        prog = svc.register(g(x))
+        t1 = prog.submit(x)
+        t2 = svc.submit(g(x))
+        t1.result(60), t2.result(60)
+        assert sizes == [2]
+    finally:
+        svc.close()
+
+
+def test_register_validates_template():
+    x = _rng(0).normal(size=(4, 4, 2)).astype(np.float32)
+    svc = _svc()
+    try:
+        with pytest.raises(ValueError, match="unbatched template"):
+            svc.register(pipe.batched(x).gaussian(1.0, op_shape=3))
+        with pytest.raises(ValueError, match="out_dtype"):
+            svc.register(pipe(x[..., 0]).gaussian(1.0, op_shape=3).moments(),
+                         out_dtype="float16")
+    finally:
+        svc.close()
+
+
+def test_program_submit_rejects_tracer_and_closed_service():
+    import jax
+
+    x = _rng(0).normal(size=(8, 8)).astype(np.float32)
+    g = pipe(x).gaussian(1.0, op_shape=3).gradient()
+    svc = _svc()
+    prog = svc.register(g)
+    try:
+        with pytest.raises(ValueError, match="concrete inputs"):
+            jax.jit(lambda t: prog.submit(t))(x)
+    finally:
+        svc.close()
+    with pytest.raises(ServiceClosed):
+        prog.submit(x)
+    with pytest.raises(ServiceClosed):
+        svc.register(g)
+
+
+def test_program_submit_accepts_array_likes():
+    svc = _svc(max_batch=1)
+    try:
+        prog = svc.register(
+            pipe(np.zeros((2, 2), np.float32)).gaussian(1.0, op_shape=3))
+        out = prog.submit([[1.0, 2.0], [3.0, 4.0]]).result(60)
+        assert np.asarray(out).shape == (2, 2)
+    finally:
+        svc.close()
+
+
+def test_loadgen_main_smoke_exits_zero(capsys):
+    from repro.serve import loadgen
+
+    rc = loadgen.main(["-n", "8", "--rate", "5000", "--verify", "2"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    report = json.loads(out)
+    assert report["served"] == 8 and report["shed"] == 0
+
+
+def test_dispatch_ahead_extends_capacity_and_validates():
+    with pytest.raises(ValueError):
+        PipeService(ServeConfig(dispatch_ahead=-1))
+    started = threading.Event()
+    release = threading.Event()
+    blocking = threading.Event()
+
+    def gated(reqs, budget):
+        if blocking.is_set():
+            started.set()
+            assert release.wait(30.0)
+        return execute_batch(reqs, budget)
+
+    x = _rng().normal(size=(8, 8)).astype(np.float32)
+    g = lambda: pipe(x).gaussian(1.0, op_shape=3)
+    # one ahead slot: dispatch slots (1+1) + staging 3
+    # ((2*workers + dispatch_ahead) * max_batch) + queue 2 = 7
+    svc = PipeService(ServeConfig(max_batch=1, max_wait_ms=0.0, workers=1,
+                                  dispatch_ahead=1, queue_depth=2),
+                      execute=gated)
+    try:
+        # warm through the service: cold admission would otherwise
+        # serialize same-key batches and idle the ahead slot
+        svc.warmup(g(), (1,))
+        blocking.set()
+        tickets = [svc.submit(g()) for _ in range(7)]
+        assert started.wait(30.0)
+        with pytest.raises(ShedError):
+            svc.submit(g()).result(30)
+        release.set()
+        for t in tickets:
+            assert t.exception(60) is None
+    finally:
+        release.set()
+        svc.close()

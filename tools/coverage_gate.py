@@ -38,6 +38,7 @@ DEFAULT_FLOORS = {
     "repro/stats/": 89.0,
     "repro/runtime/": 85.0,
     "repro/obs/": 85.0,
+    "repro/serve/": 85.0,
 }
 
 
