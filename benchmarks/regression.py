@@ -52,6 +52,8 @@ GATED_PREFIXES = (
     "bank/fused",          # fused operator bank vs K sequential calls
     "stats/var-streaming",  # streaming variance vs per-item two-pass loop
     "pipe/fused-chain",    # fused pipeline vs eager 3-call chain
+    "pipe/same-2pass",     # 'same' split (interior+slabs) vs eager chain
+    "pipe/strided-compose",  # composed stride-4 pyramid vs 2-pass eager
     "tiled/stream-var",    # out-of-core stream vs naive per-tile eager loop
     "tiled/assemble",      # tiled array assembly vs the in-memory run
     "tiled/ckpt-overhead",  # journaled stream vs the unjournaled stream
@@ -69,6 +71,18 @@ GATED_PREFIXES = (
 #: anything below 1.0x is a regression even if a baseline said otherwise.
 GATED_FLOORS = {
     "tiled/assemble": 1.0,
+    # the §11 rule-1b split's very claim is that the composed interior
+    # beats re-traversing the volume per stage: the 'same' pipeline was
+    # a 1.0x parity row before the split landed and measures ~1.7x
+    # after, so a full-shape run below 1.15x means the split stopped
+    # engaging (or its slab overhead ate the win) even if a baseline
+    # drifted down with it.  Quick rows are drift-gated only: at the
+    # --quick shape the boundary:interior ratio is ~2x larger and the
+    # margin genuinely thinner.
+    "pipe/same-2pass/64x96x96": 1.15,
+    # rule 1a: the composed stride-4 pyramid must at least match the
+    # 2-pass eager downsampling chain it replaces (measures ~1.5x).
+    "pipe/strided-compose/64x96x96": 1.0,
     # the crash-only journal (DESIGN.md §13) promises ≤5% overhead vs
     # the unjournaled stream: appends/fsyncs/snapshot commits run on a
     # background writer that overlaps the stream.  The floor is pinned

@@ -226,7 +226,10 @@ def sharded_pipe_fn(
             f"{batch_axis_name!r}; build the graph with pipe.batched(...) "
             f"iff a batch mesh axis is given")
     opts = ExecOptions.make(method, pad_value, batched)
-    program = build_program(graph, opts)
+    # split_same=False: shard routing dispatches stage-by-stage over
+    # slab halos; the interior/boundary SplitStep is an on-device
+    # single-block rewrite and would defeat the per-stage halo exchange
+    program = build_program(graph, opts, split_same=False)
     rank = graph.rank
     sdim = 1 if batched else 0  # sharded spatial dim in the local block
     for s in program.steps:

@@ -235,15 +235,19 @@ def execute_separable_bank(x, grid: QuasiGrid, factors, pad_value,
     lane carries its own factor).  Exact for stride-1 'same' grids under
     zero / edge / reflect padding (``separable_eligible`` refuses nonzero
     constants — they don't commute with per-dim passes), and exact for
-    stride-1 'valid' grids unconditionally (no fill is ever read): each
-    1-D pass shrinks only its own dim, so the intermediate shapes walk
-    from ``in_shape`` down to ``out_shape``.
+    'valid' grids unconditionally, strides included (no fill is ever
+    read): pass ``i`` decimates only dim ``i`` by the grid's own stride
+    there, so ``Σ_a Π_d w_d[a_d] · x[s·g + a]`` factors into the per-dim
+    passes and the intermediate shapes walk from ``in_shape`` down to
+    ``out_shape``.
     """
     rank = grid.rank
 
     def grid1(i, cur_shape):
         op1 = tuple(grid.op_shape[j] if j == i else 1 for j in range(rank))
-        return make_quasi_grid(cur_shape, op1, 1, grid.padding, grid.dilation)
+        s1 = tuple(grid.stride[j] if j == i else 1 for j in range(rank))
+        return make_quasi_grid(cur_shape, op1, s1, grid.padding,
+                               grid.dilation)
 
     g = grid1(0, grid.in_shape)
     out = execute_stencil_bank(x, g, factors[0], pad_value, method, batched)

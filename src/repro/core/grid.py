@@ -32,6 +32,7 @@ __all__ = [
     "make_quasi_grid",
     "stage_footprint",
     "compose_footprints",
+    "chain_same_margins",
     "tile_read_region",
 ]
 
@@ -232,6 +233,28 @@ def compose_footprints(grids: Sequence["QuasiGrid"]
             for d, (a, b, c) in enumerate(abg)
         ]
     return tuple(abg)
+
+
+def chain_same_margins(grids: Sequence["QuasiGrid"]
+                       ) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """Accumulated 'same' pad margins ``(B, C)`` of a stride-1 chain.
+
+    ``B_d = Σ pad_lo``/``C_d = Σ pad_hi`` bound the output positions whose
+    transitive reads can touch fill: chain output ``g`` bottoms out on
+    input ``[g − B_d, g + C_d]``, so ``[B_d, n_d − C_d)`` per dim is the
+    *interior* where the chain equals its composed-'valid' rewrite (offset
+    ``B``) and ``B_d + C_d + 1`` is the composite operator extent — the
+    planner's interior/boundary split (DESIGN.md §11) is built on exactly
+    this identity.
+    """
+    rank = grids[0].rank
+    lo = [0] * rank
+    hi = [0] * rank
+    for g in grids:
+        for d in range(rank):
+            lo[d] += g.pad_lo[d]
+            hi[d] += g.pad_hi[d]
+    return tuple(lo), tuple(hi)
 
 
 def tile_read_region(

@@ -32,6 +32,9 @@ fixed constant.
 from __future__ import annotations
 
 import functools
+import os
+import threading
+import time
 from typing import Optional, Tuple
 
 import jax
@@ -43,27 +46,190 @@ from jax.experimental import pallas as pl
 #: budget: the pipeline keeps two steps in flight plus the weight block)
 DEFAULT_VMEM_BUDGET = 2 * 1024 * 1024
 
-#: min sublane count per dtype itemsize (TPU tiling: (sublane, 128) tiles)
-_SUBLANES = {4: 8, 2: 16, 1: 32}
+#: min sublane count per dtype itemsize (TPU tiling: (sublane, 128) tiles =
+#: 32 bytes of sublanes per lane, so sublanes = 32 // itemsize; itemsize 8
+#: — f64 under x64, int64 indices — is listed explicitly rather than
+#: falling through a silent default)
+_SUBLANES = {8: 4, 4: 8, 2: 16, 1: 32}
 
 
 def pick_tile_rows(numel: int, c_in: int, c_out: int, dtype,
                    vmem_budget: Optional[int] = None) -> int:
-    """Choose ``tile_rows`` from a VMEM budget (sublane-aligned).
+    """Choose ``tile_rows`` from a VMEM budget (sublane-aligned heuristic).
 
     Per output row the kernel holds ~``4·(numel + c_out)`` bytes of f32
     working set (the assembled melt tile / accumulator plus the output tile)
-    and reads ``itemsize·c_in`` bytes of input slab.  ``tile_rows`` is the
-    largest sublane-aligned row count whose working set fits ``vmem_budget``,
-    clamped to [sublane, 1024] so tiny operators never explode the grid and
-    huge banks never starve it.
+    and reads ``itemsize·c_in`` bytes of input slab; on top of that every
+    grid step stages the ``4·numel·c_out``-byte f32 weight block, which is
+    independent of ``tile_rows`` and comes off the budget before the rows
+    divide it up (a big bank otherwise overshoots VMEM by the whole block).
+    ``tile_rows`` is the largest sublane-aligned row count whose working
+    set fits ``vmem_budget``, clamped to [sublane, 1024] so tiny operators
+    never explode the grid and huge banks never starve it.
     """
     budget = DEFAULT_VMEM_BUDGET if vmem_budget is None else int(vmem_budget)
     item = jnp.dtype(dtype).itemsize
     sub = _SUBLANES.get(item, 8)
-    per_row = 4 * (int(numel) + max(int(c_out), 1)) + item * max(int(c_in), 1)
-    t = (budget // per_row // sub) * sub
+    numel, c_in, c_out = int(numel), max(int(c_in), 1), max(int(c_out), 1)
+    per_row = 4 * (numel + c_out) + item * c_in
+    t = ((budget - 4 * numel * c_out) // per_row // sub) * sub
     return int(max(sub, min(t, 1024)))
+
+
+# -- measured tile autotuning (DESIGN.md §16) --------------------------------
+#
+# ``tile_rows=None`` used to mean "the pick_tile_rows heuristic"; it now
+# means *measured*: time a few sublane-aligned candidates around the
+# heuristic on a synthetic canonical problem, intern the winner as a
+# ``TunePlan`` in the shared plan LRU (one measurement per key, hits
+# thereafter), and fall back to the heuristic when the opt-out env pins it.
+# Measurement timings are hardware facts, not plan state, so they also
+# live in a process-lifetime memo — a ``clear_plan_cache()`` re-interns
+# the TunePlan from the memo instead of re-timing the kernels.
+#
+# ``fused_moment_rows`` deliberately keeps the plain heuristic: its tile
+# size shapes the Chan merge tree's numerics and must mirror
+# ``moment_tile_counts`` exactly, so a measured (cache-dependent) size
+# would change results and break the static count mirror.
+
+#: set to "0"/"false"/"off" to pin the pick_tile_rows heuristic
+_AUTOTUNE_ENV = "REPRO_TILE_AUTOTUNE"
+
+#: (backend, family, numel, c_in, c_out, dtype) → (candidates, timings_us);
+#: survives plan-cache clears so a key is never re-measured in-process
+_TUNE_MEMO: dict = {}
+
+
+def autotune_enabled() -> bool:
+    return (os.environ.get(_AUTOTUNE_ENV, "1").strip().lower()
+            not in ("0", "false", "off"))
+
+
+def _tile_candidates(numel: int, c_in: int, c_out: int, dtype
+                     ) -> Tuple[int, ...]:
+    """Sublane-aligned candidate set bracketing the heuristic (¼×–2×)."""
+    base = pick_tile_rows(numel, c_in, c_out, dtype)
+    sub = _SUBLANES.get(jnp.dtype(dtype).itemsize, 8)
+    cands = []
+    for t in (base // 4, base // 2, base, 2 * base):
+        t = max(sub, min((t // sub) * sub, 1024))
+        if t not in cands:
+            cands.append(t)
+    return tuple(cands)
+
+
+def _measure_candidates(family: str, numel: int, c_in: int, c_out: int,
+                        dtype, candidates: Tuple[int, ...]) -> list:
+    """Wall-time each candidate on a synthetic canonical problem (µs).
+
+    The synthetic block is a few grid steps at the largest candidate —
+    big enough that the per-step slab/tile shape (what ``tile_rows``
+    controls) dominates, small enough that first-use tuning stays
+    a few kernel compiles.  One warm-up call per candidate absorbs the
+    compile; the min of the timed reps is the score.
+    """
+    interpret = jax.default_backend() != "tpu"
+    halo = numel - 1
+    rows = 2 * max(candidates)
+    dt = jnp.dtype(dtype)
+    w_col = jnp.full((numel,), 1.0 / numel, jnp.float32)
+    w_mat = jnp.full((numel, c_out), 1.0 / numel, jnp.float32)
+    offs = tuple(range(numel))
+
+    def synth(lanes: int):
+        n = (rows + halo) * lanes
+        return (jnp.arange(n, dtype=jnp.float32) % 7.0).astype(dt).reshape(
+            rows + halo, lanes)
+
+    if family == "stencil":
+        x = synth(c_in)
+
+        def call(a, tile_rows):
+            return fused_stencil_rows(a, w_col, offs, rows, 0,
+                                      tile_rows=tile_rows,
+                                      interpret=interpret)
+    elif family == "bank":
+        x = synth(1)
+
+        def call(a, tile_rows):
+            return fused_stencil_bank_rows(a, w_mat, offs, rows, 0,
+                                           tile_rows=tile_rows,
+                                           interpret=interpret)
+    elif family == "depthwise":
+        x = synth(c_out)
+
+        def call(a, tile_rows):
+            return fused_stencil_rows_depthwise(a, w_mat, offs, rows, 0,
+                                                tile_rows=tile_rows,
+                                                interpret=interpret)
+    else:  # pragma: no cover — families are fixed by the entry points
+        raise ValueError(f"unknown tune family {family!r}")
+
+    timings = []
+    for cand in candidates:
+        f = jax.jit(functools.partial(call, tile_rows=cand))
+        f(x).block_until_ready()  # compile + warm-up
+        best = float("inf")
+        for _ in range(2):
+            t0 = time.perf_counter()
+            f(x).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        timings.append(best * 1e6)
+    return timings
+
+
+def tuned_tile_rows(family: str, numel: int, c_in: int, c_out: int,
+                    dtype) -> int:
+    """The measured ``tile_rows`` for one canonical kernel problem.
+
+    Keyed ``(backend, family, numel, c_in, c_out, dtype)`` and interned as
+    a :class:`~repro.core.plan.TunePlan` in the shared plan LRU: the first
+    request times the :func:`_tile_candidates` set and memoizes the
+    winner; every later request (and every re-intern after a cache clear)
+    is a lookup.  With ``REPRO_TILE_AUTOTUNE=0`` (or an explicit
+    ``tile_rows=`` at the call site) the :func:`pick_tile_rows` heuristic
+    is pinned and nothing is measured.  Safe at trace time: the entry
+    points call this while an enclosing jit is tracing, so measurement
+    runs on a worker thread — JAX trace state is thread-local, meaning
+    the synthetic candidate runs compile and execute concretely there
+    instead of staging into (or crashing under) the caller's trace.
+    """
+    numel, c_in, c_out = int(numel), max(int(c_in), 1), max(int(c_out), 1)
+    if not autotune_enabled():
+        return pick_tile_rows(numel, c_in, c_out, dtype)
+    from repro.core.plan import TunePlan, get_tune_plan  # deferred: cycle
+
+    dtname = jnp.dtype(dtype).name
+    key = (jax.default_backend(), family, numel, c_in, c_out, dtname)
+
+    def build():
+        memo = _TUNE_MEMO.get(key)
+        if memo is None:
+            cands = _tile_candidates(numel, c_in, c_out, dtype)
+            if len(cands) == 1:
+                timings = [0.0]
+            else:
+                box: dict = {}
+
+                def worker():
+                    try:
+                        box["t"] = _measure_candidates(family, numel, c_in,
+                                                       c_out, dtype, cands)
+                    except BaseException as e:  # re-raised on the caller
+                        box["e"] = e
+
+                th = threading.Thread(target=worker, name="repro-tile-tune")
+                th.start()
+                th.join()
+                if "e" in box:
+                    raise box["e"]
+                timings = box["t"]
+            memo = _TUNE_MEMO[key] = (cands, tuple(timings))
+        cands, timings = memo
+        winner = cands[int(np.argmin(timings))]
+        return TunePlan(("tune",) + key, winner, cands, timings)
+
+    return get_tune_plan(key, build).tile_rows
 
 
 def _stencil_kernel(x_ref, w_ref, o_ref, *, offsets: Tuple[int, ...],
@@ -89,7 +255,8 @@ def fused_stencil_rows(x_halo: jax.Array, weights: jax.Array,
     """
     R, C = out_rows, x_halo.shape[1]
     if tile_rows is None:
-        tile_rows = pick_tile_rows(len(row_offsets), C, C, x_halo.dtype)
+        tile_rows = tuned_tile_rows("stencil", len(row_offsets), C, C,
+                                    x_halo.dtype)
     tiles = -(-R // tile_rows)
     pad_r = tiles * tile_rows + (x_halo.shape[0] - R) - x_halo.shape[0]
     if pad_r > 0:
@@ -139,7 +306,8 @@ def fused_stencil_rows_batched(x_halo: jax.Array, weights: jax.Array,
     B, _, C = x_halo.shape
     R = out_rows
     if tile_rows is None:
-        tile_rows = pick_tile_rows(len(row_offsets), C, C, x_halo.dtype)
+        tile_rows = tuned_tile_rows("stencil", len(row_offsets), C, C,
+                                    x_halo.dtype)
     tiles = -(-R // tile_rows)
     pad_r = tiles * tile_rows + (x_halo.shape[1] - R) - x_halo.shape[1]
     if pad_r > 0:
@@ -225,7 +393,8 @@ def fused_stencil_bank_rows(x_halo: jax.Array, weight_matrix: jax.Array,
     R = out_rows
     numel, K = weight_matrix.shape
     if tile_rows is None:
-        tile_rows = pick_tile_rows(numel, x_halo.shape[1], K, x_halo.dtype)
+        tile_rows = tuned_tile_rows("bank", numel, x_halo.shape[1], K,
+                                    x_halo.dtype)
     if mxu is None:
         mxu = not interpret
     tiles = -(-R // tile_rows)
@@ -274,7 +443,8 @@ def fused_stencil_bank_rows_batched(x_halo: jax.Array,
     R = out_rows
     numel, K = weight_matrix.shape
     if tile_rows is None:
-        tile_rows = pick_tile_rows(numel, x_halo.shape[2], K, x_halo.dtype)
+        tile_rows = tuned_tile_rows("bank", numel, x_halo.shape[2], K,
+                                    x_halo.dtype)
     if mxu is None:
         mxu = not interpret
     tiles = -(-R // tile_rows)
@@ -334,7 +504,7 @@ def fused_stencil_rows_depthwise(x_halo: jax.Array, weights: jax.Array,
     R = out_rows
     numel, K = weights.shape
     if tile_rows is None:
-        tile_rows = pick_tile_rows(numel, K, K, x_halo.dtype)
+        tile_rows = tuned_tile_rows("depthwise", numel, K, K, x_halo.dtype)
     tiles = -(-R // tile_rows)
     pad_r = tiles * tile_rows - R
     if pad_r > 0:
@@ -468,7 +638,7 @@ def fused_stencil_rows_depthwise_batched(x_halo: jax.Array,
     R = out_rows
     numel, K = weights.shape
     if tile_rows is None:
-        tile_rows = pick_tile_rows(numel, K, K, x_halo.dtype)
+        tile_rows = tuned_tile_rows("depthwise", numel, K, K, x_halo.dtype)
     tiles = -(-R // tile_rows)
     pad_r = tiles * tile_rows - R
     if pad_r > 0:

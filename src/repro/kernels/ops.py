@@ -108,7 +108,10 @@ def fused_stencil(x, grid: QuasiGrid, weights, pad_value=0.0,
 
     ``batched=True``: leading dim of ``x`` is a stack of independent tensors;
     the Pallas grid gains a batch axis (one kernel launch for the stack).
-    ``tile_rows=None`` picks a VMEM-budget tile (``pick_tile_rows``).
+    ``tile_rows=None`` means *measured*: the first use of a kernel-shape
+    key times a few sublane-aligned candidates and interns the winner
+    (``tuned_tile_rows``, DESIGN.md §16); ``REPRO_TILE_AUTOTUNE=0`` pins
+    the ``pick_tile_rows`` VMEM-budget heuristic instead.
     """
     _check_fused_grid(grid)
     interpret = _interpret_default() if interpret is None else interpret
@@ -140,7 +143,8 @@ def fused_stencil_bank(x, grid: QuasiGrid, weight_matrix, pad_value=0.0,
     on TPU (``mxu=True``), the same contraction unrolled as outer-product
     accumulates under interpret mode (``mxu=None`` picks per backend) — so
     the halo slab load is amortized across all K operators and ``M`` never
-    exists in HBM.
+    exists in HBM.  ``tile_rows=None`` is measured per kernel-shape key
+    (``tuned_tile_rows``, DESIGN.md §16).
     """
     _check_fused_grid(grid)
     interpret = _interpret_default() if interpret is None else interpret
@@ -196,6 +200,7 @@ def fused_stencil_depthwise(xc, grid: QuasiGrid, weights, pad_value=0.0,
                             interpret=None, batched=False, tile_rows=None):
     """Per-lane stencil: lane k of ``xc`` (..., *spatial, K) is filtered by
     column k of ``weights`` (numel(m), K) — the separable 1-D pass primitive.
+    ``tile_rows=None`` is measured per kernel-shape key (DESIGN.md §16).
     """
     _check_fused_grid(grid)
     interpret = _interpret_default() if interpret is None else interpret

@@ -43,6 +43,7 @@ from repro.pipe.fuse import (
     PipelineProgram,
     PointwiseStep,
     ReduceStep,
+    SplitStep,
     ZscoreStep,
     build_program,
 )
@@ -149,6 +150,42 @@ def _apply_zscore(h, step: ZscoreStep, opts: ExecOptions, batched: bool):
     return ((xf - mean) / jnp.sqrt(var + step.eps)).astype(h.dtype)
 
 
+def _apply_split(h, step: SplitStep, opts: ExecOptions, batched: bool):
+    """Interior/boundary execution of a fused 'same' chain (DESIGN.md §11).
+
+    The interior — every output whose transitive reads stay inside the
+    volume — is the composed-'valid' group over the FULL input, scattered
+    at offset ``interior_lo``.  Each boundary slab replays the original
+    per-stage program through the tile executor (pad at true volume edges
+    + 'valid'), bit-identical to the unfused run.  Pure ``.at[].set`` on
+    disjoint boxes: differentiable, and every branch lives inside the one
+    jitted pipeline computation.
+    """
+    import dataclasses as _dc
+
+    from repro.pipe.tiled import _run_tile
+
+    interior = _apply_linear(h, step.interior, opts, batched)
+    lead = (slice(None),) if batched else ()
+    out_shape = ((h.shape[:1] if batched else ()) + step.out_shape
+                 + ((step.interior.weights.shape[1],)
+                    if step.kind == "bank" else ()))
+    canvas = jnp.zeros(out_shape, interior.dtype)
+    isl = tuple(slice(b, b + e) for b, e in
+                zip(step.interior_lo, step.interior.grid.out_shape))
+    canvas = canvas.at[lead + isl].set(interior)
+    # the slab executor applies the final out_dtype cast itself; strip it
+    # so the cast happens once, on the assembled result (_run_program)
+    slab_opts = (_dc.replace(opts, out_dtype=None)
+                 if opts.out_dtype is not None else opts)
+    for spec in step.specs:
+        rsl = tuple(slice(a, b) for a, b in zip(spec.read_lo, spec.read_hi))
+        res = _run_tile(h[lead + rsl], step.inner, spec, slab_opts, batched)
+        osl = tuple(slice(a, b) for a, b in zip(spec.out_lo, spec.out_hi))
+        canvas = canvas.at[lead + osl].set(res.astype(canvas.dtype))
+    return canvas
+
+
 def _reduce_axes(ndim: int, batched: bool, channels: int) -> Tuple[int, ...]:
     lo = 1 if batched else 0
     hi = ndim - (1 if channels else 0)
@@ -194,6 +231,8 @@ def _run_program(x, program: PipelineProgram, opts: ExecOptions,
     for step in program.steps:
         if isinstance(step, LinearStep):
             h = _apply_linear(h, step, opts, batched)
+        elif isinstance(step, SplitStep):
+            h = _apply_split(h, step, opts, batched)
         elif isinstance(step, PointwiseStep):
             h = step.fn(h)
         elif isinstance(step, ZscoreStep):

@@ -9,6 +9,14 @@ content digest of its weights, so a whole pipeline hashes into one plan
 key and repeated ``.run()`` calls intern a single compiled executor
 (DESIGN.md §11).
 
+The planner composes adjacent linear stages aggressively: 'valid'
+chains merge into one operator-bank pass under *any* strides (composite
+stride = product of stage strides), and stride-1 'same' chains plan as
+a composed interior pass plus boundary slabs that replay the original
+stages — so multi-stage smoothing/derivative graphs usually execute as
+ONE data traversal.  Dilation, K>1 predecessors, and mixed padding keep
+their own passes.
+
 Graph validity is enforced at build time with actionable errors:
 
 - a ``bank``-kind op appends a trailing channel axis, so it must be the

@@ -1191,7 +1191,10 @@ def plan_tiled(
     opts = ExecOptions.make(method=method, pad_value=pad_value,
                             batched=P.batched, out_dtype=out_dtype)
     _check_out_dtype(P, opts)
-    program = build_program(P, opts)
+    # split_same=False: the tile executor already pads at true volume
+    # edges per stage — nesting a plan-time interior/boundary SplitStep
+    # inside per-tile patches would re-split every patch for nothing
+    program = build_program(P, opts, split_same=False)
     _validate_tiled(P, program, opts)
     geoms = _linear_geoms(program)
     rank = P.rank

@@ -45,7 +45,8 @@ def dirs(tmp_path):
 def test_within_tolerance_passes(dirs):
     base, fresh = dirs
     _write(os.path.join(fresh, "BENCH_pipe.json"),
-           {"rows": [_row("pipe/fused-chain/32x48x48", 110.0, 3.5)]})
+           {"rows": [_row("pipe/fused-chain/32x48x48", 110.0, 3.5),
+                     _row("pipe/same-2pass/32x48x48", 190.0, 1.3)]})
     failures, report = compare(base, fresh, 0.25)
     assert not failures
     assert any(line.startswith("ok ") for line in report)
@@ -54,7 +55,8 @@ def test_within_tolerance_passes(dirs):
 def test_speedup_regression_fails(dirs):
     base, fresh = dirs
     _write(os.path.join(fresh, "BENCH_pipe.json"),
-           {"rows": [_row("pipe/fused-chain/32x48x48", 300.0, 1.2)]})
+           {"rows": [_row("pipe/fused-chain/32x48x48", 300.0, 1.2),
+                     _row("pipe/same-2pass/32x48x48", 190.0, 1.3)]})
     failures, _ = compare(base, fresh, 0.25)
     assert any("regressed" in f for f in failures)
 
@@ -104,7 +106,8 @@ def test_row_missing_us_per_call_does_not_crash(dirs):
     base, fresh = dirs
     _write(os.path.join(fresh, "BENCH_pipe.json"),
            {"rows": [{"name": "pipe/fused-chain/32x48x48",
-                      "derived": "speedup=4.00x"}]})
+                      "derived": "speedup=4.00x"},
+                     _row("pipe/same-2pass/32x48x48", 190.0, 1.3)]})
     failures, report = compare(base, fresh, 0.25)
     assert not failures  # speedup held; only the us context is unavailable
     assert any("us n/a" in line for line in report)
@@ -136,6 +139,7 @@ def test_malformed_fresh_row_warns_but_compares_rest(dirs):
     base, fresh = dirs
     _write(os.path.join(fresh, "BENCH_pipe.json"),
            {"rows": [_row("pipe/fused-chain/32x48x48", 100.0, 4.0),
+                     _row("pipe/same-2pass/32x48x48", 190.0, 1.3),
                      {"noname": 1}]})
     failures, report = compare(base, fresh, 0.25)
     assert not failures  # the intact gated row still compares clean

@@ -7,10 +7,14 @@ Contracts pinned here:
   all three execution paths.
 - **No-extra-melt** — the materialize-path ``melt_call_count`` delta
   equals the planner's declared pass accounting; lax/fused never melt.
-  The acceptance pipeline ``gaussian → gradient → moments`` runs in ≤2
-  melt passes vs 3 eager.
+  The acceptance pipeline ``gaussian → gradient → moments`` runs in ONE
+  logical pass (split: composed interior + boundary slabs) vs 3 eager.
 - **Weight composition** — adjacent 'valid' linear stages merge into one
-  operator-bank pass *exactly*; 'same'/strided stages decline fusion.
+  operator-bank pass *exactly*, including strided chains (composite
+  stride = product); adjacent stride-1 'same' stages split into a
+  composed interior pass plus boundary slabs that replay the original
+  program (bit-identical at the boundary).  Dilation, K>1 predecessors,
+  and mixed padding still decline.
 - **Plan cache** — StencilPlan / BankPlan / StatsPlan / PipePlan keys
   intern side by side in the one LRU cache, hit on repeat, and evict
   together under a small capacity.
@@ -176,17 +180,32 @@ def test_composition_plan_shape():
     assert steps[0].factors is not None  # gaussian ⊛ central-diff is rank-1
 
 
-def test_composition_declined_for_same_padding():
-    """'same' boundary semantics do not compose — stays two passes."""
+def test_composition_same_padding_splits_to_one_pass():
+    """'same' chains split: composed interior + boundary slabs = 1 pass."""
     x = jnp.zeros((16, 16), jnp.float32)
     prog = pipe(x).gaussian(1.0, op_shape=3).gradient().plan()
-    assert prog.passes == 2
+    assert prog.passes == 1
+    assert "split[5x5" in prog.describe()
 
 
-def test_composition_declined_for_stride():
+def test_composition_strided_valid_composes():
+    """Strided 'valid' chains compose: tap a1 + s1*a2, stride s1*s2."""
     x = jnp.zeros((16, 16), jnp.float32)
     w = np.ones(9, np.float32) / 9.0
     prog = (pipe(x).stencil(3, w, stride=2, padding="valid")
+            .stencil(3, w, padding="valid").plan())
+    assert prog.passes == 1
+    step = prog.steps[0]
+    assert step.grid.op_shape == (7, 7)   # 3 + 2*(3-1)
+    assert step.grid.stride == (2, 2)
+    # composed output count equals the 2-pass chain's exactly
+    assert step.grid.out_shape == (5, 5)
+
+
+def test_composition_still_declined_for_dilation():
+    x = jnp.zeros((20, 20), jnp.float32)
+    w = np.ones(9, np.float32) / 9.0
+    prog = (pipe(x).stencil(3, w, dilation=2, padding="valid")
             .stencil(3, w, padding="valid").plan())
     assert prog.passes == 2
 
@@ -212,13 +231,16 @@ def test_compose_weights_algebra():
 # -- no-extra-melt accounting ------------------------------------------------
 
 
-def test_acceptance_pipeline_two_melt_passes(rng):
-    """gaussian → gradient → moments: ≤2 melt passes vs 3+ eager."""
+def test_acceptance_pipeline_one_logical_pass(rng):
+    """gaussian → gradient → moments: the 'same' chain splits into ONE
+    logical pass (composed separable interior + 6 boundary slabs) and the
+    materialize melt counter matches the plan's declared accounting."""
     x = _vol(rng, (10, 11, 9))
     P = pipe(x).gaussian(1.5, op_shape=5).gradient().moments(order=2)
     prog = P.plan(method="materialize", pad_value="edge")
-    assert prog.passes == 2
-    assert prog.melt_calls == 2
+    assert prog.passes == 1
+    # interior: separable 7³ bank = 3 1-D melts; 6 slabs × (1 + 1) stages
+    assert prog.melt_calls == 3 + 6 * 2
     clear_plan_cache()
     before = melt_call_count()
     jax.block_until_ready(
@@ -369,7 +391,8 @@ def test_mixed_plan_kinds_intern_side_by_side(fresh_cache, rng):
     P.run(method="lax", pad_value="edge")                       # PipePlan
     assert plan_cache_stats()["size"] == 4
     assert plan_cache_stats()["kinds"] == {
-        "stencil": 1, "bank": 1, "stats": 1, "pipe": 1, "tile": 0}
+        "stencil": 1, "bank": 1, "stats": 1, "pipe": 1, "tile": 0,
+        "tune": 0}
     plan_cache_reset()  # zero counters, keep the four warm plans
     for _ in range(3):
         P.run(method="lax", pad_value="edge")
@@ -547,15 +570,24 @@ print("sharded-pipe OK")
 
 def _expected_groups(stages):
     """Independent replay of the planner's greedy composition rule: how
-    many melt passes a chain of (op, stride, padding) stages must plan."""
+    many logical passes a chain of (op, stride, padding) stages must
+    plan.  'valid' chains compose under any strides; 'same' chains
+    compose (as an interior/boundary split) only when both neighbours
+    are unit-stride; mixed padding never composes."""
     groups = 0
-    can_extend = False
+    last = None  # (padding, stride) of the previous stage
     for op, stride, padding in stages:
-        mergeable = (padding == "valid" and stride == 1)
-        if can_extend and mergeable:
-            continue  # merged into the open group
+        if last is not None:
+            lp, ls = last
+            mergeable = (
+                (padding == "valid" and lp == "valid")
+                or (padding == "same" and lp == "same"
+                    and stride == 1 and ls == 1))
+            if mergeable:
+                last = (padding, stride)
+                continue
         groups += 1
-        can_extend = mergeable
+        last = (padding, stride)
     return groups
 
 

@@ -1,0 +1,107 @@
+"""Measured tile autotuning (DESIGN.md §16).
+
+The suite-wide conftest pins ``REPRO_TILE_AUTOTUNE=0`` (interpret-mode
+timings are meaningless and slow); the tests here opt back in per-test
+with monkeypatch to exercise the real measurement path once on tiny
+problems.  Contracts:
+
+- opt-out returns :func:`pick_tile_rows` exactly and interns nothing;
+- first use measures once and interns a ``TunePlan`` (kind ``"tune"``)
+  in the shared LRU; later uses are cache hits;
+- the process-lifetime ``_TUNE_MEMO`` survives ``clear_plan_cache`` so a
+  cleared key re-interns without re-timing;
+- the winner is drawn from the sublane-aligned candidate set;
+- ``tile_rows`` never changes numerics (measured vs pinned heuristic).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import clear_plan_cache, plan_cache_stats
+from repro.core.plan import TunePlan, get_tune_plan
+from repro.kernels import melt_stencil as ms
+from repro.kernels import ops
+
+
+@pytest.fixture
+def fresh(monkeypatch):
+    clear_plan_cache()
+    ms._TUNE_MEMO.clear()
+    yield monkeypatch
+    clear_plan_cache()
+    ms._TUNE_MEMO.clear()
+
+
+def test_opt_out_pins_heuristic(fresh):
+    fresh.setenv("REPRO_TILE_AUTOTUNE", "0")
+    assert not ms.autotune_enabled()
+    t = ms.tuned_tile_rows("stencil", 27, 1, 1, jnp.float32)
+    assert t == ms.pick_tile_rows(27, 1, 1, jnp.float32)
+    assert plan_cache_stats()["kinds"]["tune"] == 0
+
+
+def test_candidates_are_sublane_aligned_ints():
+    cands = ms._tile_candidates(9, 1, 1, jnp.float32)
+    sub = ms._SUBLANES[4]
+    assert all(isinstance(c, int) for c in cands)
+    assert all(c % sub == 0 and sub <= c <= 1024 for c in cands)
+    assert len(cands) == len(set(cands))
+    # ¼×–2× bracket around the heuristic, deduplicated after clamping
+    base = ms.pick_tile_rows(9, 1, 1, jnp.float32)
+    assert base in cands
+
+
+def test_sublanes_cover_itemsize_8():
+    # 32 bytes of sublanes per lane: f64 packs 4 rows, int8 packs 32
+    assert ms._SUBLANES == {8: 4, 4: 8, 2: 16, 1: 32}
+
+
+def test_autotune_measures_once_then_hits(fresh):
+    fresh.setenv("REPRO_TILE_AUTOTUNE", "1")
+    t = ms.tuned_tile_rows("stencil", 9, 1, 1, jnp.float32)
+    s = plan_cache_stats()
+    assert s["kinds"]["tune"] == 1
+    assert s["misses"] == 1 and s["hits"] == 0
+    cands = ms._tile_candidates(9, 1, 1, jnp.float32)
+    assert t in cands
+    assert ms.tuned_tile_rows("stencil", 9, 1, 1, jnp.float32) == t
+    s = plan_cache_stats()
+    assert s["kinds"]["tune"] == 1 and s["hits"] == 1
+
+    key = next(iter(ms._TUNE_MEMO))
+    plan = get_tune_plan(key, lambda: None)
+    assert isinstance(plan, TunePlan)
+    assert plan.tile_rows == t
+    assert tuple(plan.candidates) == cands
+    assert len(plan.timings_us) == len(cands)
+    assert t == cands[int(np.argmin(plan.timings_us))]
+
+
+def test_memo_survives_cache_clear(fresh):
+    fresh.setenv("REPRO_TILE_AUTOTUNE", "1")
+    t = ms.tuned_tile_rows("bank", 9, 1, 2, jnp.float32)
+    memo = dict(ms._TUNE_MEMO)
+    clear_plan_cache()
+    assert plan_cache_stats()["kinds"]["tune"] == 0
+    # re-intern is a memo lookup: same winner, same stored timings
+    assert ms.tuned_tile_rows("bank", 9, 1, 2, jnp.float32) == t
+    assert plan_cache_stats()["kinds"]["tune"] == 1
+    assert ms._TUNE_MEMO == memo
+
+
+def test_tuned_numerics_match_pinned_heuristic(fresh):
+    """tile_rows is a schedule knob, never a numerics knob: a fused run
+    under measured tuning equals the same run with the heuristic pinned."""
+    from repro.core.grid import make_quasi_grid
+
+    rng = np.random.RandomState(7)
+    x = jnp.asarray(rng.randn(40, 9).astype(np.float32))
+    w = jnp.asarray(rng.randn(9).astype(np.float32))
+    grid = make_quasi_grid((40, 9), (3, 3), (1, 1), "same", (1, 1))
+    fresh.setenv("REPRO_TILE_AUTOTUNE", "0")
+    ref = np.asarray(ops.fused_stencil(x, grid, w, pad_value=0.0))
+    fresh.setenv("REPRO_TILE_AUTOTUNE", "1")
+    clear_plan_cache()
+    out = np.asarray(ops.fused_stencil(x, grid, w, pad_value=0.0))
+    np.testing.assert_array_equal(out, ref)

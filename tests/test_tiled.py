@@ -2,10 +2,12 @@
 
 Contracts pinned here:
 
-- **Tiled ≡ in-memory ≡ eager oracle** — any tiling of any supported pipe
-  graph returns the in-memory result under every pad mode (array outputs
-  bit-identical on lax/materialize; merged reductions f32-tight), and the
-  in-memory run itself equals the eager chain of legacy calls.
+- **Tiled ≡ per-stage oracle ≈ in-memory** — any tiling of any supported
+  pipe graph streams the per-stage program: bit-identical to the eager
+  chain of legacy calls under every pad mode (merged reductions
+  f32-tight).  Vs the in-memory plan the agreement is bit-identical when
+  the plans coincide and allclose when the in-memory planner composed a
+  'same' chain into a split interior (fused sums reassociate).
 - **Property fuzz** — hypothesis-driven random graphs (op kinds × ranks ×
   pad modes × strides × terminal reductions) × random tilings hold the
   agreement above, plus exact melt-pass accounting on the materialize
@@ -32,6 +34,8 @@ from repro.core import (
     apply_stencil,
     apply_stencil_bank,
     clear_plan_cache,
+    gaussian_filter,
+    gradient,
     plan_cache_reset,
     melt_call_count,
     plan_cache_stats,
@@ -45,6 +49,7 @@ from repro.core.hilbert import hilbert_order
 from repro.core.partition import plan_tile_partition, validate_tile_partition
 from repro.core.plan import TilePlan
 from repro.pipe import pipe, plan_tiled
+from repro.pipe.fuse import SplitStep
 from repro.stats import moments
 
 METHODS = ("materialize", "lax", "fused")
@@ -74,7 +79,14 @@ def test_tiled_array_output_matches_in_memory(shape, tiles, pad, rng):
     ref = np.asarray(P.run(method="lax", pad_value=pad))
     out = P.run(method="lax", pad_value=pad, tiles=tiles)
     assert isinstance(out, np.ndarray)  # out-of-core: host-side assembly
-    np.testing.assert_array_equal(out, ref)  # bit-identical, all pad modes
+    # tiled streams the per-stage program: bit-identical to the eager
+    # chain under every pad mode; the in-memory plan composes 'same'
+    # chains into a split interior, so vs it the contract is allclose
+    eager = gradient(gaussian_filter(x, 3, 1.2, method="lax",
+                                     pad_value=pad),
+                     method="lax", pad_value=pad)
+    np.testing.assert_array_equal(out, np.asarray(eager))
+    np.testing.assert_allclose(out, ref, rtol=3e-5, atol=3e-6)
 
 
 @pytest.mark.parametrize("method", METHODS)
@@ -323,9 +335,18 @@ def test_fuzz_tiled_vs_inmemory_vs_oracle(dims, op, stride, padding,
     np.testing.assert_allclose(np.asarray(ref), np.asarray(oracle),
                                rtol=3e-5, atol=3e-5)
 
+    has_split = any(isinstance(s, SplitStep) for s in program.steps)
     if terminal == "none":
         out = P.run(method="lax", pad_value=pad, tiles=tiles)
-        np.testing.assert_array_equal(out, np.asarray(ref))
+        if has_split:
+            # the in-memory plan composed a 'same' chain's interior; the
+            # tiled stream stays per-stage — bit-identical to the eager
+            # oracle, allclose to the split plan
+            np.testing.assert_array_equal(out, np.asarray(oracle))
+            np.testing.assert_allclose(out, np.asarray(ref), rtol=3e-5,
+                                       atol=3e-5)
+        else:
+            np.testing.assert_array_equal(out, np.asarray(ref))
     elif terminal == "hist":
         Ph = P.hist(16, range=(-5.0, 5.0))
         rh = Ph.run(method="lax", pad_value=pad)
@@ -599,17 +620,22 @@ def test_sharded_tile_stream_rejects_batched_graph(rng):
 @pytest.mark.parametrize("method", ("lax", "materialize"))
 @pytest.mark.parametrize("pad", PADS)
 def test_memmap_out_bit_identical(method, pad, rng, tmp_path):
-    """out_path= assembles the exact bytes of the in-memory np.ndarray
-    result, across pad modes and execution paths."""
+    """out_path= assembles the exact bytes of the tiled np.ndarray
+    result, across pad modes and execution paths (and stays allclose to
+    the in-memory plan, whose 'same' chain composes into a split)."""
     x = _vol(rng, (10, 9, 8))
     P = pipe(x).gaussian(1.2, op_shape=3).gradient()
-    ref = np.asarray(P.run(method=method, pad_value=pad))
+    ref = np.asarray(P.run(method=method, pad_value=pad, tiles=(2, 2, 2)))
     tp = P.plan_tiled(tiles=(2, 2, 2), method=method, pad_value=pad)
     mm = tp.run(out_path=tmp_path / "out.npy")
     assert isinstance(mm, np.memmap)
     np.testing.assert_array_equal(np.asarray(mm), ref)
     del mm  # release the mapping before tmp_path cleanup (Windows-safe)
     np.testing.assert_array_equal(np.load(tmp_path / "out.npy"), ref)
+    np.testing.assert_allclose(ref,
+                               np.asarray(P.run(method=method,
+                                                pad_value=pad)),
+                               rtol=3e-5, atol=3e-6)
 
 
 def test_prefetch_false_equals_true(rng):
